@@ -1,0 +1,49 @@
+//! Thread-scaling sweep (Figs 3–4 miniature): speedup of each
+//! synchronization family as the thread count grows.
+//!
+//! ```bash
+//! cargo run --release --example scaling [vertices]
+//! ```
+
+use pagerank_nb::coordinator::host::HostInfo;
+use pagerank_nb::graph::synthetic;
+use pagerank_nb::pagerank::{self, PrConfig, Variant};
+use pagerank_nb::util::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8_000);
+    let host = HostInfo::detect();
+    let graph = synthetic::web_replica(n, 8, 13);
+    eprintln!(
+        "{} vertices, {} edges · host parallelism {}",
+        graph.num_vertices(),
+        graph.num_edges(),
+        host.available_parallelism
+    );
+
+    let seq = pagerank::run(&graph, Variant::Sequential, &PrConfig::default())?;
+    let seq_secs = seq.elapsed.as_secs_f64();
+
+    let variants = [Variant::Barrier, Variant::BarrierEdge, Variant::NoSync, Variant::WaitFree];
+    let mut headers = vec!["threads".to_string()];
+    headers.extend(variants.iter().map(|v| format!("{v} (x)")));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new("Speed-up vs threads", &hdr);
+
+    for threads in host.thread_sweep() {
+        let cfg = PrConfig { threads, ..PrConfig::default() };
+        let mut row: Vec<pagerank_nb::util::report::Cell> = vec![threads.into()];
+        for v in variants {
+            let r = pagerank::run(&graph, v, &cfg)?;
+            row.push((seq_secs / r.elapsed.as_secs_f64()).into());
+        }
+        table.push_row(row);
+    }
+    table.note(host.describe());
+    table.note("paper shape (56-core Xeon): No-Sync keeps climbing, Barrier flattens as wait time grows");
+    println!("{}", table.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! End-to-end driver: the full system on a realistic workload.
+//!
+//! Builds the webStanford-class replica, runs **every** variant of the
+//! paper across the synchronization spectrum, and reports the paper's
+//! headline metrics (speedup over sequential, iterations, L1-norm) — a
+//! miniature of Figs 1, 5 and 7 in one binary. This is the run recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! cargo run --release --example web_ranking [divisor] [threads]
+//! ```
+
+use pagerank_nb::coordinator::host::HostInfo;
+use pagerank_nb::graph::synthetic;
+use pagerank_nb::pagerank::{self, PrConfig, Variant};
+use pagerank_nb::util::report::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let divisor: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(40);
+    let host = HostInfo::detect();
+    let threads: usize = args
+        .get(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| host.default_threads());
+
+    // webStanford-class replica (Table 1: 281,903 vertices / 2,312,497
+    // edges at full scale).
+    let graph = synthetic::web_replica(281_903 / divisor, 8, 42);
+    eprintln!(
+        "webStanford replica at 1/{divisor}: {} vertices, {} edges · {} threads",
+        graph.num_vertices(),
+        graph.num_edges(),
+        threads
+    );
+
+    let cfg = PrConfig {
+        threads,
+        dnf_timeout: Some(std::time::Duration::from_secs(120)),
+        ..PrConfig::default()
+    };
+    let seq = pagerank::run(&graph, Variant::Sequential, &cfg)?;
+    let seq_secs = seq.elapsed.as_secs_f64();
+
+    let mut table = Table::new(
+        "Web ranking — all programs (Figs 1/5/7 miniature)",
+        &["program", "time (s)", "speedup (x)", "iterations", "L1 vs seq", "converged"],
+    );
+    table.push_row(vec![
+        "Sequential".into(),
+        seq_secs.into(),
+        1.0.into(),
+        (seq.iterations as i64).into(),
+        0.0.into(),
+        "yes".into(),
+    ]);
+    for v in Variant::parallel_cpu() {
+        let r = pagerank::run(&graph, v, &cfg)?;
+        let secs = r.elapsed.as_secs_f64();
+        table.push_row(vec![
+            v.name().into(),
+            secs.into(),
+            (seq_secs / secs).into(),
+            (r.iterations as i64).into(),
+            r.l1_norm(&seq.ranks).into(),
+            if r.converged { "yes" } else { "NO" }.into(),
+        ]);
+    }
+    table.note(host.describe());
+    println!("{}", table.to_markdown());
+    Ok(())
+}

@@ -1,0 +1,93 @@
+"""AOT pipeline: lower the Layer-2 model (with its Layer-1 Pallas kernel)
+to HLO **text** artifacts the Rust runtime compiles through PJRT.
+
+Run once per build (`make artifacts`):
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange is HLO text, NOT a serialized ``HloModuleProto``: jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 (the version the
+published ``xla`` crate binds) rejects; the text parser reassigns ids. See
+/opt/xla-example/README.md.
+
+Artifact naming encodes the shape bucket (parsed by
+``rust/src/runtime/artifacts.rs``):
+
+    ell_n{N}_k{K}.hlo.txt         ELL step buckets
+    dense_n{N}.hlo.txt            dense step buckets
+    dense_power_n{N}_t{T}.hlo.txt fused power iteration
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape buckets. The ELL ladder covers the graphs the XlaBlock variant and
+# the integration tests use; extend the list and re-run `make artifacts`
+# to serve bigger graphs.
+ELL_BUCKETS = [(256, 16), (1024, 32), (1024, 128), (4096, 64), (4096, 256)]
+DENSE_BUCKETS = [64, 256]
+POWER_BUCKETS = [(256, 8)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_ell(n: int, k: int) -> str:
+    lowered = jax.jit(model.ell_step).lower(*model.ell_shapes(n, k))
+    return to_hlo_text(lowered)
+
+
+def lower_dense(n: int) -> str:
+    lowered = jax.jit(model.dense_step).lower(*model.dense_shapes(n))
+    return to_hlo_text(lowered)
+
+
+def lower_dense_power(n: int, steps: int) -> str:
+    fn = functools.partial(model.dense_power, steps=steps)
+    lowered = jax.jit(fn).lower(*model.dense_shapes(n))
+    return to_hlo_text(lowered)
+
+
+def build_all(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+
+    def emit(name: str, text: str):
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        written.append(path)
+        print(f"  {name}: {len(text)} chars")
+
+    for n, k in ELL_BUCKETS:
+        emit(f"ell_n{n}_k{k}.hlo.txt", lower_ell(n, k))
+    for n in DENSE_BUCKETS:
+        emit(f"dense_n{n}.hlo.txt", lower_dense(n))
+    for n, t in POWER_BUCKETS:
+        emit(f"dense_power_n{n}_t{t}.hlo.txt", lower_dense_power(n, t))
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    print(f"AOT-lowering artifacts to {args.out_dir}")
+    written = build_all(args.out_dir)
+    print(f"wrote {len(written)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Layer 1 — the PageRank gather/accumulate hot-spot as a Pallas kernel.
+
+The paper's inner loop (Eq. 1) is, per vertex,
+
+    contrib(u) = sum_{(v,u) in E} pr(v) / outdeg(v)
+
+which in the padded-CSR (ELL) layout the Rust coordinator builds
+(`rust/src/pagerank/xla_block.rs`) becomes a dense, tileable gather:
+
+    contrib[u] = sum_k weights[u, k] * pr[indices[u, k]]
+
+with `weights[u, k] = d / outdeg(v_k)` and zero-weight padding.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): each grid step streams one
+``(TILE_ROWS, K)`` tile of `indices`/`weights` HBM→VMEM while the full rank
+vector stays VMEM-resident (N ≤ 4096 f32 = 16 KiB, far under the ~16 MiB
+VMEM budget); the gather + multiply-accumulate is VPU work — the op is
+memory-bound, so the roofline target is HBM bandwidth, not the MXU. The
+dense variant in `model.py` (`jnp.matmul`) covers the MXU path for small
+blocks.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers the kernel to plain HLO so the
+AOT-compiled artifact runs on the Rust CPU client while keeping the same
+BlockSpec structure a real TPU lowering would use.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid step. 128 divides every artifact bucket (smallest is 256)
+# and keeps the tile square-ish relative to K ∈ {16, 32, 64}: the
+# (128, 64) f32 tile is 32 KiB of weights + 32 KiB of indices per step.
+DEFAULT_TILE_ROWS = 128
+
+
+def _ell_tile_kernel(idx_ref, w_ref, pr_ref, o_ref):
+    """One (TILE_ROWS, K) tile: gather ranks, weight, reduce over K."""
+    idx = idx_ref[...]  # (T, K) int32
+    w = w_ref[...]  # (T, K) f32
+    pr = pr_ref[...]  # (N,)  f32 — full vector, VMEM-resident
+    gathered = jnp.take(pr, idx, axis=0)  # (T, K)
+    o_ref[...] = jnp.sum(w * gathered, axis=1)
+
+
+@partial(jax.jit, static_argnames=("tile_rows",))
+def ell_contributions(indices, weights, pr, tile_rows=DEFAULT_TILE_ROWS):
+    """Weighted-gather contributions, tiled over rows.
+
+    Args:
+      indices: ``(N, K) int32`` — in-neighbour ids, 0-padded.
+      weights: ``(N, K) float32`` — ``d / outdeg``, 0-padded.
+      pr:      ``(N,) float32`` — current ranks.
+      tile_rows: rows per grid step; must divide N.
+
+    Returns:
+      ``(N,) float32`` — ``sum_k weights[u,k] * pr[indices[u,k]]``.
+    """
+    n, k = indices.shape
+    if n % tile_rows != 0:
+        # bucket sizes are powers of two ≥ 256; smaller test shapes fall
+        # back to a single whole-array tile.
+        tile_rows = n
+    grid = (n // tile_rows,)
+    return pl.pallas_call(
+        _ell_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(indices, weights, pr)
+
+
+def vmem_bytes_per_step(n, k, tile_rows=DEFAULT_TILE_ROWS):
+    """Estimated VMEM footprint of one grid step (profiling aid; see
+    EXPERIMENTS.md §Perf L1). indices + weights tiles, the resident rank
+    vector, and the output slice."""
+    t = min(tile_rows, n)
+    return 4 * (t * k  # indices tile (int32)
+                + t * k  # weights tile (f32)
+                + n  # rank vector (f32)
+                + t)  # output slice (f32)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Layer-1 kernel and the Layer-2 model.
+
+These are the correctness ground truth: `python/tests/` asserts the Pallas
+kernel and the lowered model match these to float32 tolerance, and the Rust
+integration test compares the AOT artifact against the Rust sequential
+solver on the same graphs.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ell_contributions_ref(indices, weights, pr):
+    """Reference for `pagerank_step.ell_contributions`."""
+    return jnp.sum(weights * pr[indices], axis=1)
+
+
+def ell_step_ref(indices, weights, pr, base):
+    """One full PageRank step in ELL form: ``base + contributions``."""
+    return base + ell_contributions_ref(indices, weights, pr)
+
+
+def dense_matrix(n, edges, damping=0.85, dtype=np.float32):
+    """Dense PageRank matrix M with damping folded in:
+    ``M[u, v] = damping / outdeg(v)`` for each edge ``v -> u``."""
+    out_deg = np.zeros(n, dtype=np.int64)
+    for v, _u in edges:
+        out_deg[v] += 1
+    m = np.zeros((n, n), dtype=dtype)
+    for v, u in edges:
+        m[u, v] += damping / out_deg[v]
+    return m
+
+
+def ell_arrays(n, edges, k, damping=0.85):
+    """Build the padded ELL arrays the Rust coordinator builds
+    (`EllLayout::build`), for cross-checking layouts in tests."""
+    out_deg = np.zeros(n, dtype=np.int64)
+    for v, _u in edges:
+        out_deg[v] += 1
+    indices = np.zeros((n, k), dtype=np.int32)
+    weights = np.zeros((n, k), dtype=np.float32)
+    fill = np.zeros(n, dtype=np.int64)
+    for v, u in edges:
+        j = fill[u]
+        assert j < k, f"vertex {u} in-degree exceeds K={k}"
+        indices[u, j] = v
+        weights[u, j] = damping / out_deg[v]
+        fill[u] += 1
+    return indices, weights
+
+
+def pagerank_power_ref(n, edges, damping=0.85, iters=100, tol=1e-10):
+    """Double-precision NumPy power iteration (Eq. 1, no dangling
+    redistribution — the paper's formulation). Returns (ranks, iterations)."""
+    out_deg = np.zeros(n, dtype=np.int64)
+    for v, _u in edges:
+        out_deg[v] += 1
+    pr = np.full(n, 1.0 / n)
+    base = (1.0 - damping) / n
+    for it in range(1, iters + 1):
+        nxt = np.full(n, base)
+        for v, u in edges:
+            nxt[u] += damping * pr[v] / out_deg[v]
+        err = np.abs(nxt - pr).max()
+        pr = nxt
+        if err <= tol:
+            return pr, it
+    return pr, iters

@@ -1,0 +1,65 @@
+"""Layer 2 — the PageRank step as a JAX computation.
+
+Wraps the Layer-1 Pallas kernel (`kernels.pagerank_step`) into the full
+Eq.-1 update the Rust coordinator drives:
+
+    pr' = base + sum_k weights[u, k] * pr[indices[u, k]]
+
+plus a dense-matmul variant (MXU path for small blocks) and a fused
+`lax.scan` power iteration used by the runtime bench to amortize dispatch.
+
+All functions return 1-tuples: `aot.py` lowers with ``return_tuple=True``
+and the Rust side unwraps with ``to_tuple1()`` (see
+/opt/xla-example/load_hlo).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels import pagerank_step
+
+
+def ell_step(indices, weights, pr, base):
+    """One ELL PageRank step through the Pallas kernel.
+
+    Args:
+      indices: ``(N, K) int32``; weights: ``(N, K) float32``;
+      pr: ``(N,) float32``; base: ``(1,) float32`` = ``(1-d)/n_actual``.
+    """
+    contrib = pagerank_step.ell_contributions(indices, weights, pr)
+    return (contrib + base[0],)
+
+
+def dense_step(matrix, pr, base):
+    """One dense step: ``base + M @ pr`` (damping folded into ``M``)."""
+    return (matrix @ pr + base[0],)
+
+
+def dense_power(matrix, pr, base, steps: int):
+    """``steps`` fused dense iterations (single dispatch from Rust)."""
+
+    def body(p, _):
+        return matrix @ p + base[0], None
+
+    out, _ = lax.scan(body, pr, None, length=steps)
+    return (out,)
+
+
+def ell_shapes(n: int, k: int):
+    """Example args for lowering an (n, k) ELL bucket."""
+    return (
+        jax.ShapeDtypeStruct((n, k), jnp.int32),
+        jax.ShapeDtypeStruct((n, k), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+
+
+def dense_shapes(n: int):
+    """Example args for lowering an n-vertex dense bucket."""
+    return (
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )

@@ -1,0 +1,58 @@
+"""AOT pipeline: lowering produces non-empty, well-formed HLO text whose
+entry computation carries the expected parameter shapes."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def test_lower_ell_small_bucket_mentions_shapes():
+    text = aot.lower_ell(256, 16)
+    assert "HloModule" in text
+    assert "s32[256,16]" in text  # indices
+    assert "f32[256,16]" in text  # weights
+    assert "f32[256]" in text  # pr
+    assert "f32[1]" in text  # base
+
+
+def test_lower_dense_power_contains_loop_or_unroll():
+    text = aot.lower_dense_power(64, 4)
+    assert "HloModule" in text
+    assert "f32[64,64]" in text
+
+
+def test_build_all_writes_every_bucket(tmp_path):
+    # Monkeypatch the ladders down so the test is quick but the path is real.
+    old_ell, old_dense, old_power = aot.ELL_BUCKETS, aot.DENSE_BUCKETS, aot.POWER_BUCKETS
+    aot.ELL_BUCKETS, aot.DENSE_BUCKETS, aot.POWER_BUCKETS = [(64, 4)], [16], [(16, 2)]
+    try:
+        written = aot.build_all(str(tmp_path))
+    finally:
+        aot.ELL_BUCKETS, aot.DENSE_BUCKETS, aot.POWER_BUCKETS = old_ell, old_dense, old_power
+    names = sorted(os.path.basename(p) for p in written)
+    assert names == ["dense_n16.hlo.txt", "dense_power_n16_t2.hlo.txt", "ell_n64_k4.hlo.txt"]
+    for p in written:
+        text = open(p).read()
+        assert text.startswith("HloModule"), p
+        assert len(text) > 200, p
+
+
+def test_lowered_ell_executes_like_eager():
+    """Compile the lowered StableHLO back through jax and compare with the
+    eager model — guards against lowering-time shape/layout bugs."""
+    n, k = 64, 4
+    rng = np.random.default_rng(11)
+    indices = rng.integers(0, n, size=(n, k), dtype=np.int32)
+    weights = rng.uniform(size=(n, k)).astype(np.float32)
+    pr = rng.uniform(size=(n,)).astype(np.float32)
+    base = np.array([0.002], dtype=np.float32)
+    compiled = jax.jit(model.ell_step).lower(indices, weights, pr, base).compile()
+    (got,) = compiled(indices, weights, pr, base)
+    (want,) = model.ell_step(indices, weights, pr, base)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)

@@ -1,0 +1,101 @@
+"""Layer-1 correctness: the Pallas ELL gather kernel vs the pure-jnp oracle.
+
+The deterministic grid covers the artifact buckets; the hypothesis section
+sweeps random shapes/values — the CORE correctness signal for everything
+the Rust runtime will execute.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import pagerank_step, ref
+
+
+def random_case(rng, n, k):
+    indices = rng.integers(0, n, size=(n, k), dtype=np.int32)
+    weights = rng.uniform(0.0, 1.0, size=(n, k)).astype(np.float32)
+    # zero out a random padding suffix per row, like real ELL layouts
+    for row in range(n):
+        pad = rng.integers(0, k + 1)
+        if pad:
+            weights[row, k - pad:] = 0.0
+            indices[row, k - pad:] = 0
+    pr = rng.uniform(0.0, 1.0, size=(n,)).astype(np.float32)
+    return indices, weights, pr
+
+
+@pytest.mark.parametrize("n,k", [(8, 2), (64, 4), (128, 8), (256, 16), (512, 32)])
+def test_kernel_matches_ref_grid(n, k):
+    rng = np.random.default_rng(n * 1000 + k)
+    indices, weights, pr = random_case(rng, n, k)
+    got = pagerank_step.ell_contributions(indices, weights, pr)
+    want = ref.ell_contributions_ref(indices, weights, pr)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+@pytest.mark.parametrize("tile", [1, 2, 64, 128, 999])
+def test_tile_size_does_not_change_result(tile):
+    rng = np.random.default_rng(7)
+    indices, weights, pr = random_case(rng, 128, 8)
+    want = ref.ell_contributions_ref(indices, weights, pr)
+    got = pagerank_step.ell_contributions(indices, weights, pr, tile_rows=tile)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_zero_weights_give_zero():
+    n, k = 32, 4
+    indices = np.zeros((n, k), dtype=np.int32)
+    weights = np.zeros((n, k), dtype=np.float32)
+    pr = np.ones(n, dtype=np.float32)
+    got = pagerank_step.ell_contributions(indices, weights, pr)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(n, dtype=np.float32))
+
+
+def test_single_lane_is_gather():
+    # K=1: the kernel is exactly w * pr[idx].
+    n = 16
+    rng = np.random.default_rng(3)
+    indices = rng.integers(0, n, size=(n, 1), dtype=np.int32)
+    weights = rng.uniform(size=(n, 1)).astype(np.float32)
+    pr = rng.uniform(size=(n,)).astype(np.float32)
+    got = np.asarray(pagerank_step.ell_contributions(indices, weights, pr))
+    want = weights[:, 0] * pr[indices[:, 0]]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_exp=st.integers(min_value=1, max_value=7),
+    k=st.integers(min_value=1, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(n_exp, k, seed):
+    """Shape/value sweep: any (2^n_exp, k) ELL instance matches the oracle."""
+    n = 2 ** n_exp
+    rng = np.random.default_rng(seed)
+    indices, weights, pr = random_case(rng, n, k)
+    got = pagerank_step.ell_contributions(indices, weights, pr)
+    want = ref.ell_contributions_ref(indices, weights, pr)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_kernel_linear_in_pr(seed):
+    """Algebraic property: contributions are linear in the rank vector."""
+    rng = np.random.default_rng(seed)
+    n, k = 64, 4
+    indices, weights, pr = random_case(rng, n, k)
+    a = np.float32(rng.uniform(0.5, 2.0))
+    got_scaled = np.asarray(pagerank_step.ell_contributions(indices, weights, a * pr))
+    got = np.asarray(pagerank_step.ell_contributions(indices, weights, pr))
+    np.testing.assert_allclose(got_scaled, a * got, rtol=1e-5, atol=1e-6)
+
+
+def test_vmem_estimate_monotone():
+    small = pagerank_step.vmem_bytes_per_step(256, 16)
+    large = pagerank_step.vmem_bytes_per_step(4096, 64)
+    assert 0 < small < large

@@ -1,0 +1,97 @@
+"""Layer-2 correctness: the JAX model (ell/dense step, fused power) against
+NumPy power iteration and against each other."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def random_graph(rng, n, max_deg):
+    """Random simple digraph where every vertex has >= 1 out-edge (keeps the
+    ELL weights well-defined: no dangling out-degrees in these tests)."""
+    edges = set()
+    for v in range(n):
+        deg = rng.integers(1, max_deg + 1)
+        before = len(edges)
+        for u in rng.choice(n, size=deg, replace=False):
+            if u != v:
+                edges.add((v, int(u)))
+        if len(edges) == before:
+            # every pick was the self-loop: force one out-edge so the
+            # graph has no dangling vertices (tests rely on that)
+            edges.add((v, (v + 1) % n))
+    return sorted(edges)
+
+
+def run_ell_power(indices, weights, n, base, iters):
+    pr = np.full(n, 1.0 / n, dtype=np.float32)
+    b = np.array([base], dtype=np.float32)
+    for _ in range(iters):
+        (pr,) = model.ell_step(indices, weights, pr, b)
+        pr = np.asarray(pr)
+    return pr
+
+
+@pytest.mark.parametrize("n,max_deg,seed", [(16, 3, 0), (64, 5, 1), (128, 8, 2)])
+def test_ell_step_iterates_to_numpy_fixed_point(n, max_deg, seed):
+    rng = np.random.default_rng(seed)
+    edges = random_graph(rng, n, max_deg)
+    max_k = max(sum(1 for v, u in edges if u == t) for t in range(n))
+    indices, weights = ref.ell_arrays(n, edges, k=max_k + 1)
+    base = (1.0 - 0.85) / n
+    got = run_ell_power(indices, weights, n, base, iters=60)
+    want, _ = ref.pagerank_power_ref(n, edges, iters=60)
+    np.testing.assert_allclose(got, want.astype(np.float32), rtol=5e-4, atol=1e-6)
+
+
+def test_dense_step_matches_ell_step():
+    rng = np.random.default_rng(5)
+    n = 32
+    edges = random_graph(rng, n, 4)
+    max_k = max(sum(1 for v, u in edges if u == t) for t in range(n)) + 1
+    indices, weights = ref.ell_arrays(n, edges, k=max_k)
+    mat = ref.dense_matrix(n, edges)
+    pr = rng.uniform(size=(n,)).astype(np.float32)
+    b = np.array([0.01], dtype=np.float32)
+    (dense,) = model.dense_step(mat, pr, b)
+    (ell,) = model.ell_step(indices, weights, pr, b)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(ell), rtol=1e-4, atol=1e-6)
+
+
+def test_dense_power_equals_repeated_dense_step():
+    rng = np.random.default_rng(9)
+    n = 16
+    edges = random_graph(rng, n, 3)
+    mat = ref.dense_matrix(n, edges)
+    b = np.array([(1 - 0.85) / n], dtype=np.float32)
+    pr = np.full(n, 1.0 / n, dtype=np.float32)
+    (fused,) = model.dense_power(mat, pr, b, steps=8)
+    manual = pr
+    for _ in range(8):
+        (manual,) = model.dense_step(mat, manual, b)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(manual), rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_rank_mass_conserved_without_dangling(seed):
+    """Σ pr stays 1 when every vertex has out-links (no dangling leak)."""
+    rng = np.random.default_rng(seed)
+    n = 32
+    edges = random_graph(rng, n, 4)
+    max_k = max(sum(1 for v, u in edges if u == t) for t in range(n)) + 1
+    indices, weights = ref.ell_arrays(n, edges, k=max_k)
+    base = (1.0 - 0.85) / n
+    pr = run_ell_power(indices, weights, n, base, iters=40)
+    assert abs(float(pr.sum()) - 1.0) < 1e-3
+
+
+def test_ell_shapes_helpers():
+    idx, w, pr, base = model.ell_shapes(256, 16)
+    assert idx.shape == (256, 16) and w.shape == (256, 16)
+    assert pr.shape == (256,) and base.shape == (1,)
+    m, pr2, b2 = model.dense_shapes(64)
+    assert m.shape == (64, 64) and pr2.shape == (64,) and b2.shape == (1,)

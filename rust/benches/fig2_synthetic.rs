@@ -1,0 +1,24 @@
+//! `cargo bench --bench fig2_synthetic` — regenerates: Fig 2 speedup vs programs (synthetic datasets).
+//!
+//! Thin wrapper over `harness::experiments::run_experiment("fig2")`; the
+//! same table is produced by `pagerank-nb bench fig2`. Reports land in
+//! `reports/` (markdown + CSV + JSON). Knobs: PAGERANK_NB_SCALE,
+//! PAGERANK_NB_BENCH_SAMPLES, PAGERANK_NB_BENCH_WARMUP.
+
+use pagerank_nb::harness::experiments::{run_experiment, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::default();
+    let tables = run_experiment("fig2", &ctx)?;
+    let out = std::path::Path::new("reports");
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.to_markdown());
+        let stem = if tables.len() == 1 {
+            "fig2".to_string()
+        } else {
+            format!("{}_{}", "fig2", (b'a' + i as u8) as char)
+        };
+        t.write_all(out, &stem)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! `cargo bench --bench fig9_failures` — regenerates: Fig 9 execution time vs failed threads.
+//!
+//! Thin wrapper over `harness::experiments::run_experiment("fig9")`; the
+//! same table is produced by `pagerank-nb bench fig9`. Reports land in
+//! `reports/` (markdown + CSV + JSON). Knobs: PAGERANK_NB_SCALE,
+//! PAGERANK_NB_BENCH_SAMPLES, PAGERANK_NB_BENCH_WARMUP.
+
+use pagerank_nb::harness::experiments::{run_experiment, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::default();
+    let tables = run_experiment("fig9", &ctx)?;
+    let out = std::path::Path::new("reports");
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.to_markdown());
+        let stem = if tables.len() == 1 {
+            "fig9".to_string()
+        } else {
+            format!("{}_{}", "fig9", (b'a' + i as u8) as char)
+        };
+        t.write_all(out, &stem)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,24 @@
+//! `cargo bench --bench xla_runtime` — regenerates: XLA artifact runtime comparison.
+//!
+//! Thin wrapper over `harness::experiments::run_experiment("xla")`; the
+//! same table is produced by `pagerank-nb bench xla`. Reports land in
+//! `reports/` (markdown + CSV + JSON). Knobs: PAGERANK_NB_SCALE,
+//! PAGERANK_NB_BENCH_SAMPLES, PAGERANK_NB_BENCH_WARMUP.
+
+use pagerank_nb::harness::experiments::{run_experiment, Ctx};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::default();
+    let tables = run_experiment("xla", &ctx)?;
+    let out = std::path::Path::new("reports");
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.to_markdown());
+        let stem = if tables.len() == 1 {
+            "xla".to_string()
+        } else {
+            format!("{}_{}", "xla", (b'a' + i as u8) as char)
+        };
+        t.write_all(out, &stem)?;
+    }
+    Ok(())
+}

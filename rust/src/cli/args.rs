@@ -1,0 +1,105 @@
+//! Tiny `--flag value` argument parser.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed `--key value` pairs plus bare positionals.
+#[derive(Debug, Default, Clone)]
+pub struct ArgMap {
+    flags: HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl ArgMap {
+    /// Parse `--key value` and `--switch` (value-less switches store `""`).
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                // `--key=value` or `--key value` or switch
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(key.to_string(), String::new());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Self { flags, positional })
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing required --{key}"))
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{key} '{s}': {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_pairs_positionals_and_switches() {
+        let a = ArgMap::parse(&sv(&["fig1", "--threads", "4", "--all", "--out=reports"])).unwrap();
+        assert_eq!(a.positional, vec!["fig1"]);
+        assert_eq!(a.get("threads"), Some("4"));
+        assert!(a.has("all"));
+        assert_eq!(a.get("out"), Some("reports"));
+    }
+
+    #[test]
+    fn get_parsed_with_default() {
+        let a = ArgMap::parse(&sv(&["--threads", "8"])).unwrap();
+        assert_eq!(a.get_parsed("threads", 1usize).unwrap(), 8);
+        assert_eq!(a.get_parsed("samples", 5usize).unwrap(), 5);
+        let bad = ArgMap::parse(&sv(&["--threads", "x"])).unwrap();
+        assert!(bad.get_parsed("threads", 1usize).is_err());
+    }
+
+    #[test]
+    fn require_errors_when_missing() {
+        let a = ArgMap::parse(&sv(&[])).unwrap();
+        assert!(a.require("graph").is_err());
+    }
+
+    #[test]
+    fn negative_number_is_not_a_flag() {
+        // values starting with '--' are treated as next flag; plain numbers ok
+        let a = ArgMap::parse(&sv(&["--seed", "123"])).unwrap();
+        assert_eq!(a.get("seed"), Some("123"));
+    }
+}

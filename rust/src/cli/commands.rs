@@ -1,0 +1,273 @@
+//! Subcommand implementations.
+
+use crate::cli::ArgMap;
+use crate::coordinator::host::HostInfo;
+use crate::graph::properties::GraphStats;
+use crate::graph::synthetic::{self, table1};
+use crate::graph::{io, Csr, PartitionPolicy};
+use crate::harness::bench::BenchRunner;
+use crate::harness::experiments::{self, Ctx, ALL_EXPERIMENTS};
+use crate::pagerank::{self, PrConfig, Variant};
+use crate::util::fmt;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Resolve a `--graph` source: file path (.bin / edge list) or generator
+/// spec like `web:10000:8`.
+pub fn load_graph(src: &str, seed: u64) -> Result<Csr> {
+    if src.contains(':') && !Path::new(src).exists() {
+        return gen_from_spec(src, seed);
+    }
+    let path = Path::new(src);
+    if !path.exists() {
+        bail!("graph source '{src}' is neither a file nor a generator spec");
+    }
+    if path.extension().and_then(|e| e.to_str()) == Some("bin") {
+        io::load_binary(path)
+    } else {
+        io::load_edge_list(path)
+    }
+}
+
+fn gen_from_spec(spec: &str, seed: u64) -> Result<Csr> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let p = |i: usize| -> Result<usize> {
+        parts
+            .get(i)
+            .with_context(|| format!("spec '{spec}' missing field {i}"))?
+            .parse()
+            .with_context(|| format!("bad number in spec '{spec}'"))
+    };
+    Ok(match parts[0] {
+        "web" => synthetic::web_replica(p(1)?, p(2)?, seed),
+        "social" => synthetic::social_replica(p(1)?, p(2)?, seed),
+        "road" => synthetic::road_replica(p(1)?, seed),
+        "rmat" => synthetic::d_series(1, 1, seed), // alias kept simple
+        "d" => synthetic::d_series(p(1)? as u32, p(2)?, seed),
+        "cycle" => synthetic::cycle(p(1)?),
+        "star" => synthetic::star(p(1)?),
+        "chain" => synthetic::chain(p(1)?),
+        "er" => synthetic::erdos_renyi(p(1)?, p(2)?, seed),
+        other => bail!("unknown generator '{other}' in spec '{spec}'"),
+    })
+}
+
+fn config_from_args(args: &ArgMap) -> Result<PrConfig> {
+    let host = HostInfo::detect();
+    let partition = match args.get("partition").unwrap_or("vertex") {
+        "vertex" => PartitionPolicy::VertexBalanced,
+        "edge" => PartitionPolicy::EdgeBalanced,
+        other => bail!("--partition must be vertex|edge, got '{other}'"),
+    };
+    Ok(PrConfig {
+        damping: args.get_parsed("damping", crate::DAMPING)?,
+        threshold: args.get_parsed("threshold", crate::DEFAULT_THRESHOLD)?,
+        max_iterations: args.get_parsed("iters", 10_000u64)?,
+        threads: args.get_parsed("threads", host.default_threads())?,
+        partition,
+        ..PrConfig::default()
+    })
+}
+
+/// `run`: one algorithm on one graph; prints timing + top ranks.
+pub fn cmd_run(args: &ArgMap) -> Result<()> {
+    let seed = args.get_parsed("seed", 42u64)?;
+    let g = load_graph(args.require("graph")?, seed)?;
+    let variant = Variant::parse(args.get("algo").unwrap_or("no-sync"))?;
+    let cfg = config_from_args(args)?;
+    println!(
+        "graph '{}': {} vertices, {} edges · {} · {} threads",
+        g.name,
+        fmt::count(g.num_vertices() as u64),
+        fmt::count(g.num_edges() as u64),
+        variant,
+        cfg.threads
+    );
+    let r = if variant == Variant::XlaBlock {
+        let engine = crate::runtime::Engine::cpu()?;
+        pagerank::run_with_engine(&g, variant, &cfg, &engine)?
+    } else {
+        pagerank::run(&g, variant, &cfg)?
+    };
+    println!(
+        "{}: {} in {} ({} iterations){}",
+        variant,
+        if r.converged { "converged" } else { "NOT converged" },
+        fmt::duration(r.elapsed.as_secs_f64()),
+        r.iterations,
+        if r.dnf { " [DNF]" } else { "" }
+    );
+    let k = args.get_parsed("top", 5usize)?;
+    for (rank, (u, score)) in r.top_k(k).into_iter().enumerate() {
+        println!("  #{:<2} vertex {:<10} pr = {}", rank + 1, u, fmt::sci(score));
+    }
+    Ok(())
+}
+
+/// `bench`: regenerate paper tables/figures.
+pub fn cmd_bench(argv: &[String]) -> Result<()> {
+    let args = ArgMap::parse(argv)?;
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let ids: Vec<&str> = if which == "all" {
+        ALL_EXPERIMENTS.to_vec()
+    } else {
+        vec![which]
+    };
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("reports"));
+    let host = HostInfo::detect();
+    let ctx = Ctx {
+        divisor: args.get_parsed("scale", crate::harness::bench::dataset_divisor())?,
+        // oversubscribe to ≥4 threads on small hosts (see Ctx::default)
+        threads: args.get_parsed("threads", host.default_threads().max(4))?,
+        runner: BenchRunner::new(
+            args.get_parsed("samples", BenchRunner::default().samples)?,
+            args.get_parsed("warmup", BenchRunner::default().warmup)?,
+        ),
+        seed: args.get_parsed("seed", 42u64)?,
+        host,
+    };
+    for id in ids {
+        eprintln!("── experiment {id} ──");
+        let tables = experiments::run_experiment(id, &ctx)?;
+        for (i, t) in tables.iter().enumerate() {
+            println!("{}", t.to_markdown());
+            let stem = if tables.len() == 1 {
+                id.to_string()
+            } else {
+                format!("{id}_{}", (b'a' + i as u8) as char)
+            };
+            t.write_all(&out_dir, &stem)?;
+        }
+    }
+    eprintln!("reports written to {}", out_dir.display());
+    Ok(())
+}
+
+/// `gen`: materialize replica datasets to disk (binary + edge-list).
+pub fn cmd_gen(args: &ArgMap) -> Result<()> {
+    let out = PathBuf::from(args.require("out")?);
+    std::fs::create_dir_all(&out)?;
+    let divisor = args.get_parsed("scale", crate::harness::bench::dataset_divisor())?;
+    let seed = args.get_parsed("seed", 42u64)?;
+    let wanted: Option<&str> = args.get("dataset");
+    if wanted.is_none() && !args.has("all") {
+        bail!("pass --all or --dataset NAME");
+    }
+    let mut count = 0;
+    for spec in table1() {
+        if let Some(w) = wanted {
+            if !spec.name.eq_ignore_ascii_case(w) {
+                continue;
+            }
+        }
+        let g = (spec.build)(divisor, seed);
+        let path = out.join(format!("{}.bin", spec.name));
+        io::save_binary(&g, &path)?;
+        println!(
+            "{:<18} {:>9} vertices {:>10} edges -> {}",
+            spec.name,
+            fmt::count(g.num_vertices() as u64),
+            fmt::count(g.num_edges() as u64),
+            path.display()
+        );
+        count += 1;
+    }
+    if count == 0 {
+        bail!("no dataset matched {:?}", wanted);
+    }
+    Ok(())
+}
+
+/// `info`: structural stats for a graph source.
+pub fn cmd_info(args: &ArgMap) -> Result<()> {
+    let seed = args.get_parsed("seed", 42u64)?;
+    let g = load_graph(args.require("graph")?, seed)?;
+    let s = GraphStats::compute(&g);
+    println!("graph '{}'", g.name);
+    println!("  vertices        {}", fmt::count(s.vertices as u64));
+    println!("  edges           {}", fmt::count(s.edges as u64));
+    println!("  dangling        {}", fmt::count(s.dangling as u64));
+    println!("  mean degree     {:.2}", s.mean_degree);
+    println!("  max in-degree   {}", fmt::count(s.max_in_degree as u64));
+    println!("  max out-degree  {}", fmt::count(s.max_out_degree as u64));
+    println!("  in-degree gini  {:.3}", s.in_degree_gini);
+    println!("  memory          {}", fmt::bytes(s.memory_bytes));
+    Ok(())
+}
+
+/// `validate`: run every CPU variant and check L1-norm against sequential.
+pub fn cmd_validate(args: &ArgMap) -> Result<()> {
+    let seed = args.get_parsed("seed", 42u64)?;
+    let g = load_graph(args.require("graph")?, seed)?;
+    let cfg = config_from_args(args)?;
+    let seq = pagerank::run(&g, Variant::Sequential, &cfg)?;
+    println!(
+        "{:<24} {:>12} {:>8} {:>12} {:>10}",
+        "variant", "time", "iters", "L1 vs seq", "status"
+    );
+    let mut failures = 0;
+    for v in Variant::parallel_cpu() {
+        let r = pagerank::run(&g, v, &cfg)?;
+        let l1 = r.l1_norm(&seq.ranks);
+        // exact variants must match tightly; approximate ones loosely
+        let bound = if v.is_approximate() { 1e-2 } else { 1e-6 };
+        let ok = r.converged && l1 < bound;
+        if !ok && v != Variant::NoSyncEdge {
+            failures += 1;
+        }
+        println!(
+            "{:<24} {:>12} {:>8} {:>12} {:>10}",
+            v.name(),
+            fmt::duration(r.elapsed.as_secs_f64()),
+            r.iterations,
+            fmt::sci(l1),
+            if ok {
+                "OK"
+            } else if v == Variant::NoSyncEdge {
+                "KNOWN-NC"
+            } else {
+                "FAIL"
+            }
+        );
+    }
+    if failures > 0 {
+        bail!("{failures} variant(s) failed validation");
+    }
+    println!("all variants validated against sequential");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing_generates_graphs() {
+        assert_eq!(load_graph("cycle:10", 1).unwrap().num_vertices(), 10);
+        assert_eq!(load_graph("star:5", 1).unwrap().num_edges(), 8);
+        assert!(load_graph("web:500:4", 1).unwrap().num_vertices() > 0);
+        assert!(load_graph("er:100:300", 1).unwrap().num_edges() == 300);
+    }
+
+    #[test]
+    fn bad_specs_error() {
+        assert!(load_graph("warp:10", 1).is_err());
+        assert!(load_graph("cycle:x", 1).is_err());
+        assert!(load_graph("/no/such/file", 1).is_err());
+    }
+
+    #[test]
+    fn file_loading_roundtrip() {
+        let g = synthetic::cycle(12);
+        let dir = std::env::temp_dir().join("pagerank_nb_cli_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.bin");
+        io::save_binary(&g, &p).unwrap();
+        let loaded = load_graph(p.to_str().unwrap(), 0).unwrap();
+        assert_eq!(loaded.num_vertices(), 12);
+    }
+}

@@ -1,0 +1,69 @@
+//! Command-line interface (hand-rolled: the offline image has no `clap`).
+//!
+//! ```text
+//! pagerank-nb run      --graph <src> --algo <variant> [--threads N] …
+//! pagerank-nb bench    <exp-id|all> [--out DIR]
+//! pagerank-nb gen      (--all | --dataset NAME) --out DIR
+//! pagerank-nb info     --graph <src>
+//! pagerank-nb validate --graph <src> [--threads N]
+//! ```
+//!
+//! Graph sources (`--graph`): a `.bin` binary cache, a SNAP edge-list text
+//! file, or a generator spec — `web:N:DEG`, `social:N:DEG`, `road:N`,
+//! `rmat:SCALE:EDGES`, `d:INDEX:DIVISOR`, `cycle:N`, `star:N`.
+
+pub mod args;
+pub mod commands;
+
+pub use args::ArgMap;
+
+use anyhow::{bail, Result};
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        bail!("missing subcommand");
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "run" => commands::cmd_run(&ArgMap::parse(rest)?),
+        "bench" => commands::cmd_bench(rest),
+        "gen" => commands::cmd_gen(&ArgMap::parse(rest)?),
+        "info" => commands::cmd_info(&ArgMap::parse(rest)?),
+        "validate" => commands::cmd_validate(&ArgMap::parse(rest)?),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_usage() {
+    eprintln!(
+        "pagerank-nb — non-blocking PageRank for massive graphs
+
+USAGE:
+  pagerank-nb run      --graph <src> [--algo <variant>] [--threads N]
+                       [--threshold X] [--iters N] [--partition vertex|edge]
+                       [--top K] [--damping D]
+  pagerank-nb bench    <table1|fig1..fig9|xla|ablation|all> [--out DIR]
+                       [--scale DIVISOR] [--threads N] [--samples N]
+  pagerank-nb gen      (--all | --dataset NAME) --out DIR [--scale DIVISOR]
+  pagerank-nb info     --graph <src>
+  pagerank-nb validate --graph <src> [--threads N]
+
+GRAPH SOURCES:
+  path to .bin (binary cache) or SNAP edge-list text, or a generator spec:
+  web:N:DEG  social:N:DEG  road:N  rmat:SCALE:EDGES  d:IDX:DIV  cycle:N  star:N
+
+VARIANTS:
+  sequential barrier barrier-identical barrier-edge barrier-opt wait-free
+  no-sync no-sync-identical no-sync-edge no-sync-opt no-sync-opt-identical
+  xla-block (needs `make artifacts`)"
+    );
+}

@@ -1,0 +1,143 @@
+//! Scoped worker pool with a DNF watchdog.
+//!
+//! Every parallel variant funnels through [`run_workers`]: spawn `p` workers
+//! (paper §2.2's "limited set of p threads"), monitor from the calling
+//! thread, and — when a `dnf_timeout` is configured — abort any registered
+//! barriers and raise the shared stop flag if the run wedges. That is what
+//! turns "a failed thread deadlocks the Barrier algorithm" (Fig 9) into a
+//! recordable DNF instead of a hung benchmark harness.
+
+use crate::sync::barrier::SenseBarrier;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Outcome of a pool run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolOutcome {
+    /// The watchdog fired: the run did not finish on its own.
+    pub dnf: bool,
+}
+
+/// Spawn `threads` workers running `work(tid, stop)`; monitor from the
+/// calling thread.
+///
+/// * `stop` is a cooperative cancellation flag — workers must poll it in
+///   their outer loop (non-blocking variants) so the watchdog can cut
+///   livelocks (e.g. No-Sync waiting on a crashed peer's error slot).
+/// * `barriers` are aborted on timeout so blocking variants unwind too.
+/// * Worker panics propagate after all workers are joined.
+pub fn run_workers<F>(
+    threads: usize,
+    dnf_timeout: Option<Duration>,
+    barriers: &[&SenseBarrier],
+    work: F,
+) -> PoolOutcome
+where
+    F: Fn(usize, &AtomicBool) + Sync,
+{
+    assert!(threads > 0);
+    let stop = AtomicBool::new(false);
+    let finished = AtomicUsize::new(0);
+    let dnf = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for tid in 0..threads {
+            let work = &work;
+            let stop = &stop;
+            let finished = &finished;
+            s.spawn(move || {
+                work(tid, stop);
+                finished.fetch_add(1, Ordering::AcqRel);
+            });
+        }
+        if let Some(limit) = dnf_timeout {
+            let deadline = Instant::now() + limit;
+            while finished.load(Ordering::Acquire) < threads {
+                if Instant::now() >= deadline {
+                    dnf.store(true, Ordering::Release);
+                    stop.store(true, Ordering::Release);
+                    for b in barriers {
+                        b.abort();
+                    }
+                    break;
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        // scope joins all workers here; after an abort they unwind quickly
+    });
+    PoolOutcome { dnf: dnf.load(Ordering::Acquire) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn all_workers_run_with_distinct_ids() {
+        let seen = AtomicUsize::new(0);
+        let out = run_workers(4, None, &[], |tid, _stop| {
+            seen.fetch_add(1 << tid, Ordering::SeqCst);
+        });
+        assert!(!out.dnf);
+        assert_eq!(seen.load(Ordering::SeqCst), 0b1111);
+    }
+
+    #[test]
+    fn watchdog_cuts_livelock_and_reports_dnf() {
+        let out = run_workers(
+            2,
+            Some(Duration::from_millis(50)),
+            &[],
+            |tid, stop| {
+                if tid == 0 {
+                    return; // "crashed" worker
+                }
+                // live worker spins until the watchdog stops it
+                while !stop.load(Ordering::Acquire) {
+                    std::hint::spin_loop();
+                    std::thread::yield_now();
+                }
+            },
+        );
+        assert!(out.dnf);
+    }
+
+    #[test]
+    fn watchdog_aborts_barriers() {
+        let barrier = SenseBarrier::new(2);
+        let out = run_workers(
+            2,
+            Some(Duration::from_millis(50)),
+            &[&barrier],
+            |tid, _stop| {
+                if tid == 0 {
+                    return; // never arrives at the barrier
+                }
+                let mut w = barrier.waiter();
+                let r = w.wait();
+                assert!(r.is_aborted());
+            },
+        );
+        assert!(out.dnf);
+    }
+
+    #[test]
+    fn fast_completion_does_not_dnf() {
+        let out = run_workers(3, Some(Duration::from_secs(5)), &[], |_tid, _stop| {
+            std::thread::sleep(Duration::from_millis(5));
+        });
+        assert!(!out.dnf);
+    }
+
+    #[test]
+    fn no_timeout_waits_for_everyone() {
+        let counter = AtomicUsize::new(0);
+        let out = run_workers(3, None, &[], |_tid, _stop| {
+            std::thread::sleep(Duration::from_millis(20));
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(!out.dnf);
+        assert_eq!(counter.load(Ordering::SeqCst), 3);
+    }
+}

@@ -1,0 +1,182 @@
+//! Deterministic fault injection — the substrate behind the paper's two
+//! case studies (§5.3):
+//!
+//! * **Sleeping variants** (Fig 8): "predetermined steps of calling sleep
+//!   function to threads during selected iterations" — model a straggler.
+//! * **Failing variants** (Fig 9): "failures to the threads were added
+//!   deterministically during the end of the initial iteration" — model a
+//!   crashed thread.
+//!
+//! Workers consult [`FaultPlan::action`] at the top of every outer
+//! iteration; faults therefore land at iteration boundaries, matching the
+//! paper's methodology (and the commit-window caveat documented in
+//! [`crate::sync::cas_cell`]).
+
+use std::time::Duration;
+
+/// What a worker must do at an iteration boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Keep computing.
+    None,
+    /// Sleep for the given duration, then continue (straggler).
+    Sleep(Duration),
+    /// Stop participating immediately (crash).
+    Fail,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct SleepSpec {
+    thread: usize,
+    iteration: u64,
+    duration: Duration,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct FailSpec {
+    thread: usize,
+    iteration: u64,
+}
+
+/// A deterministic schedule of sleeps and failures.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    sleeps: Vec<SleepSpec>,
+    failures: Vec<FailSpec>,
+}
+
+impl FaultPlan {
+    /// The empty plan (no faults).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Add a sleep for `thread` at the start of `iteration`.
+    pub fn sleep_at(mut self, thread: usize, iteration: u64, duration: Duration) -> Self {
+        self.sleeps.push(SleepSpec { thread, iteration, duration });
+        self
+    }
+
+    /// Add a crash for `thread` at the start of `iteration` (iteration 1 =
+    /// "end of the initial iteration" in the paper's phrasing).
+    pub fn fail_at(mut self, thread: usize, iteration: u64) -> Self {
+        self.failures.push(FailSpec { thread, iteration });
+        self
+    }
+
+    /// Crash the first `k` worker threads at the end of iteration 0 —
+    /// exactly the Fig 9 scenario.
+    pub fn fail_first_k(k: usize) -> Self {
+        let mut plan = Self::none();
+        for t in 0..k {
+            plan = plan.fail_at(t, 1);
+        }
+        plan
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sleeps.is_empty() && self.failures.is_empty()
+    }
+
+    pub fn has_failures(&self) -> bool {
+        !self.failures.is_empty()
+    }
+
+    /// Number of distinct threads scheduled to fail.
+    pub fn failing_threads(&self) -> usize {
+        let mut t: Vec<usize> = self.failures.iter().map(|f| f.thread).collect();
+        t.sort_unstable();
+        t.dedup();
+        t.len()
+    }
+
+    /// Decide the action for `thread` entering `iteration`. Failure wins
+    /// over sleep if both are scheduled at the same point.
+    pub fn action(&self, thread: usize, iteration: u64) -> FaultAction {
+        if self
+            .failures
+            .iter()
+            .any(|f| f.thread == thread && f.iteration == iteration)
+        {
+            return FaultAction::Fail;
+        }
+        if let Some(s) = self
+            .sleeps
+            .iter()
+            .find(|s| s.thread == thread && s.iteration == iteration)
+        {
+            return FaultAction::Sleep(s.duration);
+        }
+        FaultAction::None
+    }
+
+    /// Apply the action in-place: sleeps block the calling thread; returns
+    /// `true` when the thread must die.
+    pub fn apply(&self, thread: usize, iteration: u64) -> bool {
+        match self.action(thread, iteration) {
+            FaultAction::None => false,
+            FaultAction::Sleep(d) => {
+                std::thread::sleep(d);
+                false
+            }
+            FaultAction::Fail => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_never_acts() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        for t in 0..4 {
+            for i in 0..10 {
+                assert_eq!(p.action(t, i), FaultAction::None);
+            }
+        }
+    }
+
+    #[test]
+    fn sleep_targets_exact_thread_and_iteration() {
+        let p = FaultPlan::none().sleep_at(2, 5, Duration::from_millis(10));
+        assert_eq!(p.action(2, 5), FaultAction::Sleep(Duration::from_millis(10)));
+        assert_eq!(p.action(2, 4), FaultAction::None);
+        assert_eq!(p.action(1, 5), FaultAction::None);
+    }
+
+    #[test]
+    fn fail_beats_sleep() {
+        let p = FaultPlan::none()
+            .sleep_at(0, 1, Duration::from_secs(1))
+            .fail_at(0, 1);
+        assert_eq!(p.action(0, 1), FaultAction::Fail);
+    }
+
+    #[test]
+    fn fail_first_k_schedules_k_threads() {
+        let p = FaultPlan::fail_first_k(3);
+        assert_eq!(p.failing_threads(), 3);
+        assert_eq!(p.action(0, 1), FaultAction::Fail);
+        assert_eq!(p.action(2, 1), FaultAction::Fail);
+        assert_eq!(p.action(3, 1), FaultAction::None);
+        assert_eq!(p.action(0, 0), FaultAction::None);
+    }
+
+    #[test]
+    fn apply_sleep_actually_sleeps() {
+        let p = FaultPlan::none().sleep_at(0, 0, Duration::from_millis(25));
+        let t0 = std::time::Instant::now();
+        assert!(!p.apply(0, 0));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn apply_fail_returns_true() {
+        let p = FaultPlan::none().fail_at(1, 2);
+        assert!(p.apply(1, 2));
+        assert!(!p.apply(1, 1));
+    }
+}

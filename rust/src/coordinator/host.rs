@@ -1,0 +1,77 @@
+//! Host introspection for reproducibility records: every report in
+//! EXPERIMENTS.md carries the parallelism and platform it was measured on,
+//! because the paper's absolute numbers come from a 56-core Xeon and ours
+//! come from whatever this container gives us.
+
+/// Host description embedded in report notes.
+#[derive(Debug, Clone)]
+pub struct HostInfo {
+    pub available_parallelism: usize,
+    pub os: String,
+    pub arch: String,
+}
+
+impl HostInfo {
+    pub fn detect() -> Self {
+        Self {
+            available_parallelism: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+        }
+    }
+
+    /// Thread counts to sweep in the Fig 3/4 reproduction: powers of two up
+    /// to 2× the host parallelism (the paper sweeps 1..56; oversubscribing
+    /// 2× shows the same flattening shape on small hosts).
+    pub fn thread_sweep(&self) -> Vec<usize> {
+        let mut v = vec![1usize];
+        let cap = (self.available_parallelism * 2).max(8).min(64);
+        let mut t = 2;
+        while t <= cap {
+            v.push(t);
+            t *= 2;
+        }
+        v
+    }
+
+    /// Default thread count for fixed-thread figures (the paper pins 56).
+    pub fn default_threads(&self) -> usize {
+        self.available_parallelism.clamp(1, 64)
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "host: {} {}, {} hardware threads (paper: 56-core Xeon E5-2660 v4)",
+            self.os, self.arch, self.available_parallelism
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detect_gives_sane_values() {
+        let h = HostInfo::detect();
+        assert!(h.available_parallelism >= 1);
+        assert!(!h.os.is_empty());
+        assert!(!h.arch.is_empty());
+    }
+
+    #[test]
+    fn sweep_starts_at_one_and_is_increasing() {
+        let h = HostInfo { available_parallelism: 4, os: "t".into(), arch: "t".into() };
+        let s = h.thread_sweep();
+        assert_eq!(s[0], 1);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        assert!(s.contains(&8));
+    }
+
+    #[test]
+    fn describe_mentions_paper_testbed() {
+        assert!(HostInfo::detect().describe().contains("56-core"));
+    }
+}

@@ -1,0 +1,110 @@
+//! Per-run telemetry: per-thread iteration counters and phase timers.
+//!
+//! The paper reports per-variant iteration counts (Fig 7) and the speedup
+//! argument hinges on *where time goes* (compute vs. barrier wait); this
+//! module provides the shared counters the workers bump and the harness
+//! reads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// One slot per worker thread; counters are relaxed (telemetry only).
+pub struct RunMetrics {
+    iterations: Vec<AtomicU64>,
+    edges_processed: Vec<AtomicU64>,
+    vertices_skipped: Vec<AtomicU64>,
+    started: Instant,
+}
+
+impl RunMetrics {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            iterations: (0..threads).map(|_| AtomicU64::new(0)).collect(),
+            edges_processed: (0..threads).map(|_| AtomicU64::new(0)).collect(),
+            vertices_skipped: (0..threads).map(|_| AtomicU64::new(0)).collect(),
+            started: Instant::now(),
+        }
+    }
+
+    #[inline]
+    pub fn bump_iteration(&self, thread: usize) {
+        self.iterations[thread].fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add_edges(&self, thread: usize, count: u64) {
+        self.edges_processed[thread].fetch_add(count, Ordering::Relaxed);
+    }
+
+    /// Perforation variants count vertices they froze (node-level
+    /// convergence savings).
+    #[inline]
+    pub fn add_skipped(&self, thread: usize, count: u64) {
+        self.vertices_skipped[thread].fetch_add(count, Ordering::Relaxed);
+    }
+
+    pub fn iterations_per_thread(&self) -> Vec<u64> {
+        self.iterations.iter().map(|a| a.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn max_iterations(&self) -> u64 {
+        self.iterations_per_thread().into_iter().max().unwrap_or(0)
+    }
+
+    pub fn total_edges(&self) -> u64 {
+        self.edges_processed.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn total_skipped(&self) -> u64 {
+        self.vertices_skipped.iter().map(|a| a.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_per_thread() {
+        let m = RunMetrics::new(3);
+        m.bump_iteration(0);
+        m.bump_iteration(0);
+        m.bump_iteration(2);
+        m.add_edges(1, 100);
+        m.add_edges(1, 50);
+        m.add_skipped(2, 7);
+        assert_eq!(m.iterations_per_thread(), vec![2, 0, 1]);
+        assert_eq!(m.max_iterations(), 2);
+        assert_eq!(m.total_edges(), 150);
+        assert_eq!(m.total_skipped(), 7);
+    }
+
+    #[test]
+    fn concurrent_bumps_are_not_lost() {
+        let m = RunMetrics::new(4);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let m = &m;
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.bump_iteration(t);
+                        m.add_edges(t, 2);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.iterations_per_thread(), vec![1000; 4]);
+        assert_eq!(m.total_edges(), 8000);
+    }
+
+    #[test]
+    fn elapsed_grows() {
+        let m = RunMetrics::new(1);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(m.elapsed_secs() > 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Execution coordination: the worker pool all parallel variants run on,
+//! deterministic fault injection (the paper's sleeping/failing case
+//! studies), run metrics, and host introspection.
+
+pub mod executor;
+pub mod faults;
+pub mod host;
+pub mod metrics;
+
+pub use executor::run_workers;
+pub use faults::{FaultAction, FaultPlan};

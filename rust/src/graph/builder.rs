@@ -1,0 +1,210 @@
+//! Edge-list → CSR conversion.
+//!
+//! Builds the forward CSR, the transpose, and the push→pull `offset_list`
+//! in three counting-sort passes — O(n + m), no comparison sort, matching
+//! the `ConvertCsr` preprocessing step every algorithm in the paper starts
+//! with.
+
+use crate::graph::{Csr, VertexId};
+
+/// Incremental builder for directed graphs.
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    n: usize,
+    src: Vec<VertexId>,
+    dst: Vec<VertexId>,
+    dedup: bool,
+}
+
+impl GraphBuilder {
+    pub fn new(n: usize) -> Self {
+        assert!(n <= VertexId::MAX as usize, "vertex count exceeds id width");
+        Self { n, src: Vec::new(), dst: Vec::new(), dedup: false }
+    }
+
+    /// Remove duplicate edges and self-loops during `build` (SNAP web graphs
+    /// contain both; the paper's CSR conversion keeps the graph simple).
+    pub fn dedup(mut self, yes: bool) -> Self {
+        self.dedup = yes;
+        self
+    }
+
+    pub fn edge(&mut self, u: VertexId, v: VertexId) -> &mut Self {
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n);
+        self.src.push(u);
+        self.dst.push(v);
+        self
+    }
+
+    pub fn edges(mut self, list: &[(VertexId, VertexId)]) -> Self {
+        self.src.reserve(list.len());
+        self.dst.reserve(list.len());
+        for &(u, v) in list {
+            self.edge(u, v);
+        }
+        self
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.src.len()
+    }
+
+    /// Consume the builder and produce a validated [`Csr`].
+    pub fn build(mut self, name: &str) -> Csr {
+        let n = self.n;
+
+        if self.dedup {
+            self.dedup_in_place();
+        }
+        let m = self.src.len();
+
+        // Pass 1: counting sort edges by source → forward CSR.
+        let mut out_offsets = vec![0usize; n + 1];
+        for &u in &self.src {
+            out_offsets[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            out_offsets[i + 1] += out_offsets[i];
+        }
+        let mut out_edges = vec![0 as VertexId; m];
+        {
+            let mut cursor = out_offsets[..n].to_vec();
+            for i in 0..m {
+                let u = self.src[i] as usize;
+                out_edges[cursor[u]] = self.dst[i];
+                cursor[u] += 1;
+            }
+        }
+
+        // Pass 2: counting sort by destination → transpose, and record for
+        // each forward edge slot which in-slot it landed in (offset_list).
+        let mut in_offsets = vec![0usize; n + 1];
+        for &v in &out_edges {
+            in_offsets[v as usize + 1] += 1;
+        }
+        for i in 0..n {
+            in_offsets[i + 1] += in_offsets[i];
+        }
+        let mut in_edges = vec![0 as VertexId; m];
+        let mut offset_list = vec![0usize; m];
+        {
+            let mut cursor = in_offsets[..n].to_vec();
+            for u in 0..n {
+                for e in out_offsets[u]..out_offsets[u + 1] {
+                    let v = out_edges[e] as usize;
+                    in_edges[cursor[v]] = u as VertexId;
+                    offset_list[e] = cursor[v];
+                    cursor[v] += 1;
+                }
+            }
+        }
+
+        let g = Csr::from_parts(
+            n,
+            out_offsets,
+            out_edges,
+            in_offsets,
+            in_edges,
+            offset_list,
+            name.to_string(),
+        );
+        debug_assert_eq!(g.validate(), Ok(()));
+        g
+    }
+
+    fn dedup_in_place(&mut self) {
+        let mut pairs: Vec<(VertexId, VertexId)> = self
+            .src
+            .iter()
+            .zip(&self.dst)
+            .filter(|(u, v)| u != v)
+            .map(|(&u, &v)| (u, v))
+            .collect();
+        pairs.sort_unstable();
+        pairs.dedup();
+        self.src = pairs.iter().map(|p| p.0).collect();
+        self.dst = pairs.iter().map(|p| p.1).collect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(3).build("empty");
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.validate(), Ok(()));
+        assert_eq!(g.dangling_count(), 3);
+    }
+
+    #[test]
+    fn single_vertex_no_edges() {
+        let g = GraphBuilder::new(1).build("one");
+        assert_eq!(g.num_vertices(), 1);
+        assert_eq!(g.out_degree(0), 0);
+    }
+
+    #[test]
+    fn parallel_edges_kept_without_dedup() {
+        let g = GraphBuilder::new(2).edges(&[(0, 1), (0, 1)]).build("multi");
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.out_degree(0), 2);
+    }
+
+    #[test]
+    fn dedup_removes_duplicates_and_self_loops() {
+        let g = GraphBuilder::new(3)
+            .dedup(true)
+            .edges(&[(0, 1), (0, 1), (1, 1), (2, 0), (2, 0), (2, 2)])
+            .build("dedup");
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.out_neighbors(0), &[1]);
+        assert_eq!(g.out_neighbors(2), &[0]);
+        assert_eq!(g.out_degree(1), 0);
+    }
+
+    #[test]
+    fn transpose_is_consistent() {
+        let edges = [(0u32, 1u32), (0, 2), (1, 2), (2, 0), (3, 2), (3, 0)];
+        let g = GraphBuilder::new(4).edges(&edges).build("t");
+        // every forward edge appears exactly once in the transpose
+        let mut fwd: Vec<(u32, u32)> = Vec::new();
+        for u in 0..4u32 {
+            for &v in g.out_neighbors(u) {
+                fwd.push((u, v));
+            }
+        }
+        let mut rev: Vec<(u32, u32)> = Vec::new();
+        for v in 0..4u32 {
+            for &u in g.in_neighbors(v) {
+                rev.push((u, v));
+            }
+        }
+        fwd.sort_unstable();
+        rev.sort_unstable();
+        assert_eq!(fwd, rev);
+    }
+
+    #[test]
+    fn out_neighbors_preserve_insertion_grouping() {
+        // counting sort is stable in source order
+        let g = GraphBuilder::new(3).edges(&[(0, 2), (0, 1), (1, 0)]).build("s");
+        assert_eq!(g.out_neighbors(0), &[2, 1]);
+    }
+
+    #[test]
+    fn validate_full_on_larger_random_graph() {
+        use crate::util::rng::Xoshiro256pp;
+        let mut r = Xoshiro256pp::seed_from_u64(1);
+        let n = 500;
+        let mut b = GraphBuilder::new(n);
+        for _ in 0..5000 {
+            b.edge(r.next_below(n as u64) as u32, r.next_below(n as u64) as u32);
+        }
+        let g = b.build("rand");
+        assert_eq!(g.validate(), Ok(()));
+    }
+}

@@ -1,0 +1,225 @@
+//! Chain-node detection — STIC-D technique 3 (paper §3): "if a set of
+//! nodes form a chain, each node has only one incoming edge and one
+//! outgoing edge, the PageRank of a vertex with such a node is easy to
+//! compute".
+//!
+//! Once the head of a chain is known, every subsequent link follows in
+//! closed form:
+//!
+//! ```text
+//! pr(c_{i+1}) = (1-d)/n + d · pr(c_i) / 1
+//! ```
+//!
+//! so chain interiors can be excluded from the iteration and filled in with
+//! one sweep at the end. [`ChainSet::compute`] finds maximal chains;
+//! [`ChainSet::propagate`] performs the closed-form fill-in. The `ablation`
+//! bench reports how much of each Table-1 replica is chain-compressible
+//! (road networks: a lot; web graphs: little).
+
+use crate::graph::{Csr, VertexId};
+
+/// A maximal chain: `head` feeds `links[0]`, which feeds `links[1]`, …
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Chain {
+    /// The vertex feeding the chain (not itself a chain node).
+    pub head: VertexId,
+    /// Interior chain vertices, in flow order. Each has in-degree 1 and
+    /// out-degree 1.
+    pub links: Vec<VertexId>,
+}
+
+/// All maximal chains of a graph.
+#[derive(Debug, Clone)]
+pub struct ChainSet {
+    pub chains: Vec<Chain>,
+    /// `true` for vertices that are interior links of some chain.
+    pub is_link: Vec<bool>,
+}
+
+impl ChainSet {
+    /// A vertex is a chain link iff it has exactly one in-edge and one
+    /// out-edge, and is not a self-loop.
+    pub fn compute(g: &Csr) -> Self {
+        let n = g.num_vertices();
+        let link = |u: VertexId| -> bool {
+            g.in_degree(u) == 1 && g.out_degree(u) == 1 && g.in_neighbors(u)[0] != u
+        };
+        let mut is_link = vec![false; n];
+        for u in 0..n as VertexId {
+            is_link[u as usize] = link(u);
+        }
+        let mut chains = Vec::new();
+        let mut claimed = vec![false; n];
+        for u in 0..n as VertexId {
+            // chain starters: link whose predecessor is NOT a link
+            if !is_link[u as usize] || claimed[u as usize] {
+                continue;
+            }
+            let pred = g.in_neighbors(u)[0];
+            if is_link[pred as usize] {
+                continue; // interior, will be reached from its starter
+            }
+            let mut links = vec![u];
+            claimed[u as usize] = true;
+            let mut cur = u;
+            loop {
+                let next = g.out_neighbors(cur)[0];
+                if !is_link[next as usize] || claimed[next as usize] {
+                    break;
+                }
+                claimed[next as usize] = true;
+                links.push(next);
+                cur = next;
+            }
+            chains.push(Chain { head: pred, links });
+        }
+        Self { chains, is_link }
+    }
+
+    /// Number of vertices whose iteration work is eliminated.
+    pub fn eliminated_vertices(&self) -> usize {
+        self.chains.iter().map(|c| c.links.len()).sum()
+    }
+
+    pub fn savings_ratio(&self, g: &Csr) -> f64 {
+        self.eliminated_vertices() as f64 / g.num_vertices().max(1) as f64
+    }
+
+    /// Closed-form fill-in: given converged ranks for non-link vertices,
+    /// rewrite every chain interior. `pr` is modified in place.
+    pub fn propagate(&self, g: &Csr, pr: &mut [f64], damping: f64) {
+        let n = g.num_vertices() as f64;
+        let base = (1.0 - damping) / n;
+        for chain in &self.chains {
+            let head_out = g.out_degree(chain.head).max(1) as f64;
+            let mut inflow = pr[chain.head as usize] / head_out;
+            for &link in &chain.links {
+                let r = base + damping * inflow;
+                pr[link as usize] = r;
+                inflow = r; // link out-degree is exactly 1
+            }
+        }
+    }
+
+    /// Soundness check for tests: every link vertex is claimed by at most
+    /// one chain and really has (in, out) degree (1, 1).
+    pub fn verify(&self, g: &Csr) -> Result<(), String> {
+        let mut seen = vec![false; g.num_vertices()];
+        for c in &self.chains {
+            let mut prev = c.head;
+            for &l in &c.links {
+                if seen[l as usize] {
+                    return Err(format!("vertex {l} in two chains"));
+                }
+                seen[l as usize] = true;
+                if g.in_degree(l) != 1 || g.out_degree(l) != 1 {
+                    return Err(format!("vertex {l} is not (1,1)-degree"));
+                }
+                if g.in_neighbors(l)[0] != prev {
+                    return Err(format!("chain broken at {l}"));
+                }
+                prev = l;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{synthetic, GraphBuilder};
+    use crate::pagerank::{seq, PrConfig};
+
+    #[test]
+    fn chain_graph_detected() {
+        // 0→1→2→3→4: vertices 1..3 are links fed by head 0 (vertex 4 is
+        // dangling: out-degree 0, not a link).
+        let g = synthetic::chain(5);
+        let cs = ChainSet::compute(&g);
+        cs.verify(&g).unwrap();
+        assert_eq!(cs.chains.len(), 1);
+        assert_eq!(cs.chains[0].head, 0);
+        assert_eq!(cs.chains[0].links, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn cycle_has_no_chain_start() {
+        // All vertices are (1,1) but there is no non-link head: the cycle
+        // is not compressible by this technique.
+        let g = synthetic::cycle(6);
+        let cs = ChainSet::compute(&g);
+        cs.verify(&g).unwrap();
+        assert!(cs.chains.is_empty());
+    }
+
+    #[test]
+    fn star_leaves_are_one_link_chains() {
+        // Each leaf has exactly one in-edge (hub) and one out-edge (hub):
+        // a 1-link chain headed by the hub, reconstructible in closed form.
+        let g = synthetic::star(8);
+        let cs = ChainSet::compute(&g);
+        cs.verify(&g).unwrap();
+        assert_eq!(cs.chains.len(), 7);
+        assert_eq!(cs.eliminated_vertices(), 7);
+        assert!(cs.chains.iter().all(|c| c.head == 0 && c.links.len() == 1));
+        // and the closed-form fill-in reproduces the iterative leaf rank
+        let cfg = PrConfig { threshold: 1e-13, ..PrConfig::default() };
+        let (want, _, _) = seq::solve(&g, &cfg);
+        let mut pr = want.clone();
+        for leaf in 1..8 {
+            pr[leaf] = -1.0;
+        }
+        cs.propagate(&g, &mut pr, cfg.damping);
+        let l1: f64 = pr.iter().zip(&want).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 < 1e-9, "star fill-in drifted: {l1}");
+    }
+
+    #[test]
+    fn branch_terminates_chain() {
+        // 0→1→2→3, plus 2→4: vertex 2 has out-degree 2, so the chain is
+        // just [1]... and 3 starts no chain (its pred 2 is not a link, but
+        // 3 itself is a link with in 1/out... 3 has out-degree 0 → not link.
+        let g = GraphBuilder::new(5)
+            .edges(&[(0, 1), (1, 2), (2, 3), (2, 4)])
+            .build("branch");
+        let cs = ChainSet::compute(&g);
+        cs.verify(&g).unwrap();
+        assert_eq!(cs.chains.len(), 1);
+        assert_eq!(cs.chains[0].links, vec![1]);
+    }
+
+    #[test]
+    fn propagate_matches_iterative_solution() {
+        // long chain hanging off a cycle: solve with seq, zero out the
+        // interior, reconstruct with propagate, compare.
+        let mut edges = vec![(0u32, 1u32), (1, 2), (2, 0)]; // cycle head
+        for i in 2..30u32 {
+            edges.push((i, i + 1)); // chain 3..30 fed by 2
+        }
+        let g = GraphBuilder::new(31).edges(&edges).build("cyclechain");
+        let cfg = PrConfig { threshold: 1e-13, ..PrConfig::default() };
+        let (want, _, _) = seq::solve(&g, &cfg);
+        let cs = ChainSet::compute(&g);
+        cs.verify(&g).unwrap();
+        assert!(cs.eliminated_vertices() >= 25);
+        let mut pr = want.clone();
+        for c in &cs.chains {
+            for &l in &c.links {
+                pr[l as usize] = -1.0; // poison
+            }
+        }
+        cs.propagate(&g, &mut pr, cfg.damping);
+        let l1: f64 = pr.iter().zip(&want).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 < 1e-9, "closed-form fill-in drifted: {l1}");
+    }
+
+    #[test]
+    fn road_replicas_are_not_chain_heavy_but_valid() {
+        let g = synthetic::road_replica(900, 5);
+        let cs = ChainSet::compute(&g);
+        cs.verify(&g).unwrap();
+        // grid vertices have degree ~4; only deleted-edge corridors chain
+        assert!(cs.savings_ratio(&g) < 0.5);
+    }
+}

@@ -1,0 +1,226 @@
+//! Compressed Sparse Row graph representation.
+//!
+//! The paper's algorithms need *both* directions:
+//!
+//! * vertex-centric pull (Algorithms 1, 3, 6): for each `u`, iterate the
+//!   **in-neighbours** `v` with `(v, u) ∈ E` and read `pr(v)/outdeg(v)`;
+//! * edge-centric push (Algorithms 2, 4): for each `u`, iterate the
+//!   **out-links** and scatter contributions.
+//!
+//! So [`Csr`] stores a forward (out) CSR, a transposed (in) CSR, the
+//! out-degree array, and — for the edge-centric contribution-list variants —
+//! the *offset list* mapping each out-edge of `u` to the slot in the
+//! destination's in-list (`offsetList` in Algorithm 2 line 11).
+
+use crate::graph::VertexId;
+
+/// Immutable CSR graph (directed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    n: usize,
+    /// Out-adjacency. `out_edges[out_offsets[u]..out_offsets[u+1]]` are the
+    /// targets of `u`'s out-links.
+    pub out_offsets: Vec<usize>,
+    pub out_edges: Vec<VertexId>,
+    /// In-adjacency (the transpose). `in_edges[in_offsets[u]..in_offsets[u+1]]`
+    /// are the sources pointing at `u`.
+    pub in_offsets: Vec<usize>,
+    pub in_edges: Vec<VertexId>,
+    /// `offset_list[e]`, for `e` indexing `out_edges`, is the position in
+    /// `in_edges` (equivalently: in the contribution list) that edge writes
+    /// to. This is what lets the push phase of Barrier-Edge store each
+    /// contribution where the pull phase of the destination will read it.
+    pub offset_list: Vec<usize>,
+    /// Human-readable dataset name (propagated into reports).
+    pub name: String,
+}
+
+impl Csr {
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Number of directed edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.out_edges.len()
+    }
+
+    #[inline]
+    pub fn out_degree(&self, u: VertexId) -> usize {
+        self.out_offsets[u as usize + 1] - self.out_offsets[u as usize]
+    }
+
+    #[inline]
+    pub fn in_degree(&self, u: VertexId) -> usize {
+        self.in_offsets[u as usize + 1] - self.in_offsets[u as usize]
+    }
+
+    /// Out-neighbours of `u`.
+    #[inline]
+    pub fn out_neighbors(&self, u: VertexId) -> &[VertexId] {
+        &self.out_edges[self.out_offsets[u as usize]..self.out_offsets[u as usize + 1]]
+    }
+
+    /// In-neighbours of `u` (sources of edges into `u`).
+    #[inline]
+    pub fn in_neighbors(&self, u: VertexId) -> &[VertexId] {
+        &self.in_edges[self.in_offsets[u as usize]..self.in_offsets[u as usize + 1]]
+    }
+
+    /// Range of `u`'s slots in the in-edge array — the contribution-list
+    /// span the edge-centric variants read in their pull phase.
+    #[inline]
+    pub fn in_slot_range(&self, u: VertexId) -> std::ops::Range<usize> {
+        self.in_offsets[u as usize]..self.in_offsets[u as usize + 1]
+    }
+
+    /// Range of `u`'s out-edge indices (indexes `out_edges`/`offset_list`).
+    #[inline]
+    pub fn out_slot_range(&self, u: VertexId) -> std::ops::Range<usize> {
+        self.out_offsets[u as usize]..self.out_offsets[u as usize + 1]
+    }
+
+    /// Vertices with no out-links (dangling): their rank mass leaks in the
+    /// paper's formulation (Eq. 1 has no dangling-mass term).
+    pub fn dangling_count(&self) -> usize {
+        (0..self.n as VertexId).filter(|&u| self.out_degree(u) == 0).count()
+    }
+
+    /// Approximate in-memory footprint in bytes (used by Table 1 replica
+    /// size reporting).
+    pub fn memory_bytes(&self) -> u64 {
+        let usz = std::mem::size_of::<usize>() as u64;
+        let vsz = std::mem::size_of::<VertexId>() as u64;
+        (self.out_offsets.len() as u64 + self.in_offsets.len() as u64 + self.offset_list.len() as u64)
+            * usz
+            + (self.out_edges.len() as u64 + self.in_edges.len() as u64) * vsz
+    }
+
+    /// Internal consistency check (used by tests and the loader).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.out_offsets.len() != self.n + 1 || self.in_offsets.len() != self.n + 1 {
+            return Err("offset arrays must have n+1 entries".into());
+        }
+        if self.out_offsets[0] != 0 || self.in_offsets[0] != 0 {
+            return Err("offsets must start at 0".into());
+        }
+        if *self.out_offsets.last().unwrap() != self.out_edges.len() {
+            return Err("out_offsets tail != edge count".into());
+        }
+        if *self.in_offsets.last().unwrap() != self.in_edges.len() {
+            return Err("in_offsets tail != edge count".into());
+        }
+        if self.out_edges.len() != self.in_edges.len() {
+            return Err("in/out edge counts differ".into());
+        }
+        if self.offset_list.len() != self.out_edges.len() {
+            return Err("offset_list length != edge count".into());
+        }
+        if !self.out_offsets.windows(2).all(|w| w[0] <= w[1])
+            || !self.in_offsets.windows(2).all(|w| w[0] <= w[1])
+        {
+            return Err("offsets must be nondecreasing".into());
+        }
+        if self.out_edges.iter().any(|&v| v as usize >= self.n)
+            || self.in_edges.iter().any(|&v| v as usize >= self.n)
+        {
+            return Err("edge endpoint out of range".into());
+        }
+        // offset_list correctness: edge e = (u -> v) must map into v's
+        // in-slot range, and the slot must name u as the source.
+        for u in 0..self.n as VertexId {
+            for e in self.out_slot_range(u) {
+                let v = self.out_edges[e];
+                let slot = self.offset_list[e];
+                if !self.in_slot_range(v).contains(&slot) {
+                    return Err(format!("offset_list[{e}] outside target range"));
+                }
+                if self.in_edges[slot] != u {
+                    return Err(format!("offset_list[{e}] slot names wrong source"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Construct from raw parts (used by the builder; validates in debug).
+    pub(crate) fn from_parts(
+        n: usize,
+        out_offsets: Vec<usize>,
+        out_edges: Vec<VertexId>,
+        in_offsets: Vec<usize>,
+        in_edges: Vec<VertexId>,
+        offset_list: Vec<usize>,
+        name: String,
+    ) -> Self {
+        let g = Self { n, out_offsets, out_edges, in_offsets, in_edges, offset_list, name };
+        debug_assert_eq!(g.validate(), Ok(()));
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::GraphBuilder;
+
+    /// 4-cycle plus a chord: 0→1→2→3→0, 0→2.
+    fn tiny() -> crate::graph::Csr {
+        GraphBuilder::new(4)
+            .edges(&[(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)])
+            .build("tiny")
+    }
+
+    #[test]
+    fn degrees_and_neighbors() {
+        let g = tiny();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 5);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.out_neighbors(0), &[1, 2]);
+        assert_eq!(g.in_degree(2), 2);
+        let mut inn = g.in_neighbors(2).to_vec();
+        inn.sort_unstable();
+        assert_eq!(inn, vec![0, 1]);
+        assert_eq!(g.dangling_count(), 0);
+    }
+
+    #[test]
+    fn validate_accepts_builder_output() {
+        assert_eq!(tiny().validate(), Ok(()));
+    }
+
+    #[test]
+    fn offset_list_connects_push_to_pull() {
+        let g = tiny();
+        // Scatter each edge's source id through offset_list, then check each
+        // vertex's in-slot range received exactly its in-neighbours.
+        let mut slots = vec![u32::MAX; g.num_edges()];
+        for u in 0..g.num_vertices() as u32 {
+            for e in g.out_slot_range(u) {
+                slots[g.offset_list[e]] = u;
+            }
+        }
+        for u in 0..g.num_vertices() as u32 {
+            let received = &slots[g.in_slot_range(u)];
+            let mut r = received.to_vec();
+            r.sort_unstable();
+            let mut expect = g.in_neighbors(u).to_vec();
+            expect.sort_unstable();
+            assert_eq!(r, expect, "vertex {u}");
+        }
+    }
+
+    #[test]
+    fn dangling_detected() {
+        let g = GraphBuilder::new(3).edges(&[(0, 2), (1, 2)]).build("dangle");
+        assert_eq!(g.dangling_count(), 1); // vertex 2 has no out-links
+    }
+
+    #[test]
+    fn memory_bytes_positive() {
+        assert!(tiny().memory_bytes() > 0);
+    }
+}

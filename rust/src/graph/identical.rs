@@ -1,0 +1,159 @@
+//! Identical-node detection — the second STIC-D technique (Garg &
+//! Kothapalli [11]) that the paper's `*-Identical` variants build on.
+//!
+//! Two vertices with the *same in-neighbour set* necessarily have the same
+//! PageRank (Eq. 1 depends only on in-neighbours), so the rank is computed
+//! once per equivalence class and broadcast to the other members, removing
+//! redundant work. The variants in `pagerank::identical` consume the
+//! [`IdenticalClasses`] produced here.
+//!
+//! Caveat reproduced from the source papers: classification must account for
+//! *out-degree-dependent* contributions only through the neighbours, so the
+//! in-neighbour *multiset* (we use the sorted list, which CSR construction
+//! makes canonical) is the class key.
+
+use crate::graph::{Csr, VertexId};
+use std::collections::HashMap;
+
+/// Partition of the vertex set into identical-PageRank classes.
+#[derive(Debug, Clone)]
+pub struct IdenticalClasses {
+    /// `class_of[u]` — dense class id for each vertex.
+    pub class_of: Vec<u32>,
+    /// One representative vertex per class (the smallest member).
+    pub representatives: Vec<VertexId>,
+    /// Members per class, representative first.
+    pub members: Vec<Vec<VertexId>>,
+}
+
+impl IdenticalClasses {
+    /// Group vertices by identical in-neighbour sets.
+    ///
+    /// O(n + m) hashing of each vertex's sorted in-list. Vertices with no
+    /// in-neighbours form one class (they all hold rank `(1-d)/n`).
+    pub fn compute(g: &Csr) -> Self {
+        let n = g.num_vertices();
+        let mut class_of = vec![u32::MAX; n];
+        let mut representatives: Vec<VertexId> = Vec::new();
+        let mut members: Vec<Vec<VertexId>> = Vec::new();
+        // Key: sorted in-neighbour list. CSR in-lists are sorted by source
+        // already (counting-sort order), so the slice is canonical.
+        let mut index: HashMap<&[VertexId], u32> = HashMap::new();
+        for u in 0..n as VertexId {
+            let key = g.in_neighbors(u);
+            match index.get(key) {
+                Some(&c) => {
+                    class_of[u as usize] = c;
+                    members[c as usize].push(u);
+                }
+                None => {
+                    let c = representatives.len() as u32;
+                    index.insert(key, c);
+                    class_of[u as usize] = c;
+                    representatives.push(u);
+                    members.push(vec![u]);
+                }
+            }
+        }
+        Self { class_of, representatives, members }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.representatives.len()
+    }
+
+    /// Count of vertices whose computation is eliminated (non-representative
+    /// members).
+    pub fn redundant_vertices(&self) -> usize {
+        self.class_of.len() - self.num_classes()
+    }
+
+    /// Fraction of vertices eliminated — the savings knob the paper's
+    /// `*-Identical` variants exploit.
+    pub fn savings_ratio(&self) -> f64 {
+        self.redundant_vertices() as f64 / self.class_of.len().max(1) as f64
+    }
+
+    /// Check soundness: every member of a class has the same in-list as its
+    /// representative. Used by the property suite.
+    pub fn verify(&self, g: &Csr) -> Result<(), String> {
+        for (c, ms) in self.members.iter().enumerate() {
+            let rep = self.representatives[c];
+            let key = g.in_neighbors(rep);
+            for &u in ms {
+                if g.in_neighbors(u) != key {
+                    return Err(format!("vertex {u} misclassified into class {c}"));
+                }
+                if self.class_of[u as usize] != c as u32 {
+                    return Err(format!("class_of[{u}] inconsistent"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{synthetic, GraphBuilder};
+
+    #[test]
+    fn star_leaves_form_one_class() {
+        // All leaves of a star have in-list {hub}.
+        let g = synthetic::star(10);
+        let cls = IdenticalClasses::compute(&g);
+        // hub's in-list is all 9 leaves → unique class; 9 leaves share one.
+        assert_eq!(cls.num_classes(), 2);
+        assert_eq!(cls.redundant_vertices(), 8);
+        cls.verify(&g).unwrap();
+    }
+
+    #[test]
+    fn cycle_has_no_identical_nodes() {
+        let g = synthetic::cycle(8);
+        let cls = IdenticalClasses::compute(&g);
+        assert_eq!(cls.num_classes(), 8);
+        assert_eq!(cls.savings_ratio(), 0.0);
+    }
+
+    #[test]
+    fn sources_share_a_class() {
+        // 0→2, 1→3: vertices 0 and 1 have empty in-lists → same class.
+        let g = GraphBuilder::new(4).edges(&[(0, 2), (1, 3)]).build("src");
+        let cls = IdenticalClasses::compute(&g);
+        assert_eq!(cls.class_of[0], cls.class_of[1]);
+        assert_ne!(cls.class_of[2], cls.class_of[3]); // in-lists {0} vs {1}
+        cls.verify(&g).unwrap();
+    }
+
+    #[test]
+    fn fan_pattern_detected() {
+        // u,v both fed by {0,1}: identical.
+        let g = GraphBuilder::new(4)
+            .edges(&[(0, 2), (1, 2), (0, 3), (1, 3)])
+            .build("fan");
+        let cls = IdenticalClasses::compute(&g);
+        assert_eq!(cls.class_of[2], cls.class_of[3]);
+        assert_eq!(cls.redundant_vertices(), 2); // {0,1} sources + {2,3}
+    }
+
+    #[test]
+    fn representatives_are_smallest_members() {
+        let g = synthetic::star(6);
+        let cls = IdenticalClasses::compute(&g);
+        for (c, ms) in cls.members.iter().enumerate() {
+            assert_eq!(cls.representatives[c], *ms.iter().min().unwrap());
+            assert_eq!(ms[0], cls.representatives[c]);
+        }
+    }
+
+    #[test]
+    fn verify_on_random_web_graph() {
+        let g = synthetic::web_replica(2000, 6, 13);
+        let cls = IdenticalClasses::compute(&g);
+        cls.verify(&g).unwrap();
+        // web graphs do contain identical pages — expect some savings
+        assert!(cls.savings_ratio() > 0.0);
+    }
+}

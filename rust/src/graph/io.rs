@@ -1,0 +1,262 @@
+//! Dataset I/O.
+//!
+//! * [`load_edge_list`] reads the SNAP plain-text edge-list format the
+//!   paper's Table-1 datasets ship in (`# comment` headers, one
+//!   whitespace-separated `src dst` pair per line, arbitrary vertex ids that
+//!   get densified).
+//! * [`load_adjacency`] reads the adjacency-list format of [21]
+//!   (`u k v1 … vk` per line).
+//! * [`save_binary`] / [`load_binary`] provide a fast binary cache so bench
+//!   runs don't re-parse text (format: magic, counts, raw arrays, LE).
+
+use crate::graph::{Csr, GraphBuilder, VertexId};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Load a SNAP-style edge list. Vertex ids are densified (SNAP files skip
+/// ids); duplicate edges and self-loops are removed to match the paper's
+/// simple-graph preprocessing.
+pub fn load_edge_list(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening edge list {}", path.display()))?;
+    let reader = BufReader::new(f);
+    let mut remap: HashMap<u64, VertexId> = HashMap::new();
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    let densify = |raw: u64, remap: &mut HashMap<u64, VertexId>| -> VertexId {
+        let next = remap.len() as VertexId;
+        *remap.entry(raw).or_insert(next)
+    };
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (a, b) = match (it.next(), it.next()) {
+            (Some(a), Some(b)) => (a, b),
+            _ => bail!("line {}: expected `src dst`", lineno + 1),
+        };
+        let u: u64 = a.parse().with_context(|| format!("line {}: bad src", lineno + 1))?;
+        let v: u64 = b.parse().with_context(|| format!("line {}: bad dst", lineno + 1))?;
+        let u = densify(u, &mut remap);
+        let v = densify(v, &mut remap);
+        edges.push((u, v));
+    }
+    let n = remap.len();
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "edge-list".into());
+    Ok(GraphBuilder::new(n).dedup(true).edges(&edges).build(&name))
+}
+
+/// Load the adjacency-list format of Luo & Liu [21]: each line
+/// `u k v1 v2 … vk` lists `u`'s out-neighbours. First line may be `n m`.
+pub fn load_adjacency(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening adjacency list {}", path.display()))?;
+    let reader = BufReader::new(f);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut max_v: u64 = 0;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let nums: Vec<u64> = line
+            .split_whitespace()
+            .map(|t| t.parse::<u64>())
+            .collect::<std::result::Result<_, _>>()
+            .with_context(|| format!("line {}: non-numeric token", lineno + 1))?;
+        if lineno == 0 && nums.len() == 2 {
+            // optional `n m` header
+            max_v = max_v.max(nums[0].saturating_sub(1));
+            continue;
+        }
+        if nums.is_empty() {
+            continue;
+        }
+        let u = nums[0];
+        max_v = max_v.max(u);
+        let k = if nums.len() >= 2 { nums[1] as usize } else { 0 };
+        if nums.len() != k + 2 {
+            bail!("line {}: declared degree {} but {} listed", lineno + 1, k, nums.len().saturating_sub(2));
+        }
+        for &v in &nums[2..] {
+            max_v = max_v.max(v);
+            edges.push((u as VertexId, v as VertexId));
+        }
+    }
+    let n = (max_v + 1) as usize;
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "adjacency".into());
+    Ok(GraphBuilder::new(n).dedup(true).edges(&edges).build(&name))
+}
+
+const MAGIC: &[u8; 8] = b"PRNBCSR1";
+
+/// Write the binary cache format.
+pub fn save_binary(g: &Csr, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    let name = g.name.as_bytes();
+    w.write_all(&(name.len() as u64).to_le_bytes())?;
+    w.write_all(name)?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    write_usizes(&mut w, &g.out_offsets)?;
+    write_u32s(&mut w, &g.out_edges)?;
+    write_usizes(&mut w, &g.in_offsets)?;
+    write_u32s(&mut w, &g.in_edges)?;
+    write_usizes(&mut w, &g.offset_list)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the binary cache format (validates the result).
+pub fn load_binary(path: &Path) -> Result<Csr> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a pagerank-nb binary graph", path.display());
+    }
+    let name_len = read_u64(&mut r)? as usize;
+    let mut name_bytes = vec![0u8; name_len];
+    r.read_exact(&mut name_bytes)?;
+    let name = String::from_utf8(name_bytes).context("graph name not utf-8")?;
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u64(&mut r)? as usize;
+    let out_offsets = read_usizes(&mut r, n + 1)?;
+    let out_edges = read_u32s(&mut r, m)?;
+    let in_offsets = read_usizes(&mut r, n + 1)?;
+    let in_edges = read_u32s(&mut r, m)?;
+    let offset_list = read_usizes(&mut r, m)?;
+    let g = Csr::from_parts(n, out_offsets, out_edges, in_offsets, in_edges, offset_list, name);
+    g.validate().map_err(|e| anyhow::anyhow!("corrupt binary graph: {e}"))?;
+    Ok(g)
+}
+
+fn write_usizes<W: Write>(w: &mut W, xs: &[usize]) -> Result<()> {
+    for &x in xs {
+        w.write_all(&(x as u64).to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn write_u32s<W: Write>(w: &mut W, xs: &[u32]) -> Result<()> {
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_usizes<R: Read>(r: &mut R, count: usize) -> Result<Vec<usize>> {
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        out.push(read_u64(r)? as usize);
+    }
+    Ok(out)
+}
+
+fn read_u32s<R: Read>(r: &mut R, count: usize) -> Result<Vec<u32>> {
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)?;
+        out.push(u32::from_le_bytes(b));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pagerank_nb_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn edge_list_roundtrip_with_comments_and_gaps() {
+        let p = tmpfile("snap.txt");
+        std::fs::write(
+            &p,
+            "# Directed graph\n# FromNodeId ToNodeId\n10 20\n20 30\n30 10\n10 30\n\n",
+        )
+        .unwrap();
+        let g = load_edge_list(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3); // ids densified
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.validate(), Ok(()));
+    }
+
+    #[test]
+    fn edge_list_dedups() {
+        let p = tmpfile("dups.txt");
+        std::fs::write(&p, "0 1\n0 1\n1 1\n").unwrap();
+        let g = load_edge_list(&p).unwrap();
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn edge_list_rejects_garbage() {
+        let p = tmpfile("bad.txt");
+        std::fs::write(&p, "0 x\n").unwrap();
+        assert!(load_edge_list(&p).is_err());
+        std::fs::write(&p, "0\n").unwrap();
+        assert!(load_edge_list(&p).is_err());
+    }
+
+    #[test]
+    fn adjacency_format() {
+        let p = tmpfile("adj.txt");
+        std::fs::write(&p, "0 2 1 2\n1 1 2\n2 0\n").unwrap();
+        let g = load_adjacency(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.out_degree(2), 0);
+    }
+
+    #[test]
+    fn adjacency_rejects_wrong_degree() {
+        let p = tmpfile("adjbad.txt");
+        std::fs::write(&p, "0 3 1 2\n").unwrap();
+        assert!(load_adjacency(&p).is_err());
+    }
+
+    #[test]
+    fn binary_roundtrip_preserves_graph() {
+        let g = crate::graph::synthetic::web_replica(500, 4, 7);
+        let p = tmpfile("g.bin");
+        save_binary(&g, &p).unwrap();
+        let g2 = load_binary(&p).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn binary_rejects_bad_magic() {
+        let p = tmpfile("notagraph.bin");
+        std::fs::write(&p, b"NOTMAGIC________").unwrap();
+        assert!(load_binary(&p).is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! Graph substrate: the CSR representation the paper's algorithms consume,
+//! builders and loaders for real datasets (SNAP edge lists), synthetic
+//! generators (RMAT and Table-1 replica families), static partitioning and
+//! the identical-node preprocessing from STIC-D.
+
+pub mod builder;
+pub mod chains;
+pub mod csr;
+pub mod identical;
+pub mod io;
+pub mod partition;
+pub mod properties;
+pub mod rmat;
+pub mod scc;
+pub mod synthetic;
+
+pub use builder::GraphBuilder;
+pub use csr::Csr;
+pub use partition::{PartitionPolicy, Partitions};
+
+/// Vertex id type. `u32` halves the memory traffic of the gather loop versus
+/// `usize` — the hot path is memory-bound, so this matters (see
+/// EXPERIMENTS.md §Perf).
+pub type VertexId = u32;

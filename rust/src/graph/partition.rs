@@ -1,0 +1,197 @@
+//! Static load allocation: split the vertex set into `p` contiguous
+//! partitions, one per thread (paper §4.1: "vertices are divided into p
+//! equal-sized partitions … static load allocation").
+//!
+//! Two policies:
+//! * [`PartitionPolicy::VertexBalanced`] — the paper's scheme: equal vertex
+//!   counts regardless of degree.
+//! * [`PartitionPolicy::EdgeBalanced`] — equal *work* (in-edges), which the
+//!   ablation bench (`benches/ablation.rs`) compares against; on skewed
+//!   graphs this is what keeps barrier variants from being dragged down by
+//!   one heavy partition.
+
+use crate::graph::{Csr, VertexId};
+
+/// How to split the vertex set.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionPolicy {
+    VertexBalanced,
+    EdgeBalanced,
+}
+
+impl std::fmt::Display for PartitionPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionPolicy::VertexBalanced => f.write_str("vertex-balanced"),
+            PartitionPolicy::EdgeBalanced => f.write_str("edge-balanced"),
+        }
+    }
+}
+
+/// The result: `p` contiguous half-open vertex ranges covering `0..n`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partitions {
+    bounds: Vec<usize>, // len p+1, bounds[0]=0, bounds[p]=n
+    pub policy: PartitionPolicy,
+}
+
+impl Partitions {
+    /// Partition `g` into `p` ranges under `policy`.
+    pub fn new(g: &Csr, p: usize, policy: PartitionPolicy) -> Self {
+        assert!(p > 0, "need at least one partition");
+        let n = g.num_vertices();
+        let mut bounds = Vec::with_capacity(p + 1);
+        match policy {
+            PartitionPolicy::VertexBalanced => {
+                // ceil-spread: first (n % p) parts get one extra vertex
+                bounds.push(0);
+                let base = n / p;
+                let extra = n % p;
+                let mut at = 0;
+                for i in 0..p {
+                    at += base + usize::from(i < extra);
+                    bounds.push(at);
+                }
+            }
+            PartitionPolicy::EdgeBalanced => {
+                // Greedy prefix cut at ~m/p in-edges per part. The pull-
+                // direction work of vertex u is its in-degree.
+                let m = g.num_edges();
+                let target = (m as f64 / p as f64).max(1.0);
+                bounds.push(0);
+                let mut acc = 0usize;
+                let mut cuts_made = 0usize;
+                for u in 0..n {
+                    acc += g.in_degree(u as VertexId);
+                    // leave enough vertices for remaining cuts
+                    let remaining_cuts = p - 1 - cuts_made;
+                    let remaining_vertices = n - (u + 1);
+                    if cuts_made < p - 1
+                        && (acc as f64 >= target * (cuts_made + 1) as f64
+                            || remaining_vertices == remaining_cuts)
+                    {
+                        bounds.push(u + 1);
+                        cuts_made += 1;
+                    }
+                }
+                while bounds.len() < p {
+                    bounds.push(n);
+                }
+                bounds.push(n);
+            }
+        }
+        debug_assert_eq!(bounds.len(), p + 1);
+        Self { bounds, policy }
+    }
+
+    pub fn count(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Vertex range of partition `i`.
+    pub fn range(&self, i: usize) -> std::ops::Range<VertexId> {
+        self.bounds[i] as VertexId..self.bounds[i + 1] as VertexId
+    }
+
+    /// Which partition owns vertex `u` (binary search).
+    pub fn owner(&self, u: VertexId) -> usize {
+        match self.bounds.binary_search(&(u as usize)) {
+            Ok(i) => i.min(self.count() - 1),
+            Err(i) => i - 1,
+        }
+    }
+
+    /// In-edge work per partition (for imbalance reporting).
+    pub fn edge_loads(&self, g: &Csr) -> Vec<usize> {
+        (0..self.count())
+            .map(|i| self.range(i).map(|u| g.in_degree(u)).sum())
+            .collect()
+    }
+
+    /// max/mean edge-load imbalance factor (1.0 = perfect).
+    pub fn imbalance(&self, g: &Csr) -> f64 {
+        let loads = self.edge_loads(g);
+        let max = *loads.iter().max().unwrap() as f64;
+        let mean = loads.iter().sum::<usize>() as f64 / loads.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic;
+
+    fn check_cover(p: &Partitions, n: usize) {
+        let mut seen = vec![false; n];
+        for i in 0..p.count() {
+            for u in p.range(i) {
+                assert!(!seen[u as usize], "vertex {u} in two partitions");
+                seen[u as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "not all vertices covered");
+    }
+
+    #[test]
+    fn vertex_balanced_covers_and_balances() {
+        let g = synthetic::cycle(103);
+        let p = Partitions::new(&g, 8, PartitionPolicy::VertexBalanced);
+        check_cover(&p, 103);
+        let sizes: Vec<usize> = (0..8).map(|i| p.range(i).len()).collect();
+        assert!(sizes.iter().all(|&s| s == 12 || s == 13), "{sizes:?}");
+    }
+
+    #[test]
+    fn more_partitions_than_vertices() {
+        let g = synthetic::cycle(3);
+        let p = Partitions::new(&g, 8, PartitionPolicy::VertexBalanced);
+        check_cover(&p, 3);
+        assert_eq!(p.count(), 8); // some ranges empty, but all valid
+    }
+
+    #[test]
+    fn edge_balanced_covers_all() {
+        let g = synthetic::web_replica(3000, 8, 11);
+        for parts in [1, 2, 4, 7, 16] {
+            let p = Partitions::new(&g, parts, PartitionPolicy::EdgeBalanced);
+            check_cover(&p, g.num_vertices());
+        }
+    }
+
+    #[test]
+    fn edge_balanced_beats_vertex_balanced_on_skew() {
+        let g = synthetic::web_replica(5000, 8, 3);
+        let vb = Partitions::new(&g, 8, PartitionPolicy::VertexBalanced);
+        let eb = Partitions::new(&g, 8, PartitionPolicy::EdgeBalanced);
+        assert!(
+            eb.imbalance(&g) <= vb.imbalance(&g) + 1e-9,
+            "edge-balanced {} should not exceed vertex-balanced {}",
+            eb.imbalance(&g),
+            vb.imbalance(&g)
+        );
+    }
+
+    #[test]
+    fn owner_matches_ranges() {
+        let g = synthetic::cycle(50);
+        let p = Partitions::new(&g, 7, PartitionPolicy::VertexBalanced);
+        for i in 0..p.count() {
+            for u in p.range(i) {
+                assert_eq!(p.owner(u), i, "vertex {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_partition() {
+        let g = synthetic::cycle(10);
+        let p = Partitions::new(&g, 1, PartitionPolicy::EdgeBalanced);
+        assert_eq!(p.range(0), 0..10);
+        assert_eq!(p.imbalance(&g), 1.0);
+    }
+}

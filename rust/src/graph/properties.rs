@@ -1,0 +1,115 @@
+//! Structural graph statistics for dataset reports (Table 1) and for the
+//! workload characterization in EXPERIMENTS.md.
+
+use crate::graph::{Csr, VertexId};
+
+/// Degree-distribution and connectivity summary of a graph.
+#[derive(Debug, Clone)]
+pub struct GraphStats {
+    pub vertices: usize,
+    pub edges: usize,
+    pub dangling: usize,
+    pub max_in_degree: usize,
+    pub max_out_degree: usize,
+    pub mean_degree: f64,
+    /// Gini coefficient of the in-degree distribution (0 = uniform,
+    /// → 1 = extreme hub concentration). Web replicas should be ≫ road
+    /// replicas.
+    pub in_degree_gini: f64,
+    pub memory_bytes: u64,
+}
+
+impl GraphStats {
+    pub fn compute(g: &Csr) -> Self {
+        let n = g.num_vertices();
+        let mut in_degs: Vec<usize> = (0..n as VertexId).map(|u| g.in_degree(u)).collect();
+        let max_in = in_degs.iter().copied().max().unwrap_or(0);
+        let max_out = (0..n as VertexId).map(|u| g.out_degree(u)).max().unwrap_or(0);
+        in_degs.sort_unstable();
+        let total: usize = in_degs.iter().sum();
+        let gini = if total == 0 || n == 0 {
+            0.0
+        } else {
+            // Gini = (2*Σ i*x_i)/(n*Σ x_i) - (n+1)/n, with 1-based i over
+            // the sorted values.
+            let weighted: f64 = in_degs
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| (i + 1) as f64 * x as f64)
+                .sum();
+            2.0 * weighted / (n as f64 * total as f64) - (n as f64 + 1.0) / n as f64
+        };
+        Self {
+            vertices: n,
+            edges: g.num_edges(),
+            dangling: g.dangling_count(),
+            max_in_degree: max_in,
+            max_out_degree: max_out,
+            mean_degree: g.num_edges() as f64 / n.max(1) as f64,
+            in_degree_gini: gini,
+            memory_bytes: g.memory_bytes(),
+        }
+    }
+}
+
+/// Histogram of in-degrees in power-of-two buckets (for degree-distribution
+/// plots in reports).
+pub fn in_degree_histogram(g: &Csr) -> Vec<(usize, usize)> {
+    let mut buckets: Vec<usize> = Vec::new();
+    for u in 0..g.num_vertices() as VertexId {
+        let d = g.in_degree(u);
+        let b = if d == 0 { 0 } else { (usize::BITS - d.leading_zeros()) as usize };
+        if buckets.len() <= b {
+            buckets.resize(b + 1, 0);
+        }
+        buckets[b] += 1;
+    }
+    buckets
+        .into_iter()
+        .enumerate()
+        .map(|(b, c)| (if b == 0 { 0 } else { 1 << (b - 1) }, c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic;
+
+    #[test]
+    fn stats_on_cycle_are_uniform() {
+        let s = GraphStats::compute(&synthetic::cycle(20));
+        assert_eq!(s.vertices, 20);
+        assert_eq!(s.edges, 20);
+        assert_eq!(s.dangling, 0);
+        assert_eq!(s.max_in_degree, 1);
+        assert!((s.mean_degree - 1.0).abs() < 1e-12);
+        assert!(s.in_degree_gini.abs() < 1e-9, "uniform should be gini 0");
+    }
+
+    #[test]
+    fn web_gini_exceeds_road_gini() {
+        let web = GraphStats::compute(&synthetic::web_replica(3000, 8, 1));
+        let road = GraphStats::compute(&synthetic::road_replica(3000, 1));
+        assert!(
+            web.in_degree_gini > road.in_degree_gini + 0.2,
+            "web {} vs road {}",
+            web.in_degree_gini,
+            road.in_degree_gini
+        );
+    }
+
+    #[test]
+    fn histogram_counts_all_vertices() {
+        let g = synthetic::web_replica(1000, 6, 2);
+        let h = in_degree_histogram(&g);
+        assert_eq!(h.iter().map(|&(_, c)| c).sum::<usize>(), g.num_vertices());
+    }
+
+    #[test]
+    fn star_max_degrees() {
+        let s = GraphStats::compute(&synthetic::star(11));
+        assert_eq!(s.max_in_degree, 10);
+        assert_eq!(s.max_out_degree, 10);
+    }
+}

@@ -1,0 +1,249 @@
+//! Strongly-connected-component decomposition — STIC-D technique 1
+//! (Garg & Kothapalli [11], described in the paper's §3).
+//!
+//! PageRank distributes over the condensation DAG: the rank of an SCC
+//! depends only on upstream components, so components can be solved in
+//! topological order, each as a much smaller PageRank instance with fixed
+//! inflow from already-solved predecessors. [`SccDecomposition`] computes
+//! the components (iterative Tarjan — explicit stack, safe for
+//! million-vertex road replicas) and a topological order of the
+//! condensation; [`solve_by_scc`] is the reference level-order solver used
+//! by the `ablation` bench to quantify the technique on our replicas.
+
+use crate::graph::{Csr, VertexId};
+
+/// SCC labelling + condensation topological order.
+#[derive(Debug, Clone)]
+pub struct SccDecomposition {
+    /// `comp_of[u]` — component id per vertex. Ids are in **reverse
+    /// topological order of discovery** (Tarjan property): an edge
+    /// `u → v` across components has `comp_of[u] > comp_of[v]`.
+    pub comp_of: Vec<u32>,
+    /// Members per component.
+    pub members: Vec<Vec<VertexId>>,
+}
+
+impl SccDecomposition {
+    /// Iterative Tarjan over the out-adjacency.
+    pub fn compute(g: &Csr) -> Self {
+        let n = g.num_vertices();
+        const UNSET: u32 = u32::MAX;
+        let mut index = vec![UNSET; n];
+        let mut lowlink = vec![0u32; n];
+        let mut on_stack = vec![false; n];
+        let mut comp_of = vec![UNSET; n];
+        let mut stack: Vec<VertexId> = Vec::new();
+        let mut members: Vec<Vec<VertexId>> = Vec::new();
+        let mut next_index = 0u32;
+
+        // Explicit DFS frame: (vertex, next out-edge offset to visit).
+        let mut frames: Vec<(VertexId, usize)> = Vec::new();
+        for root in 0..n as VertexId {
+            if index[root as usize] != UNSET {
+                continue;
+            }
+            frames.push((root, 0));
+            index[root as usize] = next_index;
+            lowlink[root as usize] = next_index;
+            next_index += 1;
+            stack.push(root);
+            on_stack[root as usize] = true;
+
+            while let Some(&mut (u, ref mut ei)) = frames.last_mut() {
+                let out = g.out_neighbors(u);
+                if *ei < out.len() {
+                    let v = out[*ei];
+                    *ei += 1;
+                    if index[v as usize] == UNSET {
+                        index[v as usize] = next_index;
+                        lowlink[v as usize] = next_index;
+                        next_index += 1;
+                        stack.push(v);
+                        on_stack[v as usize] = true;
+                        frames.push((v, 0));
+                    } else if on_stack[v as usize] {
+                        lowlink[u as usize] = lowlink[u as usize].min(index[v as usize]);
+                    }
+                } else {
+                    frames.pop();
+                    if let Some(&mut (parent, _)) = frames.last_mut() {
+                        lowlink[parent as usize] =
+                            lowlink[parent as usize].min(lowlink[u as usize]);
+                    }
+                    if lowlink[u as usize] == index[u as usize] {
+                        // u is an SCC root: pop the component.
+                        let cid = members.len() as u32;
+                        let mut comp = Vec::new();
+                        loop {
+                            let w = stack.pop().expect("tarjan stack underflow");
+                            on_stack[w as usize] = false;
+                            comp_of[w as usize] = cid;
+                            comp.push(w);
+                            if w == u {
+                                break;
+                            }
+                        }
+                        members.push(comp);
+                    }
+                }
+            }
+        }
+        Self { comp_of, members }
+    }
+
+    pub fn num_components(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Components in topological order (sources first): Tarjan emits them
+    /// in reverse topological order, so this is just id-descending.
+    pub fn topological_order(&self) -> impl Iterator<Item = u32> + '_ {
+        (0..self.members.len() as u32).rev()
+    }
+
+    /// Check: every cross-component edge goes from a later-emitted to an
+    /// earlier-emitted component (i.e. respects topological order).
+    pub fn verify(&self, g: &Csr) -> Result<(), String> {
+        for u in 0..g.num_vertices() as VertexId {
+            for &v in g.out_neighbors(u) {
+                let (cu, cv) = (self.comp_of[u as usize], self.comp_of[v as usize]);
+                if cu != cv && cu < cv {
+                    return Err(format!("edge {u}->{v} violates condensation order"));
+                }
+            }
+        }
+        if self.comp_of.iter().any(|&c| c == u32::MAX) {
+            return Err("vertex without component".into());
+        }
+        Ok(())
+    }
+}
+
+/// PageRank solved component-by-component in topological order; the
+/// single-component solve is plain power iteration restricted to the
+/// component with frozen inflow. Matches the global solver to `threshold`.
+pub fn solve_by_scc(g: &Csr, damping: f64, threshold: f64, max_iters: u64) -> (Vec<f64>, u64) {
+    let n = g.num_vertices();
+    if n == 0 {
+        return (Vec::new(), 0);
+    }
+    let scc = SccDecomposition::compute(g);
+    let base = (1.0 - damping) / n as f64;
+    let inv_out: Vec<f64> = (0..n as VertexId)
+        .map(|v| {
+            let od = g.out_degree(v);
+            if od == 0 {
+                0.0
+            } else {
+                1.0 / od as f64
+            }
+        })
+        .collect();
+    let mut pr = vec![1.0 / n as f64; n];
+    let mut total_iters = 0u64;
+    for cid in scc.topological_order() {
+        let comp = &scc.members[cid as usize];
+        // Inflow from other components is fixed (they are already solved
+        // or, being downstream, do not feed this component).
+        let mut iters = 0u64;
+        loop {
+            let mut err: f64 = 0.0;
+            // Jacobi step restricted to the component.
+            let snapshot: Vec<f64> = comp.iter().map(|&u| pr[u as usize]).collect();
+            for (i, &u) in comp.iter().enumerate() {
+                let mut sum = 0.0;
+                for &v in g.in_neighbors(u) {
+                    let r = if scc.comp_of[v as usize] == cid {
+                        // intra-component: use the snapshot (Jacobi)
+                        let j = comp.iter().position(|&w| w == v).unwrap();
+                        snapshot[j]
+                    } else {
+                        pr[v as usize]
+                    };
+                    sum += r * inv_out[v as usize];
+                }
+                let new = base + damping * sum;
+                err = err.max((new - snapshot[i]).abs());
+                pr[u as usize] = new;
+            }
+            iters += 1;
+            if err <= threshold || iters >= max_iters {
+                break;
+            }
+        }
+        total_iters = total_iters.max(iters);
+    }
+    (pr, total_iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{synthetic, GraphBuilder};
+
+    #[test]
+    fn cycle_is_one_component() {
+        let g = synthetic::cycle(10);
+        let scc = SccDecomposition::compute(&g);
+        assert_eq!(scc.num_components(), 1);
+        scc.verify(&g).unwrap();
+    }
+
+    #[test]
+    fn chain_is_all_singletons() {
+        let g = synthetic::chain(10);
+        let scc = SccDecomposition::compute(&g);
+        assert_eq!(scc.num_components(), 10);
+        scc.verify(&g).unwrap();
+    }
+
+    #[test]
+    fn two_cycles_with_bridge() {
+        // cycle {0,1,2} → bridge → cycle {3,4}
+        let g = GraphBuilder::new(5)
+            .edges(&[(0, 1), (1, 2), (2, 0), (2, 3), (3, 4), (4, 3)])
+            .build("bridge");
+        let scc = SccDecomposition::compute(&g);
+        assert_eq!(scc.num_components(), 2);
+        scc.verify(&g).unwrap();
+        // topological order: the {0,1,2} component precedes {3,4}
+        let order: Vec<u32> = scc.topological_order().collect();
+        let c012 = scc.comp_of[0];
+        let c34 = scc.comp_of[3];
+        let pos = |c: u32| order.iter().position(|&x| x == c).unwrap();
+        assert!(pos(c012) < pos(c34));
+    }
+
+    #[test]
+    fn verify_on_random_graphs() {
+        for seed in 0..5 {
+            let g = synthetic::web_replica(600, 5, seed);
+            let scc = SccDecomposition::compute(&g);
+            scc.verify(&g).unwrap();
+        }
+    }
+
+    #[test]
+    fn scc_solver_matches_global_solver() {
+        use crate::pagerank::{seq, PrConfig};
+        for g in [
+            synthetic::chain(40),
+            synthetic::star(30),
+            synthetic::web_replica(400, 5, 9),
+        ] {
+            let cfg = PrConfig { threshold: 1e-12, ..PrConfig::default() };
+            let (want, _, _) = seq::solve(&g, &cfg);
+            let (got, _) = solve_by_scc(&g, cfg.damping, 1e-13, 10_000);
+            let l1: f64 = got.iter().zip(&want).map(|(a, b)| (a - b).abs()).sum();
+            assert!(l1 < 1e-8, "{}: L1 {l1}", g.name);
+        }
+    }
+
+    #[test]
+    fn deep_recursion_safe() {
+        // 50k-vertex chain would blow a recursive Tarjan's stack.
+        let g = synthetic::chain(50_000);
+        let scc = SccDecomposition::compute(&g);
+        assert_eq!(scc.num_components(), 50_000);
+    }
+}

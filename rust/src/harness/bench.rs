@@ -1,0 +1,123 @@
+//! Mini-criterion: warmup + sampled wall-clock measurement with summary
+//! statistics. The offline image carries no `criterion` crate; this runner
+//! reproduces the part of its methodology the harness needs — N timed
+//! samples after a warmup, median/MAD reporting, and environment overrides
+//! for quick vs. thorough runs.
+//!
+//! Env knobs (read once per runner):
+//! * `PAGERANK_NB_BENCH_SAMPLES` — samples per measurement (default 5)
+//! * `PAGERANK_NB_BENCH_WARMUP`  — warmup runs (default 1)
+//! * `PAGERANK_NB_SCALE`         — dataset divisor for replica datasets
+//!   (default 200: Table-1 replicas at 1/200 scale fit CI hosts)
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// One named measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub summary: Summary,
+}
+
+impl Measurement {
+    pub fn secs(&self) -> f64 {
+        self.summary.median
+    }
+}
+
+/// Timing runner.
+#[derive(Debug, Clone)]
+pub struct BenchRunner {
+    pub samples: usize,
+    pub warmup: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        Self {
+            samples: env_usize("PAGERANK_NB_BENCH_SAMPLES", 5).max(1),
+            warmup: env_usize("PAGERANK_NB_BENCH_WARMUP", 1),
+        }
+    }
+}
+
+impl BenchRunner {
+    pub fn new(samples: usize, warmup: usize) -> Self {
+        Self { samples: samples.max(1), warmup }
+    }
+
+    /// Time `f` (seconds per run) with warmup; `f` may return a value to
+    /// keep the optimizer honest (it is black-boxed).
+    pub fn measure<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Measurement { name: name.to_string(), summary: Summary::from_samples(&samples) }
+    }
+
+    /// Measure a run that reports its own duration (e.g. [`crate::pagerank::PrResult::elapsed`]
+    /// — algorithmic completion rather than wall clock, needed for Fig 8).
+    pub fn measure_reported(
+        &self,
+        name: &str,
+        mut f: impl FnMut() -> f64,
+    ) -> Measurement {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            samples.push(f());
+        }
+        Measurement { name: name.to_string(), summary: Summary::from_samples(&samples) }
+    }
+}
+
+/// Dataset divisor for Table-1 replicas (`PAGERANK_NB_SCALE`, default 200).
+pub fn dataset_divisor() -> usize {
+    env_usize("PAGERANK_NB_SCALE", 200).max(1)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_produces_sane_summary() {
+        let r = BenchRunner::new(4, 1);
+        let m = r.measure("sleep", || {
+            std::thread::sleep(std::time::Duration::from_millis(3))
+        });
+        assert_eq!(m.summary.n, 4);
+        assert!(m.secs() >= 0.003, "median {}", m.secs());
+        assert!(m.secs() < 0.5);
+    }
+
+    #[test]
+    fn measure_reported_uses_given_values() {
+        let mut x = 0.0;
+        let r = BenchRunner::new(3, 0);
+        let m = r.measure_reported("fake", || {
+            x += 1.0;
+            x
+        });
+        assert_eq!(m.summary.n, 3);
+        assert_eq!(m.summary.median, 2.0);
+    }
+
+    #[test]
+    fn divisor_defaults_positive() {
+        assert!(dataset_divisor() >= 1);
+    }
+}

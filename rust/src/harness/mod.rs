@@ -1,0 +1,12 @@
+//! Benchmark harness: the in-tree mini-criterion timing runner and the
+//! figure-by-figure experiment drivers that regenerate the paper's
+//! evaluation section (Figs 1–9, Table 1).
+//!
+//! Every `rust/benches/*.rs` target is a thin wrapper over one
+//! [`experiments`] driver, so `cargo bench` and
+//! `pagerank-nb bench <exp-id>` produce the same tables.
+
+pub mod bench;
+pub mod experiments;
+
+pub use bench::{BenchRunner, Measurement};

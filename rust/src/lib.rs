@@ -1,0 +1,61 @@
+//! # pagerank-nb — Non-Blocking PageRank for Massive Graphs
+//!
+//! A production-grade reproduction of *"An Improved and Optimized Practical
+//! Non-Blocking PageRank Algorithm for Massive Graphs"* (Eedi, Karra, Peri,
+//! Ranabothu, Utkoor — 2021), built as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: the
+//!   blocking (`Barrier`, `Barrier-Edge`), non-blocking (`No-Sync`,
+//!   `No-Sync-Edge`), approximated (`*-Opt` loop-perforation) and wait-free
+//!   (`Barrier-Helper`) parallel PageRank variants, the CSR graph substrate
+//!   they run on, static partitioning, fault injection and the experiment
+//!   harness that regenerates every figure in the paper's evaluation.
+//! * **Layer 2 (python/compile/model.py)** — the per-block rank update as a
+//!   JAX computation, AOT-lowered once to HLO text.
+//! * **Layer 1 (python/compile/kernels/)** — the gather/accumulate hot-spot
+//!   as a Pallas kernel (ELL tile layout), validated against a pure-jnp
+//!   oracle and lowered into the same HLO artifact.
+//!
+//! The [`runtime`] module loads those artifacts through PJRT so the Rust
+//! coordinator can execute the XLA compute path natively
+//! ([`pagerank::Variant::XlaBlock`]); Python never runs on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use pagerank_nb::graph::synthetic;
+//! use pagerank_nb::pagerank::{self, PrConfig, Variant};
+//!
+//! // A scale-free web-like graph with ~10k vertices.
+//! let g = synthetic::web_replica(10_000, 8, 42);
+//! let cfg = PrConfig { threads: 4, ..PrConfig::default() };
+//! let result = pagerank::run(&g, Variant::NoSync, &cfg).unwrap();
+//! println!("converged in {} iterations", result.iterations);
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `rust/benches/` for the
+//! figure-by-figure reproduction harness.
+
+pub mod cli;
+pub mod coordinator;
+pub mod graph;
+pub mod harness;
+pub mod pagerank;
+pub mod runtime;
+pub mod sync;
+pub mod testkit;
+pub mod util;
+
+/// Damping factor used throughout the paper (and Page et al. 1999).
+pub const DAMPING: f64 = 0.85;
+
+/// The paper's convergence threshold is `1e-16`; at f64 resolution that is
+/// unreachable for per-vertex deltas on graphs with `n >= ~1e4` vertices
+/// (ranks are `O(1/n)` and `1e-16` is below one ulp of intermediate sums),
+/// so the library defaults to `1e-10` and treats the threshold as a config
+/// knob. EXPERIMENTS.md quantifies the difference.
+pub const DEFAULT_THRESHOLD: f64 = 1e-10;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,10 @@
+//! `pagerank-nb` — leader binary: CLI over the non-blocking PageRank
+//! library. See `pagerank-nb help` for usage.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = pagerank_nb::cli::dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

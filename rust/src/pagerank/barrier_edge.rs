@@ -1,0 +1,188 @@
+//! Algorithm 2 — Barrier-Edge: the three-phase edge-centric baseline from
+//! Panyala et al. [7].
+//!
+//! * **Phase I (push)** — each vertex writes `pr(u)/outdeg(u)` into the
+//!   contribution slot of each out-link (via the precomputed
+//!   `offset_list`, so every edge has a dedicated slot: no write conflicts).
+//! * **Phase II (pull)** — each vertex sums its in-slots and applies Eq. 1.
+//! * **Phase III** — global error merge.
+//!
+//! Barriers separate all three phases. Compared to Algorithm 1 the gather
+//! becomes a *contiguous* read over the contribution list — better spatial
+//! locality, bought with an extra `m`-sized array and one more barrier per
+//! iteration (the trade the paper's Fig 1/2 evaluates).
+
+use crate::coordinator::executor::run_workers;
+use crate::coordinator::metrics::RunMetrics;
+use crate::graph::{Csr, Partitions};
+use crate::pagerank::barrier::{empty_result, inv_out_degrees};
+use crate::pagerank::convergence::ErrorBoard;
+use crate::pagerank::{amplify_work, PrConfig, PrResult, Variant};
+use crate::sync::atomics::{atomic_vec, snapshot};
+use crate::sync::barrier::SenseBarrier;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+/// Run Algorithm 2.
+pub fn run(g: &Csr, cfg: &PrConfig, parts: &Partitions) -> PrResult {
+    let n = g.num_vertices();
+    let threads = cfg.threads;
+    if n == 0 {
+        return empty_result(Variant::BarrierEdge, threads);
+    }
+    let d = cfg.damping;
+    let base = (1.0 - d) / n as f64;
+    let inv_out = inv_out_degrees(g);
+
+    // One rank array suffices: Phase I reads ranks (iteration i-1 values),
+    // Phase II overwrites them (iteration i) — the barrier between the
+    // phases separates the two uses, and the old value needed for the error
+    // is read locally before the store. (The paper keeps an explicit
+    // prev_pr and copies in Phase III; the single-array form is numerically
+    // identical and halves the copy traffic — see EXPERIMENTS.md §Perf.)
+    let pr = atomic_vec(n, 1.0 / n as f64);
+    let contributions = atomic_vec(g.num_edges(), 0.0);
+    let board = ErrorBoard::new(threads);
+    let barrier = SenseBarrier::new(threads);
+    let metrics = RunMetrics::new(threads);
+    let converged = AtomicBool::new(false);
+
+    let start = Instant::now();
+    let outcome = run_workers(threads, cfg.dnf_timeout, &[&barrier], |tid, stop| {
+        let mut waiter = barrier.waiter();
+        let range = parts.range(tid);
+        let mut iter = 0u64;
+        loop {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            if cfg.faults.apply(tid, iter) {
+                return;
+            }
+            // Phase I: push contributions along out-links.
+            for u in range.clone() {
+                let od = g.out_degree(u);
+                if od == 0 {
+                    continue;
+                }
+                let contribution = pr[u as usize].load() * inv_out[u as usize];
+                for e in g.out_slot_range(u) {
+                    contributions[g.offset_list[e]].store(contribution);
+                }
+            }
+            if waiter.wait().is_aborted() {
+                return; // ── barrier (Phase I)
+            }
+            // Phase II: pull from the contribution list.
+            let mut thr_err: f64 = 0.0;
+            let mut edges = 0u64;
+            for u in range.clone() {
+                let mut sum = 0.0;
+                for slot in g.in_slot_range(u) {
+                    sum += contributions[slot].load();
+                    amplify_work(cfg.work_amplify);
+                }
+                edges += g.in_degree(u) as u64;
+                let prev = pr[u as usize].load();
+                let new = base + d * sum;
+                pr[u as usize].store(new);
+                thr_err = thr_err.max((prev - new).abs());
+            }
+            metrics.add_edges(tid, edges);
+            board.publish(tid, thr_err);
+            if waiter.wait().is_aborted() {
+                return; // ── barrier (Phase II)
+            }
+            // Phase III: global error merge (every thread computes the same
+            // max — cheaper than electing thread 0 and barriering again).
+            let global_err = board.global_max();
+            if waiter.wait().is_aborted() {
+                return; // ── barrier (Phase III)
+            }
+            iter += 1;
+            metrics.bump_iteration(tid);
+            if global_err <= cfg.threshold {
+                converged.store(true, Ordering::Release);
+                return;
+            }
+            if iter >= cfg.max_iterations {
+                return;
+            }
+        }
+    });
+
+    PrResult {
+        variant: Variant::BarrierEdge,
+        ranks: snapshot(&pr),
+        iterations: metrics.max_iterations(),
+        per_thread_iterations: metrics.iterations_per_thread(),
+        elapsed: start.elapsed(),
+        converged: converged.load(Ordering::Acquire) && !outcome.dnf,
+        barrier_wait_secs: barrier.total_wait_secs(),
+        dnf: outcome.dnf,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{synthetic, PartitionPolicy};
+    use crate::pagerank::{self, seq};
+
+    fn cfg(threads: usize) -> PrConfig {
+        PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }
+    }
+
+    #[test]
+    fn matches_sequential_on_cycle() {
+        let g = synthetic::cycle(30);
+        let c = cfg(3);
+        let r = pagerank::run(&g, Variant::BarrierEdge, &c).unwrap();
+        assert!(r.converged);
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.l1_norm(&sr) < 1e-10);
+    }
+
+    #[test]
+    fn matches_sequential_on_web_replica() {
+        let g = synthetic::web_replica(700, 6, 23);
+        let c = cfg(4);
+        let r = pagerank::run(&g, Variant::BarrierEdge, &c).unwrap();
+        assert!(r.converged);
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.l1_norm(&sr) < 1e-9, "l1 {}", r.l1_norm(&sr));
+    }
+
+    #[test]
+    fn handles_dangling_vertices() {
+        let g = synthetic::chain(20); // tail vertex has outdeg 0
+        let c = cfg(2);
+        let r = pagerank::run(&g, Variant::BarrierEdge, &c).unwrap();
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.converged);
+        assert!(r.l1_norm(&sr) < 1e-10);
+    }
+
+    #[test]
+    fn matches_vertex_centric_barrier_exactly_in_iterations() {
+        // Same synchronous schedule → same iteration count as Algorithm 1.
+        let g = synthetic::social_replica(400, 6, 9);
+        let c = cfg(2);
+        let edge = pagerank::run(&g, Variant::BarrierEdge, &c).unwrap();
+        let vert = pagerank::run(&g, Variant::Barrier, &c).unwrap();
+        assert_eq!(edge.iterations, vert.iterations);
+        assert!(
+            crate::pagerank::convergence::linf_norm(&edge.ranks, &vert.ranks) < 1e-12
+        );
+    }
+
+    #[test]
+    fn edge_balanced_partitioning_correct() {
+        let g = synthetic::web_replica(500, 8, 31);
+        let c = PrConfig { partition: PartitionPolicy::EdgeBalanced, ..cfg(4) };
+        let r = pagerank::run(&g, Variant::BarrierEdge, &c).unwrap();
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.converged);
+        assert!(r.l1_norm(&sr) < 1e-9);
+    }
+}

@@ -1,0 +1,119 @@
+//! Convergence bookkeeping shared by all variants.
+//!
+//! The paper distinguishes three convergence levels (§4):
+//! * **algorithm-level** — one global error, all partitions must drop below
+//!   the threshold in the same iteration (Barrier family, Wait-Free);
+//! * **thread-level** — each thread merges the *latest visible* per-thread
+//!   errors and exits on its own (No-Sync family);
+//! * **node-level** — individual vertices freeze early (the `*-Opt`
+//!   perforation variants).
+//!
+//! This module provides the shared error boards for the first two plus the
+//! L1-norm metric of Figs 5–6.
+
+use crate::sync::atomics::AtomicF64;
+use crossbeam_utils::CachePadded;
+
+/// Per-thread error slots, cache-padded: threads publish their local max
+/// delta here every iteration, and (in thread-level convergence) read each
+/// other's slots to decide termination. False sharing on this array was a
+/// measurable cost before padding — see EXPERIMENTS.md §Perf.
+pub struct ErrorBoard {
+    slots: Vec<CachePadded<AtomicF64>>,
+}
+
+impl ErrorBoard {
+    /// All slots start at `f64::INFINITY` ("not yet converged"), so a thread
+    /// cannot observe a spuriously-converged peer before that peer's first
+    /// publish.
+    pub fn new(threads: usize) -> Self {
+        Self {
+            slots: (0..threads)
+                .map(|_| CachePadded::new(AtomicF64::new(f64::INFINITY)))
+                .collect(),
+        }
+    }
+
+    #[inline]
+    pub fn publish(&self, thread: usize, err: f64) {
+        self.slots[thread].store_release(err);
+    }
+
+    #[inline]
+    pub fn read(&self, thread: usize) -> f64 {
+        self.slots[thread].load_acquire()
+    }
+
+    /// Max across all slots — the paper's `localErr` merge (Alg 3 lines
+    /// 17-19) and the Barrier global-error update (Alg 1 lines 20-22).
+    #[inline]
+    pub fn global_max(&self) -> f64 {
+        let mut m: f64 = 0.0;
+        for s in &self.slots {
+            m = m.max(s.load_acquire());
+        }
+        m
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+}
+
+/// `Σ_u |a_u - b_u|` — the accuracy metric the paper reports against the
+/// sequential ranks (Figs 5–6).
+pub fn l1_norm(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "rank vectors must have equal length");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+}
+
+/// Max absolute per-vertex difference (∞-norm), used by tests.
+pub fn linf_norm(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn board_starts_unconverged() {
+        let b = ErrorBoard::new(3);
+        assert_eq!(b.global_max(), f64::INFINITY);
+    }
+
+    #[test]
+    fn publish_and_merge() {
+        let b = ErrorBoard::new(3);
+        b.publish(0, 0.5);
+        b.publish(1, 0.25);
+        b.publish(2, 0.75);
+        assert_eq!(b.global_max(), 0.75);
+        assert_eq!(b.read(1), 0.25);
+        b.publish(2, 0.1);
+        assert_eq!(b.global_max(), 0.5);
+    }
+
+    #[test]
+    fn norms() {
+        let a = [0.25, 0.25, 0.5];
+        let b = [0.2, 0.3, 0.5];
+        assert!((l1_norm(&a, &b) - 0.1).abs() < 1e-15);
+        assert!((linf_norm(&a, &b) - 0.05).abs() < 1e-15);
+        assert_eq!(l1_norm(&a, &a), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal length")]
+    fn l1_rejects_length_mismatch() {
+        l1_norm(&[1.0], &[1.0, 2.0]);
+    }
+}

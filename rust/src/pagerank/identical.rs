@@ -1,0 +1,267 @@
+//! `*-Identical` variants: Algorithm 1 / Algorithm 3 augmented with the
+//! STIC-D identical-node technique (paper §3 [11], evaluated as
+//! Barriers-Identical / No-Sync-Identical in Figs 1–2).
+//!
+//! Vertices with the same in-neighbour set provably share a PageRank, so
+//! each equivalence class is computed once (at its representative) and the
+//! value is broadcast to the members — eliminating
+//! [`IdenticalClasses::redundant_vertices`] rank computations per iteration.
+//! Class detection is a preprocessing step, included in the reported wall
+//! time (as in the source papers).
+
+use crate::coordinator::executor::run_workers;
+use crate::coordinator::metrics::RunMetrics;
+use crate::graph::identical::IdenticalClasses;
+use crate::graph::{Csr, Partitions};
+use crate::pagerank::barrier::{empty_result, inv_out_degrees};
+use crate::pagerank::convergence::ErrorBoard;
+use crate::pagerank::{amplify_work, PrConfig, PrResult, Variant};
+use crate::sync::atomics::{atomic_vec, snapshot};
+use crate::sync::barrier::SenseBarrier;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+/// Split `count` class ids into `threads` contiguous chunks, balanced by
+/// the per-class `load` (in-degree of the representative — the gather cost).
+pub(crate) fn split_classes(
+    loads: &[usize],
+    threads: usize,
+) -> Vec<std::ops::Range<usize>> {
+    let count = loads.len();
+    let total: usize = loads.iter().sum();
+    let target = (total as f64 / threads as f64).max(1.0);
+    let mut bounds = vec![0usize];
+    let mut acc = 0usize;
+    for (i, &l) in loads.iter().enumerate() {
+        acc += l;
+        let cuts = bounds.len() - 1;
+        let remaining = count - (i + 1);
+        if cuts < threads - 1
+            && (acc as f64 >= target * bounds.len() as f64 || remaining == threads - 1 - cuts)
+        {
+            bounds.push(i + 1);
+        }
+    }
+    while bounds.len() < threads {
+        bounds.push(count);
+    }
+    bounds.push(count);
+    (0..threads).map(|i| bounds[i]..bounds[i + 1]).collect()
+}
+
+/// Barriers-Identical: Algorithm 1 over class representatives.
+pub fn run_barrier(g: &Csr, cfg: &PrConfig, _parts: &Partitions) -> PrResult {
+    run_impl(g, cfg, Variant::BarrierIdentical)
+}
+
+/// No-Sync-Identical: Algorithm 3 over class representatives.
+pub fn run_nosync(g: &Csr, cfg: &PrConfig, _parts: &Partitions) -> PrResult {
+    run_impl(g, cfg, Variant::NoSyncIdentical)
+}
+
+fn run_impl(g: &Csr, cfg: &PrConfig, variant: Variant) -> PrResult {
+    let n = g.num_vertices();
+    let threads = cfg.threads;
+    if n == 0 {
+        return empty_result(variant, threads);
+    }
+    let start = Instant::now();
+    let classes = IdenticalClasses::compute(g);
+    let d = cfg.damping;
+    let base = (1.0 - d) / n as f64;
+    let inv_out = inv_out_degrees(g);
+
+    let loads: Vec<usize> = classes
+        .representatives
+        .iter()
+        .map(|&r| g.in_degree(r).max(1))
+        .collect();
+    let chunks = split_classes(&loads, threads);
+
+    let blocking = variant == Variant::BarrierIdentical;
+    let pr = atomic_vec(n, 1.0 / n as f64);
+    // `prev` is only used by the blocking variant (Alg 1 keeps two arrays;
+    // Alg 3's in-place update needs one).
+    let prev = if blocking { atomic_vec(n, 1.0 / n as f64) } else { Vec::new() };
+    let read = |u: usize| -> f64 {
+        if blocking {
+            prev[u].load()
+        } else {
+            pr[u].load()
+        }
+    };
+
+    let board = ErrorBoard::new(threads);
+    let barrier = SenseBarrier::new(threads);
+    let metrics = RunMetrics::new(threads);
+    let converged = AtomicBool::new(false);
+    let capped = AtomicBool::new(false);
+
+    let outcome = run_workers(
+        threads,
+        cfg.dnf_timeout,
+        &[&barrier],
+        |tid, stop| {
+            let mut waiter = barrier.waiter();
+            let chunk = chunks[tid].clone();
+            let mut iter = 0u64;
+            // confirmation-sweep counter (non-blocking path only); see
+            // nosync.rs for the staleness rationale
+            let mut calm = 0u32;
+            loop {
+                if stop.load(Ordering::Acquire) {
+                    return;
+                }
+                if cfg.faults.apply(tid, iter) {
+                    return;
+                }
+                let mut local_err: f64 = 0.0;
+                for c in chunk.clone() {
+                    let rep = classes.representatives[c];
+                    let previous = read(rep as usize);
+                    let mut sum = 0.0;
+                    for &v in g.in_neighbors(rep) {
+                        sum += read(v as usize) * inv_out[v as usize];
+                        amplify_work(cfg.work_amplify);
+                    }
+                    let new = base + d * sum;
+                    local_err = local_err.max((new - previous).abs());
+                    // broadcast to the whole class
+                    for &m in &classes.members[c] {
+                        pr[m as usize].store(new);
+                    }
+                }
+                board.publish(tid, local_err);
+                iter += 1;
+                metrics.bump_iteration(tid);
+                if blocking {
+                    if waiter.wait().is_aborted() {
+                        return;
+                    }
+                    let global_err = board.global_max();
+                    for c in chunk.clone() {
+                        for &m in &classes.members[c] {
+                            prev[m as usize].store(pr[m as usize].load());
+                        }
+                    }
+                    if waiter.wait().is_aborted() {
+                        return;
+                    }
+                    if global_err <= cfg.threshold {
+                        converged.store(true, Ordering::Release);
+                        return;
+                    }
+                } else {
+                    let merged = board.global_max();
+                    if merged <= cfg.threshold {
+                        calm += 1;
+                        if calm >= 2 {
+                            return;
+                        }
+                    } else {
+                        calm = 0;
+                    }
+                    std::thread::yield_now();
+                }
+                if iter >= cfg.max_iterations {
+                    capped.store(true, Ordering::Release);
+                    return;
+                }
+            }
+        },
+    );
+
+    let done = if blocking {
+        converged.load(Ordering::Acquire)
+    } else {
+        !capped.load(Ordering::Acquire)
+    };
+    PrResult {
+        variant,
+        ranks: snapshot(&pr),
+        iterations: metrics.max_iterations(),
+        per_thread_iterations: metrics.iterations_per_thread(),
+        elapsed: start.elapsed(),
+        converged: done && !outcome.dnf,
+        barrier_wait_secs: barrier.total_wait_secs(),
+        dnf: outcome.dnf,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic;
+    use crate::pagerank::{self, seq};
+
+    fn cfg(threads: usize) -> PrConfig {
+        PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }
+    }
+
+    #[test]
+    fn split_classes_covers_all() {
+        let loads = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let chunks = split_classes(&loads, 3);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(chunks[0].start, 0);
+        assert_eq!(chunks.last().unwrap().end, 8);
+        for w in chunks.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+
+    #[test]
+    fn split_more_threads_than_classes() {
+        let chunks = split_classes(&[1, 1], 5);
+        assert_eq!(chunks.len(), 5);
+        let covered: usize = chunks.iter().map(|c| c.len()).sum();
+        assert_eq!(covered, 2);
+    }
+
+    #[test]
+    fn barrier_identical_matches_sequential_on_star() {
+        // star: all leaves form one identical class — big savings, same ranks.
+        let g = synthetic::star(40);
+        let c = cfg(3);
+        let r = pagerank::run(&g, Variant::BarrierIdentical, &c).unwrap();
+        assert!(r.converged);
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.l1_norm(&sr) < 1e-9, "l1 {}", r.l1_norm(&sr));
+    }
+
+    #[test]
+    fn nosync_identical_matches_sequential_on_web() {
+        let g = synthetic::web_replica(700, 6, 29);
+        let c = cfg(4);
+        let r = pagerank::run(&g, Variant::NoSyncIdentical, &c).unwrap();
+        assert!(r.converged);
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.l1_norm(&sr) < 1e-7, "l1 {}", r.l1_norm(&sr));
+    }
+
+    #[test]
+    fn identical_members_share_final_rank_exactly() {
+        let g = synthetic::web_replica(500, 5, 37);
+        let classes = IdenticalClasses::compute(&g);
+        let r = pagerank::run(&g, Variant::BarrierIdentical, &cfg(2)).unwrap();
+        for (c, ms) in classes.members.iter().enumerate() {
+            let rep_rank = r.ranks[classes.representatives[c] as usize];
+            for &m in ms {
+                assert_eq!(
+                    r.ranks[m as usize], rep_rank,
+                    "class {c} member {m} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn works_when_every_vertex_is_its_own_class() {
+        let g = synthetic::cycle(30);
+        let c = cfg(2);
+        let r = pagerank::run(&g, Variant::NoSyncIdentical, &c).unwrap();
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.converged);
+        assert!(r.l1_norm(&sr) < 1e-9);
+    }
+}

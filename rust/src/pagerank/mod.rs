@@ -1,0 +1,347 @@
+//! The paper's PageRank algorithm family.
+//!
+//! | Variant                | Alg | Sync        | Convergence level       |
+//! |------------------------|-----|-------------|-------------------------|
+//! | `Sequential`           | —   | none        | algorithm               |
+//! | `Barrier`              | 1   | barriers    | algorithm               |
+//! | `BarrierIdentical`     | 1+[11] | barriers | algorithm               |
+//! | `BarrierEdge`          | 2   | barriers ×3 | algorithm               |
+//! | `BarrierOpt`           | 5   | barriers    | node + algorithm        |
+//! | `WaitFree`             | 6   | CAS helping | algorithm (wait-free)   |
+//! | `NoSync`               | 3   | none        | thread                  |
+//! | `NoSyncIdentical`      | 3+[11] | none     | thread                  |
+//! | `NoSyncEdge`           | 4   | none        | thread (may not converge)|
+//! | `NoSyncOpt`            | 5   | none        | node + thread           |
+//! | `NoSyncOptIdentical`   | 5+[11] | none     | node + thread           |
+//! | `XlaBlock`             | —   | none (L3 loop) | algorithm            |
+//!
+//! All parallel variants run through [`run`], which partitions the graph,
+//! spawns `cfg.threads` workers, applies the configured fault plan, and
+//! returns a [`PrResult`] with ranks plus telemetry. `XlaBlock` requires a
+//! loaded [`crate::runtime::Engine`] and is dispatched through
+//! [`run_with_engine`].
+
+pub mod barrier;
+pub mod barrier_edge;
+pub mod convergence;
+pub mod identical;
+pub mod nosync;
+pub mod nosync_edge;
+pub mod perforation;
+pub mod seq;
+pub mod waitfree;
+pub mod xla_block;
+
+use crate::coordinator::faults::FaultPlan;
+use crate::graph::{Csr, PartitionPolicy, Partitions};
+use anyhow::{bail, Result};
+use std::time::Duration;
+
+/// Which algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Sequential,
+    Barrier,
+    BarrierIdentical,
+    BarrierEdge,
+    BarrierOpt,
+    WaitFree,
+    NoSync,
+    NoSyncIdentical,
+    NoSyncEdge,
+    NoSyncOpt,
+    NoSyncOptIdentical,
+    XlaBlock,
+}
+
+impl Variant {
+    /// Every CPU variant, in the order the paper's figures list programs.
+    pub const ALL_CPU: [Variant; 11] = [
+        Variant::Sequential,
+        Variant::Barrier,
+        Variant::BarrierIdentical,
+        Variant::BarrierEdge,
+        Variant::BarrierOpt,
+        Variant::WaitFree,
+        Variant::NoSync,
+        Variant::NoSyncIdentical,
+        Variant::NoSyncEdge,
+        Variant::NoSyncOpt,
+        Variant::NoSyncOptIdentical,
+    ];
+
+    /// The parallel variants (everything but `Sequential`).
+    pub fn parallel_cpu() -> impl Iterator<Item = Variant> {
+        Self::ALL_CPU.into_iter().filter(|v| *v != Variant::Sequential)
+    }
+
+    /// Does this variant use barriers (blocking synchronization)?
+    pub fn is_blocking(self) -> bool {
+        matches!(
+            self,
+            Variant::Barrier
+                | Variant::BarrierIdentical
+                | Variant::BarrierEdge
+                | Variant::BarrierOpt
+        )
+    }
+
+    /// Is this a non-blocking (lock-free / wait-free) variant?
+    pub fn is_non_blocking(self) -> bool {
+        matches!(
+            self,
+            Variant::WaitFree
+                | Variant::NoSync
+                | Variant::NoSyncIdentical
+                | Variant::NoSyncEdge
+                | Variant::NoSyncOpt
+                | Variant::NoSyncOptIdentical
+        )
+    }
+
+    /// Uses the loop-perforation approximation (Alg 5)? Those variants trade
+    /// L1-norm for speed (Figs 5–6).
+    pub fn is_approximate(self) -> bool {
+        matches!(
+            self,
+            Variant::BarrierOpt | Variant::NoSyncOpt | Variant::NoSyncOptIdentical
+        )
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Sequential => "Sequential",
+            Variant::Barrier => "Barrier",
+            Variant::BarrierIdentical => "Barrier-Identical",
+            Variant::BarrierEdge => "Barrier-Edge",
+            Variant::BarrierOpt => "Barrier-Opt",
+            Variant::WaitFree => "Wait-Free",
+            Variant::NoSync => "No-Sync",
+            Variant::NoSyncIdentical => "No-Sync-Identical",
+            Variant::NoSyncEdge => "No-Sync-Edge",
+            Variant::NoSyncOpt => "No-Sync-Opt",
+            Variant::NoSyncOptIdentical => "No-Sync-Opt-Identical",
+            Variant::XlaBlock => "XLA-Block",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Variant> {
+        let norm = s.to_ascii_lowercase().replace(['_', ' '], "-");
+        Ok(match norm.as_str() {
+            "seq" | "sequential" => Variant::Sequential,
+            "barrier" | "barriers" => Variant::Barrier,
+            "barrier-identical" | "barriers-identical" => Variant::BarrierIdentical,
+            "barrier-edge" | "barriers-edge" => Variant::BarrierEdge,
+            "barrier-opt" | "barriers-opt" => Variant::BarrierOpt,
+            "wait-free" | "waitfree" | "barrier-helper" => Variant::WaitFree,
+            "no-sync" | "nosync" => Variant::NoSync,
+            "no-sync-identical" | "nosync-identical" => Variant::NoSyncIdentical,
+            "no-sync-edge" | "nosync-edge" => Variant::NoSyncEdge,
+            "no-sync-opt" | "nosync-opt" => Variant::NoSyncOpt,
+            "no-sync-opt-identical" | "nosync-opt-identical" => Variant::NoSyncOptIdentical,
+            "xla-block" | "xla" => Variant::XlaBlock,
+            _ => bail!("unknown variant '{s}'"),
+        })
+    }
+}
+
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Run configuration.
+#[derive(Debug, Clone)]
+pub struct PrConfig {
+    /// Dampening parameter `d` (paper: 0.85).
+    pub damping: f64,
+    /// Convergence threshold on the max per-vertex delta. The paper states
+    /// `1e-16`; see [`crate::DEFAULT_THRESHOLD`] for why the default is
+    /// `1e-10`.
+    pub threshold: f64,
+    /// Safety cap (No-Sync-Edge "does not converge for particular types of
+    /// datasets", §4.4 — the cap turns that into `converged = false`).
+    pub max_iterations: u64,
+    /// Worker thread count `p`.
+    pub threads: usize,
+    pub partition: PartitionPolicy,
+    /// Loop-perforation cutoff factor: a vertex whose delta is non-zero and
+    /// below `threshold * perforation_factor` is frozen (Alg 5 uses
+    /// `threshold * 1e-5`, i.e. the paper's `1e-21` at threshold `1e-16`).
+    pub perforation_factor: f64,
+    /// Synthetic extra work per edge (spin iterations through
+    /// `std::hint::black_box`) so scheduling effects dominate on hosts with
+    /// fewer cores than the paper's 56; numerics are unaffected. 0 = off.
+    pub work_amplify: u32,
+    /// Fault-injection schedule (sleeps / failures) for Figs 8–9.
+    pub faults: FaultPlan,
+    /// Watchdog: abort the run (DNF) if it exceeds this wall-clock bound.
+    /// Blocking variants with failed threads would otherwise hang forever.
+    pub dnf_timeout: Option<Duration>,
+}
+
+impl Default for PrConfig {
+    fn default() -> Self {
+        Self {
+            damping: crate::DAMPING,
+            threshold: crate::DEFAULT_THRESHOLD,
+            max_iterations: 10_000,
+            threads: 4,
+            partition: PartitionPolicy::VertexBalanced,
+            perforation_factor: 1e-5,
+            work_amplify: 0,
+            faults: FaultPlan::none(),
+            dnf_timeout: None,
+        }
+    }
+}
+
+impl PrConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..1.0).contains(&self.damping) {
+            bail!("damping must be in [0, 1)");
+        }
+        if self.threshold <= 0.0 {
+            bail!("threshold must be positive");
+        }
+        if self.threads == 0 {
+            bail!("need at least one thread");
+        }
+        if self.threads > 64 {
+            // Wait-free global descriptor uses a 64-bit completion bitmask.
+            bail!("at most 64 threads supported");
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of a PageRank run.
+#[derive(Debug, Clone)]
+pub struct PrResult {
+    pub variant: Variant,
+    pub ranks: Vec<f64>,
+    /// Iterations until termination. For thread-level convergence this is
+    /// the *maximum* over threads; per-thread counts are in
+    /// `per_thread_iterations`.
+    pub iterations: u64,
+    pub per_thread_iterations: Vec<u64>,
+    pub elapsed: Duration,
+    /// False when the iteration cap or the DNF watchdog fired.
+    pub converged: bool,
+    /// Total thread-seconds spent waiting at barriers (0 for non-blocking).
+    pub barrier_wait_secs: f64,
+    /// Was the run aborted by the watchdog (thread failure wedged it)?
+    pub dnf: bool,
+}
+
+impl PrResult {
+    /// L1 distance to a reference rank vector (the paper's accuracy metric,
+    /// Figs 5–6).
+    pub fn l1_norm(&self, reference: &[f64]) -> f64 {
+        convergence::l1_norm(&self.ranks, reference)
+    }
+
+    /// Indices of the top-k ranked vertices, descending.
+    pub fn top_k(&self, k: usize) -> Vec<(u32, f64)> {
+        let mut idx: Vec<u32> = (0..self.ranks.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            self.ranks[b as usize]
+                .partial_cmp(&self.ranks[a as usize])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx.truncate(k);
+        idx.into_iter().map(|u| (u, self.ranks[u as usize])).collect()
+    }
+}
+
+/// Burn configurable extra cycles without perturbing the value. The paper's
+/// testbed has 56 hardware threads; on small CI hosts the gather loop is too
+/// short for scheduling effects to be visible, so benches optionally amplify
+/// per-edge work. `black_box` keeps the loop from being optimized away.
+#[inline(always)]
+pub(crate) fn amplify_work(k: u32) {
+    for i in 0..k {
+        std::hint::black_box(i);
+    }
+}
+
+/// Run a CPU variant on `g`.
+pub fn run(g: &Csr, variant: Variant, cfg: &PrConfig) -> Result<PrResult> {
+    cfg.validate()?;
+    let parts = Partitions::new(g, cfg.threads, cfg.partition);
+    match variant {
+        Variant::Sequential => Ok(seq::run(g, cfg)),
+        Variant::Barrier => Ok(barrier::run(g, cfg, &parts)),
+        Variant::BarrierIdentical => Ok(identical::run_barrier(g, cfg, &parts)),
+        Variant::BarrierEdge => Ok(barrier_edge::run(g, cfg, &parts)),
+        Variant::BarrierOpt => Ok(perforation::run_barrier_opt(g, cfg, &parts)),
+        Variant::WaitFree => Ok(waitfree::run(g, cfg, &parts)),
+        Variant::NoSync => Ok(nosync::run(g, cfg, &parts)),
+        Variant::NoSyncIdentical => Ok(identical::run_nosync(g, cfg, &parts)),
+        Variant::NoSyncEdge => Ok(nosync_edge::run(g, cfg, &parts)),
+        Variant::NoSyncOpt => Ok(perforation::run_nosync_opt(g, cfg, &parts)),
+        Variant::NoSyncOptIdentical => Ok(perforation::run_nosync_opt_identical(g, cfg, &parts)),
+        Variant::XlaBlock => bail!("XlaBlock needs an engine; use run_with_engine"),
+    }
+}
+
+/// Run any variant, including `XlaBlock` (which executes the AOT-compiled
+/// JAX/Pallas artifact through the PJRT engine).
+pub fn run_with_engine(
+    g: &Csr,
+    variant: Variant,
+    cfg: &PrConfig,
+    engine: &crate::runtime::Engine,
+) -> Result<PrResult> {
+    match variant {
+        Variant::XlaBlock => xla_block::run(g, cfg, engine),
+        _ => run(g, variant, cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parse_roundtrip() {
+        for v in Variant::ALL_CPU {
+            assert_eq!(Variant::parse(v.name()).unwrap(), v);
+        }
+        assert_eq!(Variant::parse("nosync").unwrap(), Variant::NoSync);
+        assert_eq!(Variant::parse("barrier_helper").unwrap(), Variant::WaitFree);
+        assert!(Variant::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn classification_is_consistent() {
+        for v in Variant::ALL_CPU {
+            assert!(
+                !(v.is_blocking() && v.is_non_blocking()),
+                "{v} cannot be both"
+            );
+        }
+        assert!(Variant::Barrier.is_blocking());
+        assert!(Variant::NoSync.is_non_blocking());
+        assert!(Variant::WaitFree.is_non_blocking());
+        assert!(Variant::NoSyncOpt.is_approximate());
+        assert!(!Variant::NoSync.is_approximate());
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(PrConfig::default().validate().is_ok());
+        assert!(PrConfig { damping: 1.0, ..Default::default() }.validate().is_err());
+        assert!(PrConfig { threads: 0, ..Default::default() }.validate().is_err());
+        assert!(PrConfig { threads: 65, ..Default::default() }.validate().is_err());
+        assert!(PrConfig { threshold: 0.0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn all_cpu_lists_eleven() {
+        assert_eq!(Variant::ALL_CPU.len(), 11);
+        assert_eq!(Variant::parallel_cpu().count(), 10);
+    }
+}

@@ -1,0 +1,183 @@
+//! Algorithm 4 — No-Sync-Edge: the barrier-free version of the three-phase
+//! edge-centric model.
+//!
+//! Per §4.4 this variant removes all three barriers from Algorithm 2: each
+//! thread pulls from the contribution list, merges errors, then pushes its
+//! new contributions — all unsynchronized. Contributions read during a pull
+//! can therefore be an arbitrary mix of iterations.
+//!
+//! The paper reports (and this reproduction confirms — see
+//! `integration_variants.rs` and Fig 1/2 benches) that the variant **does
+//! not reliably converge on web-like datasets**: a contribution written
+//! pre-pull can be overwritten mid-pull, so the pulled sum is not any convex
+//! combination Lemma 1 covers. The iteration cap turns non-convergence into
+//! `converged = false` instead of a hang.
+
+use crate::coordinator::executor::run_workers;
+use crate::coordinator::metrics::RunMetrics;
+use crate::graph::{Csr, Partitions};
+use crate::pagerank::barrier::{empty_result, inv_out_degrees};
+use crate::pagerank::convergence::ErrorBoard;
+use crate::pagerank::{amplify_work, PrConfig, PrResult, Variant};
+use crate::sync::atomics::{atomic_vec, snapshot};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+/// Run Algorithm 4.
+pub fn run(g: &Csr, cfg: &PrConfig, parts: &Partitions) -> PrResult {
+    let n = g.num_vertices();
+    let threads = cfg.threads;
+    if n == 0 {
+        return empty_result(Variant::NoSyncEdge, threads);
+    }
+    let d = cfg.damping;
+    let base = (1.0 - d) / n as f64;
+    let inv_out = inv_out_degrees(g);
+
+    let pr = atomic_vec(n, 1.0 / n as f64);
+    let contributions = atomic_vec(g.num_edges(), 0.0);
+    // Seed the contribution list from the uniform initial ranks so the first
+    // pull phase sees iteration-0 data.
+    for u in 0..n as u32 {
+        let c = (1.0 / n as f64) * inv_out[u as usize];
+        for e in g.out_slot_range(u) {
+            contributions[g.offset_list[e]].store(c);
+        }
+    }
+
+    let board = ErrorBoard::new(threads);
+    let metrics = RunMetrics::new(threads);
+    let capped = AtomicBool::new(false);
+
+    let start = Instant::now();
+    let outcome = run_workers(threads, cfg.dnf_timeout, &[], |tid, stop| {
+        let range = parts.range(tid);
+        let mut iter = 0u64;
+        // confirmation-sweep counter; see nosync.rs for the rationale
+        let mut calm = 0u32;
+        loop {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            if cfg.faults.apply(tid, iter) {
+                return;
+            }
+            // Pull phase (Alg 4 lines 5-13).
+            let mut local_err: f64 = 0.0;
+            let mut edges = 0u64;
+            for u in range.clone() {
+                let previous = pr[u as usize].load();
+                let mut sum = 0.0;
+                for slot in g.in_slot_range(u) {
+                    sum += contributions[slot].load();
+                    amplify_work(cfg.work_amplify);
+                }
+                edges += g.in_degree(u) as u64;
+                let new = base + d * sum;
+                pr[u as usize].store(new);
+                local_err = local_err.max((new - previous).abs());
+            }
+            metrics.add_edges(tid, edges);
+            iter += 1;
+            metrics.bump_iteration(tid);
+            board.publish(tid, local_err);
+            let merged = board.global_max();
+            // Push phase (Alg 4 lines 19-27): publish new contributions.
+            for u in range.clone() {
+                let od = g.out_degree(u);
+                if od == 0 {
+                    continue;
+                }
+                let contribution = pr[u as usize].load() * inv_out[u as usize];
+                for e in g.out_slot_range(u) {
+                    contributions[g.offset_list[e]].store(contribution);
+                }
+            }
+            if merged <= cfg.threshold {
+                calm += 1;
+                if calm >= 2 {
+                    return;
+                }
+            } else {
+                calm = 0;
+            }
+            if iter >= cfg.max_iterations {
+                capped.store(true, Ordering::Release);
+                return;
+            }
+            std::thread::yield_now();
+        }
+    });
+
+    PrResult {
+        variant: Variant::NoSyncEdge,
+        ranks: snapshot(&pr),
+        iterations: metrics.max_iterations(),
+        per_thread_iterations: metrics.iterations_per_thread(),
+        elapsed: start.elapsed(),
+        converged: !capped.load(Ordering::Acquire) && !outcome.dnf,
+        barrier_wait_secs: 0.0,
+        dnf: outcome.dnf,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic;
+    use crate::pagerank::{self, seq};
+
+    fn cfg(threads: usize) -> PrConfig {
+        PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }
+    }
+
+    #[test]
+    fn single_thread_converges_to_sequential() {
+        // Without concurrency the push/pull interleaving is deterministic
+        // and exact.
+        let g = synthetic::cycle(24);
+        let c = cfg(1);
+        let r = pagerank::run(&g, Variant::NoSyncEdge, &c).unwrap();
+        assert!(r.converged);
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.l1_norm(&sr) < 1e-9, "l1 {}", r.l1_norm(&sr));
+    }
+
+    #[test]
+    fn converges_on_synthetic_rmat() {
+        // §4.4: "resulted in better speedups … on our synthetic datasets".
+        let g = synthetic::d_series(1, 500, 3); // small D10 replica
+        let c = PrConfig { threshold: 1e-9, ..cfg(4) };
+        let r = pagerank::run(&g, Variant::NoSyncEdge, &c).unwrap();
+        // Converged or not, ranks must stay finite and positive.
+        assert!(r.ranks.iter().all(|x| x.is_finite() && *x >= 0.0));
+        if r.converged {
+            let (sr, _, _) = seq::solve(&g, &c);
+            assert!(r.l1_norm(&sr) < 1e-4, "l1 {}", r.l1_norm(&sr));
+        }
+    }
+
+    #[test]
+    fn iteration_cap_prevents_hang() {
+        // Even if the variant refuses to converge, the cap bounds the run.
+        let g = synthetic::web_replica(500, 7, 19);
+        let c = PrConfig { max_iterations: 50, threshold: 1e-14, ..cfg(4) };
+        let t0 = std::time::Instant::now();
+        let r = pagerank::run(&g, Variant::NoSyncEdge, &c).unwrap();
+        assert!(t0.elapsed() < std::time::Duration::from_secs(60));
+        assert!(r.iterations <= 50);
+    }
+
+    #[test]
+    fn contribution_seeding_matches_first_barrier_edge_iteration() {
+        // One capped iteration on one thread equals one Barrier-Edge
+        // iteration (same seeded contributions).
+        let g = synthetic::star(12);
+        let c = PrConfig { max_iterations: 1, ..cfg(1) };
+        let ns = pagerank::run(&g, Variant::NoSyncEdge, &c).unwrap();
+        let be = pagerank::run(&g, Variant::BarrierEdge, &c).unwrap();
+        assert!(
+            crate::pagerank::convergence::linf_norm(&ns.ranks, &be.ranks) < 1e-15
+        );
+    }
+}

@@ -1,0 +1,326 @@
+//! Algorithm 5 — loop perforation (Sidiroglou-Douskos et al. [6], applied
+//! to PageRank per Panyala et al. [7]): the `*-Opt` approximate variants.
+//!
+//! A vertex whose rank delta is non-zero but below
+//! `threshold * perforation_factor` (the paper freezes at `1e-21` with a
+//! `1e-16` threshold, i.e. `factor = 1e-5`) is marked converged at the
+//! *node level* and skipped in all later iterations. Skipping trades
+//! accuracy (non-zero L1-norm vs. sequential, Figs 5–6) for speed — frozen
+//! vertices stop costing gather work entirely.
+//!
+//! Three variants, matching the paper's program list:
+//! * [`run_barrier_opt`]  — Algorithm 1 + perforation (algorithm + node
+//!   convergence);
+//! * [`run_nosync_opt`]   — Algorithm 3 + perforation (thread + node);
+//! * [`run_nosync_opt_identical`] — additionally computes only one vertex
+//!   per identical-class (all three techniques composed).
+
+use crate::coordinator::executor::run_workers;
+use crate::coordinator::metrics::RunMetrics;
+use crate::graph::identical::IdenticalClasses;
+use crate::graph::{Csr, Partitions};
+use crate::pagerank::barrier::{empty_result, inv_out_degrees};
+use crate::pagerank::convergence::ErrorBoard;
+use crate::pagerank::identical::split_classes;
+use crate::pagerank::{amplify_work, PrConfig, PrResult, Variant};
+use crate::sync::atomics::{atomic_vec, snapshot};
+use crate::sync::barrier::SenseBarrier;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+/// Barrier-Opt (Algorithm 5 over Algorithm 1).
+pub fn run_barrier_opt(g: &Csr, cfg: &PrConfig, parts: &Partitions) -> PrResult {
+    run_vertex_impl(g, cfg, parts, Variant::BarrierOpt)
+}
+
+/// No-Sync-Opt (Algorithm 5 over Algorithm 3).
+pub fn run_nosync_opt(g: &Csr, cfg: &PrConfig, parts: &Partitions) -> PrResult {
+    run_vertex_impl(g, cfg, parts, Variant::NoSyncOpt)
+}
+
+fn run_vertex_impl(g: &Csr, cfg: &PrConfig, parts: &Partitions, variant: Variant) -> PrResult {
+    let n = g.num_vertices();
+    let threads = cfg.threads;
+    if n == 0 {
+        return empty_result(variant, threads);
+    }
+    let blocking = variant == Variant::BarrierOpt;
+    let d = cfg.damping;
+    let base = (1.0 - d) / n as f64;
+    let cutoff = cfg.threshold * cfg.perforation_factor;
+    let inv_out = inv_out_degrees(g);
+
+    let pr = atomic_vec(n, 1.0 / n as f64);
+    let prev = if blocking { atomic_vec(n, 1.0 / n as f64) } else { Vec::new() };
+    // node-level convergence marks (Alg 5's threshold_check array)
+    let frozen: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+
+    let board = ErrorBoard::new(threads);
+    let barrier = SenseBarrier::new(threads);
+    let metrics = RunMetrics::new(threads);
+    let converged = AtomicBool::new(false);
+    let capped = AtomicBool::new(false);
+
+    let start = Instant::now();
+    let outcome = run_workers(threads, cfg.dnf_timeout, &[&barrier], |tid, stop| {
+        let mut waiter = barrier.waiter();
+        let range = parts.range(tid);
+        let mut iter = 0u64;
+        // confirmation-sweep counter (non-blocking path only); see nosync.rs
+        let mut calm = 0u32;
+        loop {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            if cfg.faults.apply(tid, iter) {
+                return;
+            }
+            let mut local_err: f64 = 0.0;
+            let mut skipped = 0u64;
+            for u in range.clone() {
+                let ui = u as usize;
+                // Alg 5 line 6: skip nodes marked converged.
+                if frozen[ui].load(Ordering::Relaxed) {
+                    skipped += 1;
+                    continue;
+                }
+                let previous = if blocking { prev[ui].load() } else { pr[ui].load() };
+                let mut sum = 0.0;
+                for &v in g.in_neighbors(u) {
+                    let r = if blocking { prev[v as usize].load() } else { pr[v as usize].load() };
+                    sum += r * inv_out[v as usize];
+                    amplify_work(cfg.work_amplify);
+                }
+                let new = base + d * sum;
+                pr[ui].store(new);
+                let delta = (new - previous).abs();
+                local_err = local_err.max(delta);
+                // Alg 5 line 11: freeze nodes with a tiny non-zero delta.
+                if delta != 0.0 && delta < cutoff {
+                    frozen[ui].store(true, Ordering::Relaxed);
+                }
+            }
+            metrics.add_skipped(tid, skipped);
+            board.publish(tid, local_err);
+            iter += 1;
+            metrics.bump_iteration(tid);
+            if blocking {
+                if waiter.wait().is_aborted() {
+                    return;
+                }
+                let global_err = board.global_max();
+                for u in range.clone() {
+                    prev[u as usize].store(pr[u as usize].load());
+                }
+                if waiter.wait().is_aborted() {
+                    return;
+                }
+                if global_err <= cfg.threshold {
+                    converged.store(true, Ordering::Release);
+                    return;
+                }
+            } else {
+                let merged = board.global_max();
+                if merged <= cfg.threshold {
+                    calm += 1;
+                    if calm >= 2 {
+                        return;
+                    }
+                } else {
+                    calm = 0;
+                }
+                std::thread::yield_now();
+            }
+            if iter >= cfg.max_iterations {
+                capped.store(true, Ordering::Release);
+                return;
+            }
+        }
+    });
+
+    let done = if blocking {
+        converged.load(Ordering::Acquire)
+    } else {
+        !capped.load(Ordering::Acquire)
+    };
+    PrResult {
+        variant,
+        ranks: snapshot(&pr),
+        iterations: metrics.max_iterations(),
+        per_thread_iterations: metrics.iterations_per_thread(),
+        elapsed: start.elapsed(),
+        converged: done && !outcome.dnf,
+        barrier_wait_secs: barrier.total_wait_secs(),
+        dnf: outcome.dnf,
+    }
+}
+
+/// No-Sync-Opt-Identical: perforation + identical-classes + no barriers —
+/// the most aggressive program in Figs 1–2.
+pub fn run_nosync_opt_identical(g: &Csr, cfg: &PrConfig, _parts: &Partitions) -> PrResult {
+    let n = g.num_vertices();
+    let threads = cfg.threads;
+    if n == 0 {
+        return empty_result(Variant::NoSyncOptIdentical, threads);
+    }
+    let start = Instant::now();
+    let classes = IdenticalClasses::compute(g);
+    let d = cfg.damping;
+    let base = (1.0 - d) / n as f64;
+    let cutoff = cfg.threshold * cfg.perforation_factor;
+    let inv_out = inv_out_degrees(g);
+
+    let loads: Vec<usize> = classes
+        .representatives
+        .iter()
+        .map(|&r| g.in_degree(r).max(1))
+        .collect();
+    let chunks = split_classes(&loads, threads);
+
+    let pr = atomic_vec(n, 1.0 / n as f64);
+    let frozen: Vec<AtomicBool> =
+        (0..classes.num_classes()).map(|_| AtomicBool::new(false)).collect();
+
+    let board = ErrorBoard::new(threads);
+    let metrics = RunMetrics::new(threads);
+    let capped = AtomicBool::new(false);
+
+    let outcome = run_workers(threads, cfg.dnf_timeout, &[], |tid, stop| {
+        let chunk = chunks[tid].clone();
+        let mut iter = 0u64;
+        let mut calm = 0u32; // confirmation sweeps; see nosync.rs
+        loop {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            if cfg.faults.apply(tid, iter) {
+                return;
+            }
+            let mut local_err: f64 = 0.0;
+            let mut skipped = 0u64;
+            for c in chunk.clone() {
+                if frozen[c].load(Ordering::Relaxed) {
+                    skipped += classes.members[c].len() as u64;
+                    continue;
+                }
+                let rep = classes.representatives[c];
+                let previous = pr[rep as usize].load();
+                let mut sum = 0.0;
+                for &v in g.in_neighbors(rep) {
+                    sum += pr[v as usize].load() * inv_out[v as usize];
+                    amplify_work(cfg.work_amplify);
+                }
+                let new = base + d * sum;
+                for &m in &classes.members[c] {
+                    pr[m as usize].store(new);
+                }
+                let delta = (new - previous).abs();
+                local_err = local_err.max(delta);
+                if delta != 0.0 && delta < cutoff {
+                    frozen[c].store(true, Ordering::Relaxed);
+                }
+            }
+            metrics.add_skipped(tid, skipped);
+            board.publish(tid, local_err);
+            iter += 1;
+            metrics.bump_iteration(tid);
+            let merged = board.global_max();
+            if merged <= cfg.threshold {
+                calm += 1;
+                if calm >= 2 {
+                    return;
+                }
+            } else {
+                calm = 0;
+            }
+            if iter >= cfg.max_iterations {
+                capped.store(true, Ordering::Release);
+                return;
+            }
+            std::thread::yield_now();
+        }
+    });
+
+    PrResult {
+        variant: Variant::NoSyncOptIdentical,
+        ranks: snapshot(&pr),
+        iterations: metrics.max_iterations(),
+        per_thread_iterations: metrics.iterations_per_thread(),
+        elapsed: start.elapsed(),
+        converged: !capped.load(Ordering::Acquire) && !outcome.dnf,
+        barrier_wait_secs: 0.0,
+        dnf: outcome.dnf,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic;
+    use crate::pagerank::{self, seq};
+
+    fn cfg(threads: usize) -> PrConfig {
+        // threshold loose enough that perforation (cutoff = thr * 1e-5)
+        // actually triggers before global convergence on f64.
+        PrConfig { threads, threshold: 1e-8, ..PrConfig::default() }
+    }
+
+    #[test]
+    fn barrier_opt_close_to_sequential() {
+        let g = synthetic::web_replica(600, 6, 3);
+        let c = cfg(3);
+        let r = pagerank::run(&g, Variant::BarrierOpt, &c).unwrap();
+        assert!(r.converged);
+        let (sr, _, _) = seq::solve(&g, &c);
+        // approximate: small but typically non-zero L1
+        assert!(r.l1_norm(&sr) < 1e-3, "l1 {}", r.l1_norm(&sr));
+    }
+
+    #[test]
+    fn nosync_opt_close_to_sequential() {
+        let g = synthetic::web_replica(600, 6, 4);
+        let c = cfg(4);
+        let r = pagerank::run(&g, Variant::NoSyncOpt, &c).unwrap();
+        assert!(r.converged);
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.l1_norm(&sr) < 1e-3, "l1 {}", r.l1_norm(&sr));
+    }
+
+    #[test]
+    fn nosync_opt_identical_close_to_sequential() {
+        let g = synthetic::web_replica(600, 6, 5);
+        let c = cfg(4);
+        let r = pagerank::run(&g, Variant::NoSyncOptIdentical, &c).unwrap();
+        assert!(r.converged);
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.l1_norm(&sr) < 1e-3, "l1 {}", r.l1_norm(&sr));
+    }
+
+    #[test]
+    fn perforation_converges_on_fixtures() {
+        let c = cfg(2);
+        for g in [synthetic::cycle(40), synthetic::star(40), synthetic::chain(40)] {
+            for v in [Variant::BarrierOpt, Variant::NoSyncOpt, Variant::NoSyncOptIdentical] {
+                let r = pagerank::run(&g, v, &c).unwrap();
+                assert!(r.converged, "{v} on {}", g.name);
+                assert!(r.ranks.iter().all(|x| x.is_finite() && *x > 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn tighter_factor_freezes_less_and_is_more_accurate() {
+        let g = synthetic::web_replica(800, 6, 6);
+        let loose = PrConfig { perforation_factor: 1e-1, ..cfg(2) };
+        let tight = PrConfig { perforation_factor: 1e-7, ..cfg(2) };
+        let (sr, _, _) = seq::solve(&g, &cfg(2));
+        let rl = pagerank::run(&g, Variant::BarrierOpt, &loose).unwrap();
+        let rt = pagerank::run(&g, Variant::BarrierOpt, &tight).unwrap();
+        assert!(
+            rt.l1_norm(&sr) <= rl.l1_norm(&sr) + 1e-12,
+            "tight {} vs loose {}",
+            rt.l1_norm(&sr),
+            rl.l1_norm(&sr)
+        );
+    }
+}

@@ -1,0 +1,202 @@
+//! Sequential PageRank — the baseline every speedup and L1-norm in the
+//! paper is measured against (§5.3: "speed-up is calculated using the ratio
+//! of Sequential execution time vs. Parallel execution time").
+//!
+//! Classic two-array power iteration over the pull direction, Eq. 1:
+//! `pr(u) = (1-d)/n + d · Σ_{(v,u) ∈ E} prev(v)/outdeg(v)`, terminating when
+//! the max per-vertex delta drops below the threshold.
+
+use crate::graph::{Csr, VertexId};
+use crate::pagerank::{PrConfig, PrResult, Variant};
+use std::time::Instant;
+
+/// Run the sequential baseline.
+pub fn run(g: &Csr, cfg: &PrConfig) -> PrResult {
+    let start = Instant::now();
+    let (ranks, iterations, converged) = solve(g, cfg);
+    PrResult {
+        variant: Variant::Sequential,
+        ranks,
+        iterations,
+        per_thread_iterations: vec![iterations],
+        elapsed: start.elapsed(),
+        converged,
+        barrier_wait_secs: 0.0,
+        dnf: false,
+    }
+}
+
+/// Core solver, also used directly by tests and by the XLA-path comparison.
+pub fn solve(g: &Csr, cfg: &PrConfig) -> (Vec<f64>, u64, bool) {
+    let n = g.num_vertices();
+    if n == 0 {
+        return (Vec::new(), 0, true);
+    }
+    let d = cfg.damping;
+    let base = (1.0 - d) / n as f64;
+    let mut prev = vec![1.0 / n as f64; n];
+    let mut pr = vec![0.0f64; n];
+    // Precompute 1/outdeg to keep the inner loop division-free (perf: the
+    // paper's Eq. 1 divides per edge; hoisting is numerics-identical here
+    // because each vertex's reciprocal is a single rounding).
+    let inv_out: Vec<f64> = (0..n as VertexId)
+        .map(|v| {
+            let od = g.out_degree(v);
+            if od == 0 {
+                0.0
+            } else {
+                1.0 / od as f64
+            }
+        })
+        .collect();
+
+    // Per-iteration contribution array: contrib[v] = prev[v] / outdeg(v).
+    // Folding the two random-access streams (prev + inv_out) into one
+    // halves the cache misses of the gather — the loop is memory-bound, so
+    // this is the single biggest lever (see EXPERIMENTS.md §Perf). The
+    // products are identical to computing them inside the gather, so the
+    // numerics are bit-exact.
+    let mut contrib = vec![0.0f64; n];
+    let mut iterations = 0u64;
+    let mut converged = false;
+    while iterations < cfg.max_iterations {
+        for v in 0..n {
+            contrib[v] = prev[v] * inv_out[v];
+        }
+        let mut err: f64 = 0.0;
+        for u in 0..n as VertexId {
+            let mut sum = 0.0;
+            for &v in g.in_neighbors(u) {
+                // SAFETY: CSR validation guarantees every edge endpoint is
+                // < n = contrib.len(); the bounds check was measurable in
+                // this loop (§Perf).
+                sum += unsafe { *contrib.get_unchecked(v as usize) };
+                crate::pagerank::amplify_work(cfg.work_amplify);
+            }
+            let new = base + d * sum;
+            err = err.max((new - prev[u as usize]).abs());
+            pr[u as usize] = new;
+        }
+        std::mem::swap(&mut pr, &mut prev);
+        iterations += 1;
+        if err <= cfg.threshold {
+            converged = true;
+            break;
+        }
+    }
+    // after the final swap, `prev` holds the newest ranks
+    (prev, iterations, converged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic;
+    use crate::pagerank::PrConfig;
+
+    fn cfg() -> PrConfig {
+        PrConfig { threshold: 1e-12, ..PrConfig::default() }
+    }
+
+    #[test]
+    fn cycle_is_uniform() {
+        let g = synthetic::cycle(10);
+        let r = run(&g, &cfg());
+        assert!(r.converged);
+        for &x in &r.ranks {
+            assert!((x - 0.1).abs() < 1e-9, "cycle rank {x}");
+        }
+    }
+
+    #[test]
+    fn complete_graph_is_uniform() {
+        let g = synthetic::complete(8);
+        let r = run(&g, &cfg());
+        assert!(r.converged);
+        for &x in &r.ranks {
+            assert!((x - 0.125).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn star_matches_closed_form() {
+        // hub 0, leaves 1..n-1. Fixed point:
+        //   h = (1-d)/n + d*(n-1)*l_in   where each leaf sends pr(leaf)/1
+        //   l = (1-d)/n + d*h/(n-1)
+        let n = 6usize;
+        let d = crate::DAMPING;
+        let g = synthetic::star(n);
+        let r = run(&g, &cfg());
+        assert!(r.converged);
+        let nf = n as f64;
+        let k = nf - 1.0;
+        // closed form: h = (1-d)/n * (1 + d*k) / (1 - d^2)
+        let h = (1.0 - d) / nf * (1.0 + d * k) / (1.0 - d * d);
+        let l = (1.0 - d) / nf + d * h / k;
+        assert!((r.ranks[0] - h).abs() < 1e-9, "hub {} vs {}", r.ranks[0], h);
+        for leaf in 1..n {
+            assert!((r.ranks[leaf] - l).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn chain_ranks_increase_downstream() {
+        let g = synthetic::chain(5);
+        let r = run(&g, &cfg());
+        assert!(r.converged);
+        // vertex 0 has no in-links: minimum rank; each later vertex
+        // accumulates damped mass from its predecessor... but 4 is dangling
+        // (keeps receiving from 3). Ranks must be strictly increasing except
+        // where mass leaks. Check monotone 0..4.
+        for i in 1..5 {
+            assert!(
+                r.ranks[i] > r.ranks[i - 1] - 1e-15,
+                "chain not monotone at {i}: {:?}",
+                r.ranks
+            );
+        }
+    }
+
+    #[test]
+    fn rank_sum_without_dangling_is_one() {
+        let g = synthetic::cycle(64);
+        let r = run(&g, &cfg());
+        let sum: f64 = r.ranks.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "sum {sum}");
+    }
+
+    #[test]
+    fn rank_sum_with_dangling_leaks() {
+        let g = synthetic::chain(10); // vertex 9 dangles
+        let r = run(&g, &cfg());
+        let sum: f64 = r.ranks.iter().sum();
+        assert!(sum < 1.0, "dangling mass should leak, sum {sum}");
+        assert!(sum > 0.0);
+    }
+
+    #[test]
+    fn iteration_cap_reports_unconverged() {
+        let g = synthetic::web_replica(500, 6, 3);
+        let r = run(&g, &PrConfig { max_iterations: 2, ..cfg() });
+        assert!(!r.converged);
+        assert_eq!(r.iterations, 2);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = crate::graph::GraphBuilder::new(0).build("nil");
+        let r = run(&g, &cfg());
+        assert!(r.converged);
+        assert!(r.ranks.is_empty());
+    }
+
+    #[test]
+    fn damping_zero_gives_uniform() {
+        let g = synthetic::web_replica(300, 5, 1);
+        let r = run(&g, &PrConfig { damping: 0.0, ..cfg() });
+        let n = g.num_vertices() as f64;
+        for &x in &r.ranks {
+            assert!((x - 1.0 / n).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Artifact discovery: the AOT pipeline writes one HLO-text file per
+//! (kernel, shape-bucket) pair with the parameters encoded in the filename,
+//! so the Rust side needs no side-channel manifest:
+//!
+//! * `ell_n{N}_k{K}.hlo.txt`   — Pallas ELL gather step for ≤N vertices
+//!   with in-degree ≤K (the Layer-1 kernel lowered through the Layer-2
+//!   model);
+//! * `dense_n{N}.hlo.txt`      — dense matmul step for ≤N vertices;
+//! * `dense_power_n{N}_t{T}.hlo.txt` — T fused power iterations
+//!   (`lax.scan`), used by the runtime bench to amortize dispatch.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// What computation an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// One ELL-format PageRank step: `(indices i32[N,K], weights f32[N,K],
+    /// pr f32[N], base f32[1]) -> f32[N]`.
+    EllStep,
+    /// One dense step: `(matrix f32[N,N], pr f32[N], base f32[1]) -> f32[N]`.
+    DenseStep,
+    /// `T` fused dense steps.
+    DensePower,
+}
+
+/// A discovered artifact and its shape bucket.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    pub kind: ArtifactKind,
+    pub path: PathBuf,
+    /// Max vertices.
+    pub n: usize,
+    /// Max in-degree (ELL only; 0 otherwise).
+    pub k: usize,
+    /// Fused steps (DensePower only; 1 otherwise).
+    pub t: usize,
+}
+
+impl ArtifactSpec {
+    /// Parse a filename like `ell_n1024_k32.hlo.txt`.
+    pub fn from_path(path: &Path) -> Result<Self> {
+        let stem = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .context("non-utf8 artifact name")?
+            .strip_suffix(".hlo.txt")
+            .context("artifact must end in .hlo.txt")?;
+        let mut parts = stem.split('_');
+        let kind = match parts.next() {
+            Some("ell") => ArtifactKind::EllStep,
+            Some("dense") => {
+                // `dense_n64` or `dense_power_n256_t8`
+                ArtifactKind::DenseStep
+            }
+            other => bail!("unknown artifact kind {other:?} in {stem}"),
+        };
+        let rest: Vec<&str> = parts.collect();
+        let (kind, fields) = if kind == ArtifactKind::DenseStep && rest.first() == Some(&"power") {
+            (ArtifactKind::DensePower, &rest[1..])
+        } else {
+            (kind, &rest[..])
+        };
+        let mut n = 0usize;
+        let mut k = 0usize;
+        let mut t = 1usize;
+        for f in fields {
+            if let Some(v) = f.strip_prefix('n') {
+                n = v.parse().with_context(|| format!("bad n in {stem}"))?;
+            } else if let Some(v) = f.strip_prefix('k') {
+                k = v.parse().with_context(|| format!("bad k in {stem}"))?;
+            } else if let Some(v) = f.strip_prefix('t') {
+                t = v.parse().with_context(|| format!("bad t in {stem}"))?;
+            } else {
+                bail!("unknown field '{f}' in artifact {stem}");
+            }
+        }
+        if n == 0 {
+            bail!("artifact {stem} missing n");
+        }
+        if kind == ArtifactKind::EllStep && k == 0 {
+            bail!("ELL artifact {stem} missing k");
+        }
+        Ok(Self { kind, path: path.to_path_buf(), n, k, t })
+    }
+
+    /// Scan a directory for artifacts (ignores unknown files).
+    pub fn discover(dir: &Path) -> Result<Vec<ArtifactSpec>> {
+        let mut specs = Vec::new();
+        if !dir.exists() {
+            return Ok(specs);
+        }
+        for entry in std::fs::read_dir(dir)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("txt") {
+                continue;
+            }
+            if let Ok(spec) = ArtifactSpec::from_path(&path) {
+                specs.push(spec);
+            }
+        }
+        specs.sort_by_key(|s| (s.n, s.k, s.t));
+        Ok(specs)
+    }
+
+    /// Smallest ELL bucket that fits a graph with `n` vertices and max
+    /// in-degree `k`.
+    pub fn best_ell(specs: &[ArtifactSpec], n: usize, k: usize) -> Option<&ArtifactSpec> {
+        specs
+            .iter()
+            .filter(|s| s.kind == ArtifactKind::EllStep && s.n >= n && s.k >= k)
+            .min_by_key(|s| (s.n, s.k))
+    }
+
+    /// Smallest dense bucket that fits `n` vertices.
+    pub fn best_dense(specs: &[ArtifactSpec], n: usize) -> Option<&ArtifactSpec> {
+        specs
+            .iter()
+            .filter(|s| s.kind == ArtifactKind::DenseStep && s.n >= n)
+            .min_by_key(|s| s.n)
+    }
+}
+
+/// Default artifact directory: `$PAGERANK_NB_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("PAGERANK_NB_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_ell() {
+        let s = ArtifactSpec::from_path(Path::new("artifacts/ell_n1024_k32.hlo.txt")).unwrap();
+        assert_eq!(s.kind, ArtifactKind::EllStep);
+        assert_eq!((s.n, s.k, s.t), (1024, 32, 1));
+    }
+
+    #[test]
+    fn parse_dense_and_power() {
+        let s = ArtifactSpec::from_path(Path::new("dense_n64.hlo.txt")).unwrap();
+        assert_eq!(s.kind, ArtifactKind::DenseStep);
+        assert_eq!((s.n, s.k, s.t), (64, 0, 1));
+        let p = ArtifactSpec::from_path(Path::new("dense_power_n256_t8.hlo.txt")).unwrap();
+        assert_eq!(p.kind, ArtifactKind::DensePower);
+        assert_eq!((p.n, p.t), (256, 8));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactSpec::from_path(Path::new("bogus.hlo.txt")).is_err());
+        assert!(ArtifactSpec::from_path(Path::new("ell_n16.hlo.txt")).is_err()); // no k
+        assert!(ArtifactSpec::from_path(Path::new("ell_k8.hlo.txt")).is_err()); // no n
+        assert!(ArtifactSpec::from_path(Path::new("model.bin")).is_err());
+    }
+
+    #[test]
+    fn bucket_selection_prefers_smallest_fit() {
+        let mk = |n, k| ArtifactSpec {
+            kind: ArtifactKind::EllStep,
+            path: PathBuf::new(),
+            n,
+            k,
+            t: 1,
+        };
+        let specs = vec![mk(256, 16), mk(1024, 32), mk(4096, 64)];
+        assert_eq!(ArtifactSpec::best_ell(&specs, 200, 10).unwrap().n, 256);
+        assert_eq!(ArtifactSpec::best_ell(&specs, 300, 10).unwrap().n, 1024);
+        assert_eq!(ArtifactSpec::best_ell(&specs, 200, 20).unwrap().n, 1024);
+        assert!(ArtifactSpec::best_ell(&specs, 5000, 10).is_none());
+        assert!(ArtifactSpec::best_ell(&specs, 100, 100).is_none());
+    }
+
+    #[test]
+    fn discover_ignores_junk() {
+        let dir = std::env::temp_dir().join("pagerank_nb_artifact_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("ell_n256_k16.hlo.txt"), "hlo").unwrap();
+        std::fs::write(dir.join("README.txt"), "not an artifact").unwrap();
+        std::fs::write(dir.join("notes.md"), "junk").unwrap();
+        let specs = ArtifactSpec::discover(&dir).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].n, 256);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn discover_missing_dir_is_empty() {
+        let specs = ArtifactSpec::discover(Path::new("/nonexistent/x9q")).unwrap();
+        assert!(specs.is_empty());
+    }
+}

@@ -1,0 +1,155 @@
+//! The PJRT engine: compile HLO-text artifacts once, execute many times.
+//!
+//! Mirrors `/opt/xla-example/src/bin/load_hlo.rs`, wrapped for the
+//! coordinator: an [`Engine`] owns the CPU `PjRtClient` and a compile cache
+//! keyed by artifact path; a [`LoadedStep`] is one compiled PageRank step
+//! executable with typed `run_*` entry points.
+
+use crate::runtime::artifacts::{ArtifactKind, ArtifactSpec};
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// PJRT client + compile cache. One per process is plenty (CPU platform).
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<LoadedStep>>>,
+}
+
+impl Engine {
+    /// Create a CPU engine.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by path).
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<Arc<LoadedStep>> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(m) = cache.get(&spec.path) {
+                return Ok(Arc::clone(m));
+            }
+        }
+        let loaded = Arc::new(LoadedStep::compile(&self.client, spec)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(spec.path.clone(), Arc::clone(&loaded));
+        Ok(loaded)
+    }
+
+    /// Convenience: discover artifacts in `dir` and load the best ELL
+    /// bucket for an (n, max-in-degree) workload.
+    pub fn load_best_ell(&self, dir: &Path, n: usize, k: usize) -> Result<Arc<LoadedStep>> {
+        let specs = ArtifactSpec::discover(dir)?;
+        let spec = ArtifactSpec::best_ell(&specs, n, k).with_context(|| {
+            format!(
+                "no ELL artifact for n={n}, k={k} in {} ({} artifacts found) — run `make artifacts`",
+                dir.display(),
+                specs.len()
+            )
+        })?;
+        self.load(spec)
+    }
+}
+
+/// One compiled PageRank-step executable.
+pub struct LoadedStep {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl LoadedStep {
+    fn compile(client: &xla::PjRtClient, spec: &ArtifactSpec) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(&spec.path).with_context(|| {
+            format!("parsing HLO text {} (re-run `make artifacts`?)", spec.path.display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.path.display()))?;
+        Ok(Self { exe, spec: spec.clone() })
+    }
+
+    fn execute(&self, args: &[xla::Literal]) -> Result<Vec<f32>> {
+        let result = self.exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Run one ELL step: `pr' = base + Σ_k weights[u,k] · pr[indices[u,k]]`.
+    ///
+    /// `indices`/`weights` are row-major `[n, k]` for this artifact's
+    /// bucket; `pr` has length `n`; `base` is `(1-d)/n_actual`.
+    pub fn run_ell(
+        &self,
+        indices: &[i32],
+        weights: &[f32],
+        pr: &[f32],
+        base: f32,
+    ) -> Result<Vec<f32>> {
+        if self.spec.kind != ArtifactKind::EllStep {
+            bail!("artifact {} is not an ELL step", self.spec.path.display());
+        }
+        let (n, k) = (self.spec.n, self.spec.k);
+        if indices.len() != n * k || weights.len() != n * k || pr.len() != n {
+            bail!(
+                "shape mismatch: bucket ({n},{k}), got idx {}, w {}, pr {}",
+                indices.len(),
+                weights.len(),
+                pr.len()
+            );
+        }
+        let idx = xla::Literal::vec1(indices).reshape(&[n as i64, k as i64])?;
+        let w = xla::Literal::vec1(weights).reshape(&[n as i64, k as i64])?;
+        let p = xla::Literal::vec1(pr);
+        let b = xla::Literal::vec1(&[base]);
+        self.execute(&[idx, w, p, b])
+    }
+
+    /// Run one dense step: `pr' = base + M · pr`.
+    pub fn run_dense(&self, matrix: &[f32], pr: &[f32], base: f32) -> Result<Vec<f32>> {
+        if !matches!(self.spec.kind, ArtifactKind::DenseStep | ArtifactKind::DensePower) {
+            bail!("artifact {} is not a dense step", self.spec.path.display());
+        }
+        let n = self.spec.n;
+        if matrix.len() != n * n || pr.len() != n {
+            bail!("shape mismatch: bucket {n}, got m {}, pr {}", matrix.len(), pr.len());
+        }
+        let m = xla::Literal::vec1(matrix).reshape(&[n as i64, n as i64])?;
+        let p = xla::Literal::vec1(pr);
+        let b = xla::Literal::vec1(&[base]);
+        self.execute(&[m, p, b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full engine tests need `make artifacts` and live in
+    // rust/tests/integration_runtime.rs; here we only cover cheap pieces.
+
+    #[test]
+    fn engine_creates_cpu_client() {
+        let e = Engine::cpu().expect("PJRT CPU client");
+        assert_eq!(e.platform(), "cpu");
+    }
+
+    #[test]
+    fn load_best_ell_errors_without_artifacts() {
+        let e = Engine::cpu().unwrap();
+        let err = match e.load_best_ell(Path::new("/nonexistent/artifacts"), 10, 4) {
+            Err(e) => e,
+            Ok(_) => panic!("expected artifact-discovery error"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from the Rust hot path.
+//!
+//! The interchange format is **HLO text** (not a serialized
+//! `HloModuleProto`): jax ≥ 0.5 emits protos with 64-bit instruction ids
+//! that the crate's XLA (xla_extension 0.5.1) rejects, while the text
+//! parser reassigns ids — see `/opt/xla-example/README.md` and
+//! DESIGN.md §Hardware-Adaptation.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! entire request-path dependency surface: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`.
+
+pub mod artifacts;
+pub mod executable;
+
+pub use artifacts::{ArtifactKind, ArtifactSpec};
+pub use executable::{Engine, LoadedStep};

@@ -1,0 +1,172 @@
+//! Atomic `f64` cells.
+//!
+//! The paper's No-Sync algorithm deliberately allows concurrent reads of a
+//! rank while one thread writes it ("read-write conflicts but not
+//! write-write conflicts", §4.3), relying on the x86 behaviour of aligned
+//! 8-byte stores. In Rust that exact pattern on `&mut [f64]` would be UB, so
+//! the shared rank vector is a `[AtomicF64]` with `Relaxed` ordering — the
+//! compiled code on x86-64 is the identical `mov`, but the semantics are
+//! defined on every platform.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// An `f64` stored as its bit pattern in an `AtomicU64`.
+#[repr(transparent)]
+#[derive(Debug, Default)]
+pub struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    #[inline]
+    pub fn new(x: f64) -> Self {
+        Self(AtomicU64::new(x.to_bits()))
+    }
+
+    /// Relaxed load — the No-Sync read path. A torn read is impossible
+    /// (8-byte atomic); the value may be from the current or a neighbouring
+    /// iteration, which is exactly the relaxation Lemma 1 reasons about.
+    #[inline]
+    pub fn load(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Relaxed store — the single-writer update path.
+    #[inline]
+    pub fn store(&self, x: f64) {
+        self.0.store(x.to_bits(), Ordering::Relaxed)
+    }
+
+    /// Acquire load, for cross-iteration handoffs where the reader must also
+    /// observe writes preceding the store (wait-free helper bookkeeping).
+    #[inline]
+    pub fn load_acquire(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Acquire))
+    }
+
+    /// Release store, pairing with [`Self::load_acquire`].
+    #[inline]
+    pub fn store_release(&self, x: f64) {
+        self.0.store(x.to_bits(), Ordering::Release)
+    }
+
+    /// CAS on the exact bit pattern (used by fetch_max below and by the
+    /// wait-free global-error merge).
+    #[inline]
+    pub fn compare_exchange_bits(&self, current: f64, new: f64) -> Result<f64, f64> {
+        self.0
+            .compare_exchange(
+                current.to_bits(),
+                new.to_bits(),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .map(f64::from_bits)
+            .map_err(f64::from_bits)
+    }
+
+    /// Atomically `self = max(self, x)`; returns the previous value.
+    /// Lock-free: CAS loop, at most as many retries as concurrent increases.
+    pub fn fetch_max(&self, x: f64) -> f64 {
+        let mut cur = self.load_acquire();
+        loop {
+            if cur >= x {
+                return cur;
+            }
+            match self.compare_exchange_bits(cur, x) {
+                Ok(prev) => return prev,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// Allocate a shared rank vector initialized to `x`.
+pub fn atomic_vec(n: usize, x: f64) -> Vec<AtomicF64> {
+    (0..n).map(|_| AtomicF64::new(x)).collect()
+}
+
+/// Snapshot a shared rank vector into a plain `Vec<f64>`.
+pub fn snapshot(v: &[AtomicF64]) -> Vec<f64> {
+    v.iter().map(|a| a.load()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn roundtrip_bits() {
+        let a = AtomicF64::new(0.0);
+        for x in [0.0, -0.0, 1.5, f64::MIN_POSITIVE, 1e300, -7.25] {
+            a.store(x);
+            assert_eq!(a.load().to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn nan_roundtrip_preserves_bits() {
+        let a = AtomicF64::new(f64::NAN);
+        assert!(a.load().is_nan());
+    }
+
+    #[test]
+    fn fetch_max_sequential() {
+        let a = AtomicF64::new(1.0);
+        assert_eq!(a.fetch_max(0.5), 1.0);
+        assert_eq!(a.load(), 1.0);
+        assert_eq!(a.fetch_max(2.0), 1.0);
+        assert_eq!(a.load(), 2.0);
+    }
+
+    #[test]
+    fn fetch_max_concurrent_takes_global_max() {
+        let a = Arc::new(AtomicF64::new(f64::NEG_INFINITY));
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let a = Arc::clone(&a);
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        a.fetch_max((t * 1000 + i) as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(a.load(), 7999.0);
+    }
+
+    #[test]
+    fn concurrent_store_load_no_tearing() {
+        // Writers alternate between two bit patterns whose halves differ;
+        // readers must only ever observe one of the two.
+        let a = Arc::new(AtomicF64::new(f64::from_bits(0xAAAA_AAAA_AAAA_AAAA)));
+        let p1 = f64::from_bits(0xAAAA_AAAA_AAAA_AAAA);
+        let p2 = f64::from_bits(0x5555_5555_5555_5555);
+        std::thread::scope(|s| {
+            let w = Arc::clone(&a);
+            s.spawn(move || {
+                for i in 0..20_000 {
+                    w.store(if i % 2 == 0 { p1 } else { p2 });
+                }
+            });
+            for _ in 0..2 {
+                let r = Arc::clone(&a);
+                s.spawn(move || {
+                    for _ in 0..20_000 {
+                        let bits = r.load().to_bits();
+                        assert!(
+                            bits == p1.to_bits() || bits == p2.to_bits(),
+                            "torn read: {bits:#x}"
+                        );
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn snapshot_matches_stores() {
+        let v = atomic_vec(4, 0.25);
+        v[2].store(9.0);
+        assert_eq!(snapshot(&v), vec![0.25, 0.25, 9.0, 0.25]);
+    }
+}

@@ -1,0 +1,224 @@
+//! Sense-reversing spin barrier — the blocking substrate of Algorithms 1–2.
+//!
+//! `std::sync::Barrier` would work for the happy path, but the paper's
+//! evaluation (Figs 8–9) injects *sleeping* and *failed* threads and observes
+//! what barrier-based algorithms do: they stall. To reproduce that without
+//! deadlocking the test harness, this barrier supports **abort**: when the
+//! fault injector marks a participant dead, every current and future waiter
+//! unblocks with [`BarrierWait::Aborted`] and the executor records the run as
+//! DNF. The barrier also exposes its arrival counter so the telemetry layer
+//! can measure time-at-barrier (the quantity the paper's speedup argument is
+//! about).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+/// Outcome of a [`SenseBarrier::wait`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BarrierWait {
+    /// All parties arrived; this thread was the last one in.
+    Leader,
+    /// All parties arrived; another thread was the leader.
+    Member,
+    /// The barrier was aborted (a participant failed); computation should
+    /// unwind.
+    Aborted,
+}
+
+impl BarrierWait {
+    pub fn is_aborted(self) -> bool {
+        matches!(self, BarrierWait::Aborted)
+    }
+}
+
+/// Sense-reversing centralized barrier.
+pub struct SenseBarrier {
+    parties: usize,
+    /// Number of parties still to arrive in the current phase.
+    count: AtomicUsize,
+    /// Global sense: flips each completed phase.
+    sense: AtomicBool,
+    aborted: AtomicBool,
+    /// Cumulative nanoseconds all threads have spent spinning at this
+    /// barrier (telemetry; relaxed counter, approximate by design).
+    wait_nanos: AtomicU64,
+}
+
+impl SenseBarrier {
+    pub fn new(parties: usize) -> Self {
+        assert!(parties > 0, "barrier needs at least one party");
+        Self {
+            parties,
+            count: AtomicUsize::new(parties),
+            sense: AtomicBool::new(false),
+            aborted: AtomicBool::new(false),
+            wait_nanos: AtomicU64::new(0),
+        }
+    }
+
+    pub fn parties(&self) -> usize {
+        self.parties
+    }
+
+    /// Make a per-thread waiter handle (holds the thread-local sense).
+    pub fn waiter(&self) -> Waiter<'_> {
+        Waiter { barrier: self, local_sense: false }
+    }
+
+    /// Abort the barrier: unblock everyone, now and forever.
+    pub fn abort(&self) {
+        self.aborted.store(true, Ordering::Release);
+    }
+
+    pub fn is_aborted(&self) -> bool {
+        self.aborted.load(Ordering::Acquire)
+    }
+
+    /// Total time threads have spent waiting here, in seconds.
+    pub fn total_wait_secs(&self) -> f64 {
+        self.wait_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+/// Per-thread handle carrying the local sense bit.
+pub struct Waiter<'b> {
+    barrier: &'b SenseBarrier,
+    local_sense: bool,
+}
+
+impl Waiter<'_> {
+    /// Arrive at the barrier and wait for the phase to complete.
+    ///
+    /// Spin strategy: short `spin_loop` bursts, then `yield_now` — the
+    /// reproduction host may have fewer cores than threads (the paper used
+    /// 56 hardware threads), so pure spinning would livelock a timesliced
+    /// run.
+    pub fn wait(&mut self) -> BarrierWait {
+        let b = self.barrier;
+        if b.is_aborted() {
+            return BarrierWait::Aborted;
+        }
+        self.local_sense = !self.local_sense;
+        let my_sense = self.local_sense;
+        if b.count.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last arrival: reset and release the phase.
+            b.count.store(b.parties, Ordering::Release);
+            b.sense.store(my_sense, Ordering::Release);
+            return BarrierWait::Leader;
+        }
+        let start = std::time::Instant::now();
+        let mut spins = 0u32;
+        while b.sense.load(Ordering::Acquire) != my_sense {
+            if b.is_aborted() {
+                b.wait_nanos
+                    .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                return BarrierWait::Aborted;
+            }
+            spins += 1;
+            if spins < 64 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        b.wait_nanos
+            .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        BarrierWait::Member
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn single_party_never_blocks() {
+        let b = SenseBarrier::new(1);
+        let mut w = b.waiter();
+        for _ in 0..100 {
+            assert_eq!(w.wait(), BarrierWait::Leader);
+        }
+    }
+
+    #[test]
+    fn phases_are_synchronized() {
+        // Classic barrier test: no thread may enter phase k+1 while another
+        // is still in phase k.
+        const T: usize = 4;
+        const PHASES: usize = 50;
+        let b = Arc::new(SenseBarrier::new(T));
+        let phase_counts: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..PHASES).map(|_| AtomicUsize::new(0)).collect());
+        std::thread::scope(|s| {
+            for _ in 0..T {
+                let b = Arc::clone(&b);
+                let pc = Arc::clone(&phase_counts);
+                s.spawn(move || {
+                    let mut w = b.waiter();
+                    for p in 0..PHASES {
+                        pc[p].fetch_add(1, Ordering::SeqCst);
+                        let r = w.wait();
+                        assert!(!r.is_aborted());
+                        // After the barrier, everyone must have bumped p.
+                        assert_eq!(pc[p].load(Ordering::SeqCst), T, "phase {p} leaked");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn exactly_one_leader_per_phase() {
+        const T: usize = 3;
+        let b = Arc::new(SenseBarrier::new(T));
+        let leaders = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..T {
+                let b = Arc::clone(&b);
+                let leaders = Arc::clone(&leaders);
+                s.spawn(move || {
+                    let mut w = b.waiter();
+                    for _ in 0..20 {
+                        if w.wait() == BarrierWait::Leader {
+                            leaders.fetch_add(1, Ordering::SeqCst);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(leaders.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    fn abort_unblocks_waiters() {
+        let b = Arc::new(SenseBarrier::new(2));
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || {
+            let mut w = b2.waiter();
+            w.wait() // only 1 of 2 parties: blocks until abort
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        b.abort();
+        assert_eq!(h.join().unwrap(), BarrierWait::Aborted);
+        // And future waits return immediately.
+        let mut w = b.waiter();
+        assert_eq!(w.wait(), BarrierWait::Aborted);
+    }
+
+    #[test]
+    fn wait_time_telemetry_accumulates() {
+        let b = Arc::new(SenseBarrier::new(2));
+        let b2 = Arc::clone(&b);
+        let h = std::thread::spawn(move || {
+            let mut w = b2.waiter();
+            w.wait();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let mut w = b.waiter();
+        w.wait();
+        h.join().unwrap();
+        // The early arriver waited ~30ms.
+        assert!(b.total_wait_secs() >= 0.02, "wait {}", b.total_wait_secs());
+    }
+}

@@ -1,0 +1,268 @@
+//! CAS-object cells for the wait-free Barrier-Helper algorithm (Alg 6).
+//!
+//! The paper's C++ implementation uses three CAS-able descriptor structs
+//! (`PrCASObj`, `ThreadCASObj`, `GlobalCASObj`), relying on double-width
+//! (128-bit) atomics. Stable Rust has no portable `AtomicU128`, so each
+//! descriptor is rebuilt from 64-bit primitives with equivalent protocol
+//! guarantees:
+//!
+//! * [`VersionedCell`] ≙ `PrCASObj { itrNum, rank }` — a per-vertex rank
+//!   cell whose version counter *is* the iteration number. Commit uses a
+//!   seqlock-style even/odd protocol: the CAS on the version word decides
+//!   the unique winner for an iteration; losers (helpers that computed the
+//!   same deterministic value) simply move on.
+//! * [`PackedProgress`] ≙ `ThreadCASObj { itrNum, currNode }` — a thread's
+//!   progress descriptor packed `iter:u32 | node:u32` into one `AtomicU64`
+//!   so helpers can atomically claim the next vertex of a stalled thread.
+//! * [`crate::sync::atomics::AtomicF64::fetch_max`] handles the error
+//!   fields (`thErr`, global `err`): max-merge is idempotent, so duplicated
+//!   helper updates are harmless.
+//!
+//! **Fault model.** Between a winner's version-CAS and its value publish
+//! there is a two-store commit window; a thread dying *inside* that window
+//! could wedge readers of that one cell. The paper's own fault injection
+//! (and ours, see `coordinator::faults`) kills threads only at iteration
+//! boundaries, outside the window; on hardware with `cmpxchg16b` the window
+//! closes entirely. DESIGN.md §Hardware-Adaptation records this substitution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A versioned `f64` cell: `(iteration, value)` with single-winner commits.
+///
+/// Version word encoding: `2*iter` = stable at `iter`, `2*iter + 1` =
+/// commit for `iter -> iter+1` in flight.
+#[derive(Debug)]
+pub struct VersionedCell {
+    version: AtomicU64,
+    value: AtomicU64, // f64 bits
+}
+
+impl VersionedCell {
+    pub fn new(value: f64) -> Self {
+        Self {
+            version: AtomicU64::new(0),
+            value: AtomicU64::new(value.to_bits()),
+        }
+    }
+
+    /// Consistent read: `(iteration, value)`. Spins (with yield) while a
+    /// commit is in flight — bounded by the commit window (two stores).
+    pub fn read(&self) -> (u64, f64) {
+        let mut spins = 0u32;
+        loop {
+            let v1 = self.version.load(Ordering::Acquire);
+            if v1 % 2 == 0 {
+                let val = f64::from_bits(self.value.load(Ordering::Acquire));
+                let v2 = self.version.load(Ordering::Acquire);
+                if v1 == v2 {
+                    return (v1 / 2, val);
+                }
+            }
+            spins += 1;
+            if spins < 32 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+
+    /// Value only (callers that already know the iteration is stable).
+    pub fn read_value(&self) -> f64 {
+        self.read().1
+    }
+
+    /// Current iteration number.
+    pub fn iteration(&self) -> u64 {
+        self.version.load(Ordering::Acquire) / 2
+    }
+
+    /// Attempt to commit `value` as the rank for `expected_iter + 1`
+    /// (i.e. advance the cell from `expected_iter`). Exactly one concurrent
+    /// caller with the same `expected_iter` wins; all others get `false`.
+    ///
+    /// In Algorithm 6 every contender computed the same deterministic value
+    /// from the frozen previous-iteration array, so losing is not an error —
+    /// the vertex is simply already done.
+    pub fn try_advance(&self, expected_iter: u64, value: f64) -> bool {
+        let stable = expected_iter * 2;
+        if self
+            .version
+            .compare_exchange(stable, stable + 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return false;
+        }
+        self.value.store(value.to_bits(), Ordering::Release);
+        self.version.store(stable + 2, Ordering::Release);
+        true
+    }
+
+    /// Non-versioned reset (single-threaded setup only).
+    pub fn reset(&self, value: f64) {
+        self.value.store(value.to_bits(), Ordering::Release);
+        self.version.store(0, Ordering::Release);
+    }
+}
+
+/// `ThreadCASObj`: a thread's `(iteration, next_vertex)` progress word.
+///
+/// Helpers CAS this forward to claim work items of a stalled thread; the
+/// single winner per `(iter, node)` pair prevents duplicated *claims* (the
+/// computation itself is idempotent anyway).
+#[derive(Debug)]
+pub struct PackedProgress(AtomicU64);
+
+impl PackedProgress {
+    pub fn new(iter: u32, node: u32) -> Self {
+        Self(AtomicU64::new(Self::pack(iter, node)))
+    }
+
+    #[inline]
+    fn pack(iter: u32, node: u32) -> u64 {
+        ((iter as u64) << 32) | node as u64
+    }
+
+    #[inline]
+    fn unpack(word: u64) -> (u32, u32) {
+        ((word >> 32) as u32, word as u32)
+    }
+
+    pub fn load(&self) -> (u32, u32) {
+        Self::unpack(self.0.load(Ordering::Acquire))
+    }
+
+    /// CAS from an observed `(iter, node)` to a new one. Returns whether the
+    /// caller was the winner.
+    pub fn try_advance(&self, from: (u32, u32), to: (u32, u32)) -> bool {
+        self.0
+            .compare_exchange(
+                Self::pack(from.0, from.1),
+                Self::pack(to.0, to.1),
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
+    }
+
+    /// Unconditional store (setup / owner-only paths).
+    pub fn store(&self, iter: u32, node: u32) {
+        self.0.store(Self::pack(iter, node), Ordering::Release);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn versioned_cell_single_thread_lifecycle() {
+        let c = VersionedCell::new(0.5);
+        assert_eq!(c.read(), (0, 0.5));
+        assert!(c.try_advance(0, 1.5));
+        assert_eq!(c.read(), (1, 1.5));
+        // Re-advancing from the stale iteration fails.
+        assert!(!c.try_advance(0, 9.9));
+        assert_eq!(c.read(), (1, 1.5));
+        assert!(c.try_advance(1, 2.5));
+        assert_eq!(c.read(), (2, 2.5));
+    }
+
+    #[test]
+    fn versioned_cell_exactly_one_winner() {
+        const T: usize = 8;
+        for round in 0..50u64 {
+            let c = Arc::new(VersionedCell::new(0.0));
+            // bring cell to iteration `round`
+            for i in 0..round {
+                assert!(c.try_advance(i, i as f64));
+            }
+            let wins = Arc::new(AtomicUsize::new(0));
+            std::thread::scope(|s| {
+                for _ in 0..T {
+                    let c = Arc::clone(&c);
+                    let wins = Arc::clone(&wins);
+                    s.spawn(move || {
+                        if c.try_advance(round, 42.0) {
+                            wins.fetch_add(1, Ordering::SeqCst);
+                        }
+                    });
+                }
+            });
+            assert_eq!(wins.load(Ordering::SeqCst), 1);
+            assert_eq!(c.read(), (round + 1, 42.0));
+        }
+    }
+
+    #[test]
+    fn versioned_cell_readers_see_consistent_pairs() {
+        // Writers advance with value == iteration; readers must never see a
+        // mismatched (iter, value) pair.
+        let c = Arc::new(VersionedCell::new(0.0));
+        std::thread::scope(|s| {
+            let w = Arc::clone(&c);
+            s.spawn(move || {
+                for i in 0..10_000u64 {
+                    assert!(w.try_advance(i, (i + 1) as f64));
+                }
+            });
+            for _ in 0..2 {
+                let r = Arc::clone(&c);
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        let (iter, val) = r.read();
+                        assert_eq!(val, iter as f64, "inconsistent cell read");
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn packed_progress_roundtrip() {
+        let p = PackedProgress::new(3, 17);
+        assert_eq!(p.load(), (3, 17));
+        assert!(p.try_advance((3, 17), (3, 18)));
+        assert_eq!(p.load(), (3, 18));
+        assert!(!p.try_advance((3, 17), (3, 19)), "stale CAS must fail");
+        p.store(4, 0);
+        assert_eq!(p.load(), (4, 0));
+    }
+
+    #[test]
+    fn packed_progress_extreme_values() {
+        let p = PackedProgress::new(u32::MAX, u32::MAX);
+        assert_eq!(p.load(), (u32::MAX, u32::MAX));
+    }
+
+    #[test]
+    fn packed_progress_concurrent_claims_are_unique() {
+        // T threads race to claim nodes 0..N in order; each node must be
+        // claimed exactly once.
+        const N: u32 = 2000;
+        const T: usize = 4;
+        let p = Arc::new(PackedProgress::new(0, 0));
+        let claims: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..N).map(|_| AtomicUsize::new(0)).collect());
+        std::thread::scope(|s| {
+            for _ in 0..T {
+                let p = Arc::clone(&p);
+                let claims = Arc::clone(&claims);
+                s.spawn(move || loop {
+                    let (iter, node) = p.load();
+                    if node >= N {
+                        break;
+                    }
+                    if p.try_advance((iter, node), (iter, node + 1)) {
+                        claims[node as usize].fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        for (i, c) in claims.iter().enumerate() {
+            assert_eq!(c.load(Ordering::SeqCst), 1, "node {i} claimed != once");
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! Synchronization substrate for the PageRank variants.
+//!
+//! The paper's C++ implementation relies on POSIX threads, pthread barriers,
+//! benign data races on `std::vector<double>`, and 128-bit CAS objects. This
+//! module rebuilds each primitive with defined semantics in the Rust memory
+//! model:
+//!
+//! * [`barrier::SenseBarrier`] — a sense-reversing spin barrier with an abort
+//!   hook, standing in for `pthread_barrier_t` (and letting the fault-
+//!   injection harness observe stuck barriers instead of deadlocking).
+//! * [`atomics::AtomicF64`] — relaxed atomic `f64` cells replacing the
+//!   paper's benign-race `vector<double>` reads/writes.
+//! * [`cas_cell`] — the versioned rank cells and CAS-object protocol used by
+//!   the wait-free Barrier-Helper algorithm (Algorithm 6).
+
+pub mod atomics;
+pub mod barrier;
+pub mod cas_cell;

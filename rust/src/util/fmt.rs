@@ -1,0 +1,103 @@
+//! Human-readable formatting helpers for the CLI and bench reports.
+
+/// Format a duration in seconds adaptively: `1.234 s`, `12.3 ms`, `456 µs`.
+pub fn duration(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.1} µs", secs * 1e6)
+    } else {
+        format!("{:.0} ns", secs * 1e9)
+    }
+}
+
+/// Format a count with thousands separators: `12_345_678`.
+pub fn count(n: u64) -> String {
+    let digits = n.to_string();
+    let mut out = String::with_capacity(digits.len() + digits.len() / 3);
+    for (i, c) in digits.chars().enumerate() {
+        if i > 0 && (digits.len() - i) % 3 == 0 {
+            out.push('_');
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// Format bytes adaptively: `1.5 GiB`, `23.4 MiB`, …
+pub fn bytes(b: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KIB * KIB * KIB {
+        format!("{:.2} GiB", b / (KIB * KIB * KIB))
+    } else if b >= KIB * KIB {
+        format!("{:.2} MiB", b / (KIB * KIB))
+    } else if b >= KIB {
+        format!("{:.1} KiB", b / KIB)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+/// Format a speedup factor: `12.3x`.
+pub fn speedup(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.2}x")
+    } else {
+        "DNF".to_string()
+    }
+}
+
+/// Format a small float in scientific notation when needed.
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1e-3 && x.abs() < 1e4 {
+        format!("{x:.6}")
+    } else {
+        format!("{x:.3e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations() {
+        assert_eq!(duration(1.5), "1.500 s");
+        assert_eq!(duration(0.0123), "12.300 ms");
+        assert_eq!(duration(45.6e-6), "45.6 µs");
+        assert_eq!(duration(320e-9), "320 ns");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(count(0), "0");
+        assert_eq!(count(999), "999");
+        assert_eq!(count(1000), "1_000");
+        assert_eq!(count(68993773), "68_993_773");
+    }
+
+    #[test]
+    fn bytes_fmt() {
+        assert_eq!(bytes(512), "512 B");
+        assert_eq!(bytes(2048), "2.0 KiB");
+        assert_eq!(bytes(30 * 1024 * 1024), "30.00 MiB");
+    }
+
+    #[test]
+    fn speedup_fmt() {
+        assert_eq!(speedup(10.0), "10.00x");
+        assert_eq!(speedup(f64::INFINITY), "DNF");
+    }
+
+    #[test]
+    fn sci_fmt() {
+        assert_eq!(sci(0.0), "0");
+        assert_eq!(sci(1e-12), "1.000e-12");
+        assert!(sci(0.5).starts_with("0.5"));
+    }
+}

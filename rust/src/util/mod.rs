@@ -1,0 +1,8 @@
+//! Small self-contained utilities: a deterministic PRNG family (the offline
+//! build has no `rand` crate), report/table emitters, simple statistics and
+//! human-readable formatting helpers.
+
+pub mod fmt;
+pub mod report;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,291 @@
+//! Structured experiment reports with markdown / CSV / JSON emitters.
+//!
+//! The offline image carries no serde, so serialization is hand-rolled; the
+//! emitters cover exactly what the harness needs: rectangular tables with a
+//! title, column headers and string/number cells, mirroring the rows/series
+//! of each figure and table in the paper.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A single cell value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    /// "did not finish" — used when a blocking variant hangs under failures.
+    Dnf,
+}
+
+impl Cell {
+    pub fn render(&self) -> String {
+        match self {
+            Cell::Str(s) => s.clone(),
+            Cell::Int(i) => i.to_string(),
+            Cell::Float(x) => {
+                if x.abs() >= 1e-3 && x.abs() < 1e7 || *x == 0.0 {
+                    format!("{x:.4}")
+                } else {
+                    format!("{x:.4e}")
+                }
+            }
+            Cell::Dnf => "DNF".to_string(),
+        }
+    }
+
+    fn render_json(&self) -> String {
+        match self {
+            Cell::Str(s) => json_escape(s),
+            Cell::Int(i) => i.to_string(),
+            Cell::Float(x) => {
+                if x.is_finite() {
+                    format!("{x}")
+                } else {
+                    "null".to_string()
+                }
+            }
+            Cell::Dnf => "\"DNF\"".to_string(),
+        }
+    }
+}
+
+impl From<&str> for Cell {
+    fn from(s: &str) -> Self {
+        Cell::Str(s.to_string())
+    }
+}
+impl From<String> for Cell {
+    fn from(s: String) -> Self {
+        Cell::Str(s)
+    }
+}
+impl From<i64> for Cell {
+    fn from(i: i64) -> Self {
+        Cell::Int(i)
+    }
+}
+impl From<usize> for Cell {
+    fn from(i: usize) -> Self {
+        Cell::Int(i as i64)
+    }
+}
+impl From<f64> for Cell {
+    fn from(x: f64) -> Self {
+        if x.is_finite() {
+            Cell::Float(x)
+        } else {
+            Cell::Dnf
+        }
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// A rectangular report table (one per figure/table reproduction).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+    /// Free-form notes rendered under the table (assumptions, host info).
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn push_row(&mut self, cells: Vec<Cell>) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {} in table '{}'",
+            cells.len(),
+            self.headers.len(),
+            self.title
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// GitHub-flavored markdown rendering with aligned columns.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        let rendered: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|c| c.render()).collect())
+            .collect();
+        for row in &rendered {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let _ = write!(out, "|");
+        for (h, w) in self.headers.iter().zip(&widths) {
+            let _ = write!(out, " {h:<w$} |");
+        }
+        let _ = writeln!(out);
+        let _ = write!(out, "|");
+        for w in &widths {
+            let _ = write!(out, "{:-<width$}|", "", width = w + 2);
+        }
+        let _ = writeln!(out);
+        for row in &rendered {
+            let _ = write!(out, "|");
+            for (cell, w) in row.iter().zip(&widths) {
+                let _ = write!(out, " {cell:<w$} |");
+            }
+            let _ = writeln!(out);
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "\n> {n}");
+        }
+        out
+    }
+
+    /// RFC-4180-ish CSV (quotes only when needed).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let _ = writeln!(
+            out,
+            "{}",
+            self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",")
+        );
+        for row in &self.rows {
+            let _ = writeln!(
+                out,
+                "{}",
+                row.iter().map(|c| esc(&c.render())).collect::<Vec<_>>().join(",")
+            );
+        }
+        out
+    }
+
+    /// JSON: `{"title": ..., "headers": [...], "rows": [[...]], "notes": [...]}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        let _ = writeln!(out, "  \"title\": {},", json_escape(&self.title));
+        let _ = writeln!(
+            out,
+            "  \"headers\": [{}],",
+            self.headers.iter().map(|h| json_escape(h)).collect::<Vec<_>>().join(", ")
+        );
+        out.push_str("  \"rows\": [\n");
+        for (i, row) in self.rows.iter().enumerate() {
+            let cells: Vec<String> = row.iter().map(|c| c.render_json()).collect();
+            let comma = if i + 1 == self.rows.len() { "" } else { "," };
+            let _ = writeln!(out, "    [{}]{}", cells.join(", "), comma);
+        }
+        out.push_str("  ],\n");
+        let _ = writeln!(
+            out,
+            "  \"notes\": [{}]",
+            self.notes.iter().map(|n| json_escape(n)).collect::<Vec<_>>().join(", ")
+        );
+        out.push('}');
+        out
+    }
+
+    /// Write markdown + CSV + JSON next to each other under `dir/<stem>.*`.
+    pub fn write_all(&self, dir: &Path, stem: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.md")), self.to_markdown())?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())?;
+        std::fs::write(dir.join(format!("{stem}.json")), self.to_json())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("Fig X", &["program", "speedup"]);
+        t.push_row(vec!["No-Sync".into(), 12.5.into()]);
+        t.push_row(vec!["Barrier".into(), Cell::Dnf]);
+        t.note("host: test");
+        t
+    }
+
+    #[test]
+    fn markdown_contains_rows_and_notes() {
+        let md = sample().to_markdown();
+        assert!(md.contains("### Fig X"));
+        assert!(md.contains("No-Sync"));
+        assert!(md.contains("DNF"));
+        assert!(md.contains("> host: test"));
+        // header separator present
+        assert!(md.contains("|--"));
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push_row(vec!["x,y".into(), "say \"hi\"".into()]);
+        let csv = t.to_csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn json_well_formed_ish() {
+        let j = sample().to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"title\": \"Fig X\""));
+        assert!(j.contains("\"DNF\""));
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push_row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_escape_control_chars() {
+        assert_eq!(json_escape("a\nb"), "\"a\\nb\"");
+        assert_eq!(json_escape("q\"q"), "\"q\\\"q\"");
+    }
+}

@@ -1,0 +1,217 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build image carries no `rand` crate, so the generators the
+//! substrate needs (graph generation, property-test case generation, workload
+//! shuffling) are implemented here: [`SplitMix64`] for seeding and
+//! [`Xoshiro256pp`] (xoshiro256++, Blackman & Vigna) as the workhorse.
+//! Both are tiny, fast, and — critically for reproducibility of every figure
+//! in EXPERIMENTS.md — fully deterministic for a given seed across platforms.
+
+/// SplitMix64: the recommended seeder for xoshiro-family generators.
+///
+/// Passes BigCrush when used directly; we use it to expand a single `u64`
+/// seed into the 256-bit xoshiro state and for cheap one-off streams.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ 1.0 — general purpose 64-bit generator.
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 as recommended by the authors.
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        // All-zero state is invalid; SplitMix64 cannot produce four zero
+        // outputs in a row from any seed, but guard anyway.
+        if s == [0; 4] {
+            return Self { s: [1, 2, 3, 4] };
+        }
+        Self { s }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform f64 in `[0, 1)` using the high 53 bits.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform u64 in `[0, bound)` without modulo bias (Lemire's method).
+    #[inline]
+    pub fn next_below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo < hi);
+        lo + self.next_below((hi - lo) as u64) as usize
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (Floyd's algorithm for
+    /// small `k`, shuffle-prefix otherwise).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        if k * 4 >= n {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            all.sort_unstable();
+            return all;
+        }
+        let mut chosen = std::collections::BTreeSet::new();
+        for j in (n - k)..n {
+            let t = self.next_below((j + 1) as u64) as usize;
+            if !chosen.insert(t) {
+                chosen.insert(j);
+            }
+        }
+        chosen.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed 1234567 from the public-domain
+        // implementation (Vigna).
+        let mut sm = SplitMix64::new(1234567);
+        let v: Vec<u64> = (0..3).map(|_| sm.next_u64()).collect();
+        assert_eq!(v[0], 6457827717110365317);
+        assert_eq!(v[1], 3203168211198807973);
+        assert_eq!(v[2], 9817491932198370423);
+    }
+
+    #[test]
+    fn xoshiro_deterministic_per_seed() {
+        let mut a = Xoshiro256pp::seed_from_u64(99);
+        let mut b = Xoshiro256pp::seed_from_u64(99);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Xoshiro256pp::seed_from_u64(100);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Xoshiro256pp::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_bounds() {
+        let mut r = Xoshiro256pp::seed_from_u64(3);
+        for bound in [1u64, 2, 3, 7, 100, u64::MAX] {
+            for _ in 0..100 {
+                assert!(r.next_below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn next_below_rough_uniformity() {
+        let mut r = Xoshiro256pp::seed_from_u64(11);
+        let mut counts = [0usize; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[r.next_below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            // expect ~10_000 each; allow 10% slack
+            assert!((9_000..=11_000).contains(&c), "count {c} out of range");
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::seed_from_u64(21);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>(), "shuffle did nothing");
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut r = Xoshiro256pp::seed_from_u64(5);
+        for (n, k) in [(10, 3), (100, 99), (1000, 10), (5, 5), (1, 1), (10, 0)] {
+            let s = r.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::BTreeSet<_> = s.iter().copied().collect();
+            assert_eq!(set.len(), k, "duplicates in sample");
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Summary statistics over timing samples — the numerical core of the
+//! in-tree mini-criterion ([`crate::harness::bench`]).
+
+/// Summary of a sample set (times in seconds, or any positive metric).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub stddev: f64,
+    pub min: f64,
+    pub max: f64,
+    /// Median absolute deviation — robust spread estimate.
+    pub mad: f64,
+}
+
+impl Summary {
+    /// Compute a summary; `samples` need not be sorted. Panics on empty input.
+    pub fn from_samples(samples: &[f64]) -> Self {
+        assert!(!samples.is_empty(), "Summary::from_samples on empty slice");
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = if n > 1 {
+            samples.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+        } else {
+            0.0
+        };
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = percentile_sorted(&sorted, 50.0);
+        let mut devs: Vec<f64> = sorted.iter().map(|x| (x - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = percentile_sorted(&devs, 50.0);
+        Self {
+            n,
+            mean,
+            median,
+            stddev: var.sqrt(),
+            min: sorted[0],
+            max: sorted[n - 1],
+            mad,
+        }
+    }
+
+    /// Relative standard deviation (coefficient of variation), in percent.
+    pub fn rsd_pct(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            100.0 * self.stddev / self.mean
+        }
+    }
+}
+
+/// Linear-interpolated percentile of a pre-sorted slice. `p` in `[0, 100]`.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Geometric mean of positive values (used for cross-dataset speedups).
+pub fn geomean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    let log_sum: f64 = xs.iter().map(|x| x.ln()).sum();
+    (log_sum / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        // sample stddev of 1..5 is sqrt(2.5)
+        assert!((s.stddev - 2.5f64.sqrt()).abs() < 1e-12);
+        assert!((s.mad - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_single_sample() {
+        let s = Summary::from_samples(&[7.5]);
+        assert_eq!(s.mean, 7.5);
+        assert_eq!(s.median, 7.5);
+        assert_eq!(s.stddev, 0.0);
+        assert_eq!(s.mad, 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [10.0, 20.0, 30.0, 40.0];
+        assert!((percentile_sorted(&v, 0.0) - 10.0).abs() < 1e-12);
+        assert!((percentile_sorted(&v, 100.0) - 40.0).abs() < 1e-12);
+        assert!((percentile_sorted(&v, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_matches_closed_form() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rsd_of_constant_samples_is_zero() {
+        let s = Summary::from_samples(&[3.0, 3.0, 3.0]);
+        assert_eq!(s.rsd_pct(), 0.0);
+    }
+}

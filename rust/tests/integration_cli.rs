@@ -1,0 +1,100 @@
+//! CLI integration: drive `cli::dispatch` end-to-end (no subprocess —
+//! dispatch is the same code path `main` uses).
+
+use pagerank_nb::cli;
+
+fn argv(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn run_on_generated_graph() {
+    cli::dispatch(&argv(&[
+        "run", "--graph", "web:800:6", "--algo", "no-sync", "--threads", "3", "--top", "3",
+    ]))
+    .expect("run should succeed");
+}
+
+#[test]
+fn run_all_variant_names_parse_via_cli() {
+    for algo in [
+        "sequential",
+        "barrier",
+        "barrier-identical",
+        "barrier-edge",
+        "barrier-opt",
+        "wait-free",
+        "no-sync",
+        "no-sync-identical",
+        "no-sync-opt",
+        "no-sync-opt-identical",
+    ] {
+        cli::dispatch(&argv(&[
+            "run", "--graph", "cycle:60", "--algo", algo, "--threads", "2",
+        ]))
+        .unwrap_or_else(|e| panic!("algo {algo}: {e}"));
+    }
+}
+
+#[test]
+fn info_and_validate() {
+    cli::dispatch(&argv(&["info", "--graph", "star:50"])).expect("info");
+    cli::dispatch(&argv(&[
+        "validate", "--graph", "web:500:5", "--threads", "3",
+    ]))
+    .expect("validate should pass on a healthy build");
+}
+
+#[test]
+fn gen_writes_datasets() {
+    let out = std::env::temp_dir().join("pagerank_nb_cli_gen");
+    std::fs::remove_dir_all(&out).ok();
+    cli::dispatch(&argv(&[
+        "gen",
+        "--dataset",
+        "webStanford",
+        "--out",
+        out.to_str().unwrap(),
+        "--scale",
+        "2000",
+    ]))
+    .expect("gen");
+    assert!(out.join("webStanford.bin").exists());
+    // and the generated file loads back through `info`
+    cli::dispatch(&argv(&[
+        "info",
+        "--graph",
+        out.join("webStanford.bin").to_str().unwrap(),
+    ]))
+    .expect("info on generated dataset");
+}
+
+#[test]
+fn errors_are_reported_not_panicked() {
+    assert!(cli::dispatch(&argv(&[])).is_err());
+    assert!(cli::dispatch(&argv(&["frobnicate"])).is_err());
+    assert!(cli::dispatch(&argv(&["run"])).is_err()); // missing --graph
+    assert!(cli::dispatch(&argv(&["run", "--graph", "nope:1"])).is_err());
+    assert!(cli::dispatch(&argv(&["run", "--graph", "cycle:10", "--algo", "bogus"])).is_err());
+    assert!(cli::dispatch(&argv(&["gen", "--out", "/tmp/x"])).is_err()); // no --all/--dataset
+}
+
+#[test]
+fn bench_table1_writes_reports() {
+    let out = std::env::temp_dir().join("pagerank_nb_cli_bench");
+    std::fs::remove_dir_all(&out).ok();
+    cli::dispatch(&argv(&[
+        "bench",
+        "table1",
+        "--out",
+        out.to_str().unwrap(),
+        "--scale",
+        "5000",
+        "--samples",
+        "1",
+    ]))
+    .expect("bench table1");
+    for ext in ["md", "csv", "json"] {
+        assert!(out.join(format!("table1.{ext}")).exists(), "missing table1.{ext}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Fault-injection integration — the paper's §5.3 case studies end-to-end:
+//! sleeping threads (Fig 8) and failing threads (Fig 9) across the three
+//! synchronization families.
+
+use pagerank_nb::coordinator::faults::FaultPlan;
+use pagerank_nb::graph::synthetic;
+use pagerank_nb::pagerank::{self, seq, PrConfig, Variant};
+use std::time::Duration;
+
+fn cfg(threads: usize) -> PrConfig {
+    PrConfig {
+        threads,
+        threshold: 1e-10,
+        max_iterations: 2_000,
+        dnf_timeout: Some(Duration::from_secs(30)),
+        ..PrConfig::default()
+    }
+}
+
+/// Fig 9 core claim: a crashed thread wedges Barrier *and* No-Sync (DNF via
+/// watchdog), while Wait-Free completes and still gets the right answer.
+#[test]
+fn failure_matrix_matches_paper() {
+    let g = synthetic::web_replica(500, 6, 201);
+    let faults = FaultPlan::none().fail_at(0, 1);
+    let c = PrConfig {
+        faults,
+        dnf_timeout: Some(Duration::from_secs(5)),
+        ..cfg(4)
+    };
+
+    let barrier = pagerank::run(&g, Variant::Barrier, &c).unwrap();
+    assert!(barrier.dnf, "Barrier must wedge when a thread dies");
+    assert!(!barrier.converged);
+
+    // No-Sync: the dead thread's error slot never clears, so live threads
+    // either spin to the watchdog (dnf) or burn out the iteration cap —
+    // both are "fails to handle thread failure" per the paper.
+    let nosync = pagerank::run(&g, Variant::NoSync, &c).unwrap();
+    assert!(
+        nosync.dnf || !nosync.converged,
+        "No-Sync must not complete under a dead thread"
+    );
+
+    let c_wf = PrConfig { dnf_timeout: Some(Duration::from_secs(60)), ..c.clone() };
+    let waitfree = pagerank::run(&g, Variant::WaitFree, &c_wf).unwrap();
+    assert!(!waitfree.dnf, "Wait-Free must complete");
+    assert!(waitfree.converged);
+    let (sr, _, _) = seq::solve(&g, &c_wf);
+    assert!(waitfree.l1_norm(&sr) < 1e-6, "l1 {}", waitfree.l1_norm(&sr));
+}
+
+/// Sleeping threads delay Barrier and No-Sync by roughly the nap length;
+/// Wait-Free's algorithmic completion stays flat (helpers absorb the work).
+#[test]
+fn sleep_delays_blocking_but_not_waitfree() {
+    let g = synthetic::web_replica(300, 5, 202);
+    let nap = Duration::from_millis(600);
+    let with_sleep = |v: Variant| {
+        let c = PrConfig {
+            faults: FaultPlan::none().sleep_at(0, 1, nap),
+            dnf_timeout: Some(Duration::from_secs(60)),
+            // No-Sync's live threads keep sweeping while the sleeper naps
+            // (the paper's Fig-8 behaviour); the cap must not cut that off.
+            max_iterations: 5_000_000,
+            ..cfg(4)
+        };
+        pagerank::run(&g, v, &c).unwrap()
+    };
+    let baseline = |v: Variant| pagerank::run(&g, v, &cfg(4)).unwrap();
+
+    for v in [Variant::Barrier, Variant::NoSync] {
+        let slow = with_sleep(v);
+        let fast = baseline(v);
+        assert!(slow.converged && fast.converged);
+        assert!(
+            slow.elapsed >= fast.elapsed + nap / 2,
+            "{v}: sleep did not propagate ({:?} vs {:?})",
+            slow.elapsed,
+            fast.elapsed
+        );
+    }
+    let wf = with_sleep(Variant::WaitFree);
+    assert!(wf.converged);
+    assert!(
+        wf.elapsed < nap,
+        "Wait-Free should finish before the sleeper wakes ({:?})",
+        wf.elapsed
+    );
+}
+
+/// Increasing failure counts: Wait-Free keeps completing down to a single
+/// live thread.
+#[test]
+fn waitfree_survives_escalating_failures() {
+    let g = synthetic::cycle(120);
+    for k in 1..=3 {
+        let c = PrConfig {
+            faults: FaultPlan::fail_first_k(k),
+            dnf_timeout: Some(Duration::from_secs(60)),
+            ..cfg(4)
+        };
+        let r = pagerank::run(&g, Variant::WaitFree, &c).unwrap();
+        assert!(r.converged, "k={k}");
+        for &x in &r.ranks {
+            assert!((x - 1.0 / 120.0).abs() < 1e-8, "k={k}");
+        }
+    }
+}
+
+/// A sleep scheduled for a never-reached iteration is a no-op.
+#[test]
+fn sleep_beyond_convergence_is_noop() {
+    let g = synthetic::star(60);
+    let c = PrConfig {
+        faults: FaultPlan::none().sleep_at(0, 100_000, Duration::from_secs(30)),
+        ..cfg(2)
+    };
+    let t0 = std::time::Instant::now();
+    let r = pagerank::run(&g, Variant::Barrier, &c).unwrap();
+    assert!(r.converged);
+    assert!(t0.elapsed() < Duration::from_secs(10));
+}
+
+/// Failures on the *other* variants of the family behave like Barrier.
+#[test]
+fn edge_and_identical_variants_also_wedge_on_failure() {
+    let g = synthetic::web_replica(300, 5, 203);
+    let c = PrConfig {
+        faults: FaultPlan::none().fail_at(1, 1),
+        dnf_timeout: Some(Duration::from_secs(5)),
+        ..cfg(3)
+    };
+    for v in [Variant::BarrierEdge, Variant::BarrierIdentical, Variant::NoSyncIdentical] {
+        let r = pagerank::run(&g, v, &c).unwrap();
+        assert!(r.dnf || !r.converged, "{v} should not complete under failure");
+    }
+}

@@ -1,0 +1,155 @@
+//! Three-layer integration: execute the AOT-compiled JAX/Pallas artifacts
+//! through PJRT and compare against the Rust sequential solver.
+//!
+//! Requires `make artifacts`; each test skips (with a loud message) when the
+//! artifact directory is absent so `cargo test` stays runnable pre-build.
+
+use pagerank_nb::graph::synthetic;
+use pagerank_nb::pagerank::{self, seq, xla_block, PrConfig, Variant};
+use pagerank_nb::runtime::{artifacts, ArtifactKind, ArtifactSpec, Engine};
+
+fn artifacts_ready() -> bool {
+    let dir = artifacts::default_dir();
+    match ArtifactSpec::discover(&dir) {
+        Ok(specs) if !specs.is_empty() => true,
+        _ => {
+            eprintln!(
+                "SKIP: no artifacts in {} — run `make artifacts`",
+                dir.display()
+            );
+            false
+        }
+    }
+}
+
+fn cfg() -> PrConfig {
+    PrConfig { threads: 1, threshold: 1e-7, ..PrConfig::default() }
+}
+
+#[test]
+fn discovers_expected_buckets() {
+    if !artifacts_ready() {
+        return;
+    }
+    let specs = ArtifactSpec::discover(&artifacts::default_dir()).unwrap();
+    assert!(specs.iter().any(|s| s.kind == ArtifactKind::EllStep && s.n == 256 && s.k == 16));
+    assert!(specs.iter().any(|s| s.kind == ArtifactKind::EllStep && s.n == 4096 && s.k == 64));
+    assert!(specs.iter().any(|s| s.kind == ArtifactKind::DenseStep && s.n == 64));
+    assert!(specs.iter().any(|s| s.kind == ArtifactKind::DensePower));
+}
+
+#[test]
+fn ell_step_executes_and_matches_manual_math() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let step = engine.load_best_ell(&artifacts::default_dir(), 256, 16).unwrap();
+    let (n, k) = (step.spec.n, step.spec.k);
+    // Hand-built instance: row u gathers vertex (u+1) % n with weight 0.5.
+    let mut indices = vec![0i32; n * k];
+    let mut weights = vec![0f32; n * k];
+    for u in 0..n {
+        indices[u * k] = ((u + 1) % n) as i32;
+        weights[u * k] = 0.5;
+    }
+    let pr: Vec<f32> = (0..n).map(|i| i as f32).collect();
+    let base = 1.0f32;
+    let out = step.run_ell(&indices, &weights, &pr, base).unwrap();
+    for u in 0..n {
+        let want = 1.0 + 0.5 * (((u + 1) % n) as f32);
+        assert!((out[u] - want).abs() < 1e-5, "row {u}: {} vs {want}", out[u]);
+    }
+}
+
+#[test]
+fn xla_block_matches_sequential_on_cycle() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let g = synthetic::cycle(64);
+    let r = pagerank::run_with_engine(&g, Variant::XlaBlock, &cfg(), &engine).unwrap();
+    assert!(r.converged);
+    for &x in &r.ranks {
+        assert!((x - 1.0 / 64.0).abs() < 1e-5, "rank {x}");
+    }
+}
+
+#[test]
+fn xla_block_matches_sequential_on_web_replica() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let g = synthetic::web_replica(600, 6, 301);
+    let c = cfg();
+    let r = pagerank::run_with_engine(&g, Variant::XlaBlock, &c, &engine).unwrap();
+    assert!(r.converged);
+    let (sr, _, _) = seq::solve(&g, &c);
+    let l1 = r.l1_norm(&sr);
+    // f32 artifact: per-vertex error ~1e-7 · n vertices
+    assert!(l1 < 1e-3, "L1 vs sequential: {l1}");
+    // ranking order must agree at the top
+    let top_xla: Vec<u32> = r.top_k(5).into_iter().map(|(u, _)| u).collect();
+    let mut idx: Vec<u32> = (0..sr.len() as u32).collect();
+    idx.sort_by(|&a, &b| sr[b as usize].partial_cmp(&sr[a as usize]).unwrap().then(a.cmp(&b)));
+    assert_eq!(top_xla, idx[..5].to_vec());
+}
+
+#[test]
+fn xla_block_larger_bucket_path() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    // road replica: low degree, needs the n=1024 or 4096 bucket by size
+    let g = synthetic::road_replica(900, 302);
+    let c = cfg();
+    let r = pagerank::run_with_engine(&g, Variant::XlaBlock, &c, &engine).unwrap();
+    assert!(r.converged);
+    let (sr, _, _) = seq::solve(&g, &c);
+    assert!(r.l1_norm(&sr) < 1e-3, "L1 {}", r.l1_norm(&sr));
+}
+
+#[test]
+fn xla_block_errors_when_graph_exceeds_buckets() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let g = synthetic::cycle(100_000); // far beyond the 4096 bucket
+    let err = xla_block::run(&g, &cfg(), &engine);
+    assert!(err.is_err());
+}
+
+#[test]
+fn dense_step_executes() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let specs = ArtifactSpec::discover(&artifacts::default_dir()).unwrap();
+    let dense = ArtifactSpec::best_dense(&specs, 64).expect("dense_n64");
+    let step = engine.load(dense).unwrap();
+    let n = step.spec.n;
+    // M = 0 → result is uniformly `base`.
+    let matrix = vec![0f32; n * n];
+    let pr = vec![1.0f32 / n as f32; n];
+    let out = step.run_dense(&matrix, &pr, 0.25).unwrap();
+    for &x in &out {
+        assert!((x - 0.25).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn engine_caches_compiled_modules() {
+    if !artifacts_ready() {
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let dir = artifacts::default_dir();
+    let a = engine.load_best_ell(&dir, 100, 8).unwrap();
+    let b = engine.load_best_ell(&dir, 100, 8).unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b), "second load must hit the cache");
+}

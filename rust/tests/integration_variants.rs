@@ -1,0 +1,173 @@
+//! Cross-variant integration: every algorithm against the sequential
+//! oracle on every dataset family, plus the paper's comparative claims
+//! (Lemma 2 agreement, Fig 7 iteration ordering, No-Sync-Edge caveat).
+
+use pagerank_nb::graph::{synthetic, Csr, PartitionPolicy};
+use pagerank_nb::pagerank::{self, convergence, seq, PrConfig, Variant};
+
+fn cfg(threads: usize) -> PrConfig {
+    PrConfig {
+        threads,
+        threshold: 1e-11,
+        max_iterations: 3_000,
+        ..PrConfig::default()
+    }
+}
+
+fn families() -> Vec<Csr> {
+    vec![
+        synthetic::cycle(200),
+        synthetic::chain(200),
+        synthetic::star(150),
+        synthetic::web_replica(1_200, 6, 101),
+        synthetic::social_replica(800, 7, 102),
+        synthetic::road_replica(900, 103),
+        synthetic::d_series(1, 400, 104),
+    ]
+}
+
+/// Exact (non-approximate) parallel variants must match sequential ranks.
+#[test]
+fn exact_variants_match_sequential_everywhere() {
+    let c = cfg(4);
+    for g in families() {
+        let (sr, _, _) = seq::solve(&g, &c);
+        for v in [
+            Variant::Barrier,
+            Variant::BarrierIdentical,
+            Variant::BarrierEdge,
+            Variant::WaitFree,
+            Variant::NoSync,
+            Variant::NoSyncIdentical,
+        ] {
+            let r = pagerank::run(&g, v, &c).unwrap();
+            assert!(r.converged, "{v} did not converge on {}", g.name);
+            let l1 = r.l1_norm(&sr);
+            assert!(l1 < 1e-6, "{v} on {}: L1 {l1}", g.name);
+        }
+    }
+}
+
+/// Approximate (perforated) variants stay within a loose L1 budget.
+#[test]
+fn approximate_variants_bounded_error() {
+    let c = PrConfig { threshold: 1e-8, ..cfg(4) };
+    for g in families() {
+        let (sr, _, _) = seq::solve(&g, &c);
+        for v in [Variant::BarrierOpt, Variant::NoSyncOpt, Variant::NoSyncOptIdentical] {
+            let r = pagerank::run(&g, v, &c).unwrap();
+            assert!(r.converged, "{v} did not converge on {}", g.name);
+            let l1 = r.l1_norm(&sr);
+            assert!(l1 < 1e-2, "{v} on {}: L1 {l1}", g.name);
+        }
+    }
+}
+
+/// Thread-count sweep: results do not depend on parallelism degree.
+#[test]
+fn results_invariant_across_thread_counts() {
+    let g = synthetic::web_replica(900, 6, 105);
+    let reference = pagerank::run(&g, Variant::NoSync, &cfg(1)).unwrap();
+    for threads in [2, 3, 5, 8] {
+        for v in [Variant::NoSync, Variant::Barrier, Variant::WaitFree] {
+            let r = pagerank::run(&g, v, &cfg(threads)).unwrap();
+            assert!(r.converged);
+            let l1 = r.l1_norm(&reference.ranks);
+            assert!(l1 < 1e-6, "{v}@{threads}: L1 {l1}");
+        }
+    }
+}
+
+/// Both partition policies give the same fixed point.
+#[test]
+fn partition_policy_does_not_change_ranks() {
+    let g = synthetic::web_replica(800, 7, 106);
+    let c = cfg(4);
+    let vb = pagerank::run(&g, Variant::NoSync, &c).unwrap();
+    let eb = pagerank::run(
+        &g,
+        Variant::NoSync,
+        &PrConfig { partition: PartitionPolicy::EdgeBalanced, ..c },
+    )
+    .unwrap();
+    assert!(convergence::l1_norm(&vb.ranks, &eb.ranks) < 1e-6);
+}
+
+/// Fig 7's claim: non-blocking variants need no more iterations than the
+/// barrier schedule on the synthetic datasets.
+#[test]
+fn nosync_iterations_at_most_barrier() {
+    let c = cfg(4);
+    for i in [1u32, 3] {
+        let g = synthetic::d_series(i, 1_000, 107);
+        let ns = pagerank::run(&g, Variant::NoSync, &c).unwrap();
+        let ba = pagerank::run(&g, Variant::Barrier, &c).unwrap();
+        // +2 covers the confirmation sweeps (see nosync.rs)
+        assert!(
+            ns.iterations <= ba.iterations + 2,
+            "D{i}0: No-Sync {} vs Barrier {}",
+            ns.iterations,
+            ba.iterations
+        );
+    }
+}
+
+/// §4.4: No-Sync-Edge must terminate (cap) even where it does not
+/// converge, and must never produce non-finite ranks.
+#[test]
+fn nosync_edge_terminates_and_stays_finite() {
+    let c = PrConfig { max_iterations: 200, ..cfg(4) };
+    for g in families() {
+        let r = pagerank::run(&g, Variant::NoSyncEdge, &c).unwrap();
+        assert!(r.iterations <= 200, "{}", g.name);
+        assert!(
+            r.ranks.iter().all(|x| x.is_finite()),
+            "{}: non-finite ranks",
+            g.name
+        );
+    }
+}
+
+/// Rank sums: ≈1 without dangling vertices, < 1 with them (Eq. 1 has no
+/// dangling-mass correction — paper-faithful).
+#[test]
+fn rank_mass_accounting() {
+    let c = cfg(3);
+    let closed = synthetic::cycle(100); // no dangling
+    let r = pagerank::run(&closed, Variant::NoSync, &c).unwrap();
+    let sum: f64 = r.ranks.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-6, "closed-graph mass {sum}");
+
+    let leaky = synthetic::chain(100); // one dangling tail
+    let r = pagerank::run(&leaky, Variant::Barrier, &c).unwrap();
+    let sum: f64 = r.ranks.iter().sum();
+    assert!(sum < 1.0 && sum > 0.1, "chain mass {sum}");
+}
+
+/// Top-k ordering agrees between sequential and the lock-free variant
+/// (what a downstream ranking consumer actually cares about).
+#[test]
+fn top_ranking_stable_across_variants() {
+    let g = synthetic::web_replica(1_000, 8, 108);
+    let c = cfg(4);
+    let s = pagerank::run(&g, Variant::Sequential, &c).unwrap();
+    let p = pagerank::run(&g, Variant::NoSync, &c).unwrap();
+    let top_s: Vec<u32> = s.top_k(10).into_iter().map(|(u, _)| u).collect();
+    let top_p: Vec<u32> = p.top_k(10).into_iter().map(|(u, _)| u).collect();
+    assert_eq!(top_s, top_p);
+}
+
+/// Work amplification changes timing, never numerics.
+#[test]
+fn work_amplification_is_numerically_neutral() {
+    let g = synthetic::star(80);
+    let plain = pagerank::run(&g, Variant::Barrier, &cfg(2)).unwrap();
+    let amp = pagerank::run(
+        &g,
+        Variant::Barrier,
+        &PrConfig { work_amplify: 50, ..cfg(2) },
+    )
+    .unwrap();
+    assert_eq!(plain.iterations, amp.iterations);
+    assert!(convergence::linf_norm(&plain.ranks, &amp.ranks) == 0.0);
+}

@@ -1,0 +1,212 @@
+//! Property-based invariants over the whole stack, driven by the in-tree
+//! `testkit` mini-framework (the image has no proptest — see DESIGN.md
+//! §Substitutions). Each property runs over dozens of generated graphs and
+//! shrinks failures to small edge lists.
+
+use pagerank_nb::graph::identical::IdenticalClasses;
+use pagerank_nb::graph::{GraphBuilder, PartitionPolicy, Partitions};
+use pagerank_nb::pagerank::{self, convergence, seq, xla_block, PrConfig, Variant};
+use pagerank_nb::testkit::{check, Config, EdgeList, Gen, IntRange};
+use pagerank_nb::util::rng::Xoshiro256pp;
+
+fn build(n: usize, edges: &[(u32, u32)]) -> pagerank_nb::graph::Csr {
+    GraphBuilder::new(n).dedup(true).edges(edges).build("prop")
+}
+
+fn cases() -> Config {
+    Config::default().cases(60)
+}
+
+/// CSR structural invariants hold for arbitrary edge lists.
+#[test]
+fn prop_csr_always_validates() {
+    check(cases(), EdgeList { max_n: 60, max_m: 300 }, |(n, edges)| {
+        build(*n, edges).validate().is_ok()
+    });
+}
+
+/// The transpose is an exact mirror of the forward adjacency.
+#[test]
+fn prop_transpose_mirrors_forward() {
+    check(cases(), EdgeList { max_n: 40, max_m: 200 }, |(n, edges)| {
+        let g = build(*n, edges);
+        let mut fwd = Vec::new();
+        let mut rev = Vec::new();
+        for u in 0..g.num_vertices() as u32 {
+            for &v in g.out_neighbors(u) {
+                fwd.push((u, v));
+            }
+            for &v in g.in_neighbors(u) {
+                rev.push((v, u));
+            }
+        }
+        fwd.sort_unstable();
+        rev.sort_unstable();
+        fwd == rev
+    });
+}
+
+/// Partitions cover every vertex exactly once, for both policies and any
+/// thread count.
+#[test]
+fn prop_partitions_cover_exactly_once() {
+    let gen = EdgeList { max_n: 50, max_m: 250 };
+    check(cases(), gen, |(n, edges)| {
+        let g = build(*n, edges);
+        for p in 1..=9usize {
+            for policy in [PartitionPolicy::VertexBalanced, PartitionPolicy::EdgeBalanced] {
+                let parts = Partitions::new(&g, p, policy);
+                let mut seen = vec![0u8; g.num_vertices()];
+                for i in 0..parts.count() {
+                    for u in parts.range(i) {
+                        seen[u as usize] += 1;
+                    }
+                }
+                if seen.iter().any(|&c| c != 1) {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+/// Identical-class detection is sound on arbitrary graphs.
+#[test]
+fn prop_identical_classes_sound() {
+    check(cases(), EdgeList { max_n: 40, max_m: 250 }, |(n, edges)| {
+        let g = build(*n, edges);
+        IdenticalClasses::compute(&g).verify(&g).is_ok()
+    });
+}
+
+/// Sequential PageRank: ranks are positive, bounded by 1, and the total
+/// mass never exceeds 1 (Eq. 1 without dangling redistribution).
+#[test]
+fn prop_seq_ranks_well_formed() {
+    check(cases(), EdgeList { max_n: 40, max_m: 200 }, |(n, edges)| {
+        let g = build(*n, edges);
+        let cfg = PrConfig { threshold: 1e-10, ..PrConfig::default() };
+        let (ranks, _, _) = seq::solve(&g, &cfg);
+        let sum: f64 = ranks.iter().sum();
+        ranks.iter().all(|&x| x > 0.0 && x <= 1.0 + 1e-12) && sum <= 1.0 + 1e-9
+    });
+}
+
+/// The parallel No-Sync fixed point matches sequential on random graphs
+/// (Lemma 2, property form).
+#[test]
+fn prop_nosync_matches_sequential() {
+    check(
+        Config::default().cases(25),
+        EdgeList { max_n: 40, max_m: 160 },
+        |(n, edges)| {
+            let g = build(*n, edges);
+            let cfg = PrConfig { threads: 3, threshold: 1e-11, ..PrConfig::default() };
+            let (sr, _, _) = seq::solve(&g, &cfg);
+            let r = pagerank::run(&g, Variant::NoSync, &cfg).unwrap();
+            r.converged && convergence::l1_norm(&r.ranks, &sr) < 1e-6
+        },
+    );
+}
+
+/// Wait-Free matches Barrier on random graphs — two completely different
+/// synchronization protocols, same fixed point.
+#[test]
+fn prop_waitfree_matches_barrier() {
+    check(
+        Config::default().cases(20),
+        EdgeList { max_n: 30, max_m: 120 },
+        |(n, edges)| {
+            let g = build(*n, edges);
+            let cfg = PrConfig { threads: 3, threshold: 1e-11, ..PrConfig::default() };
+            let wf = pagerank::run(&g, Variant::WaitFree, &cfg).unwrap();
+            let ba = pagerank::run(&g, Variant::Barrier, &cfg).unwrap();
+            wf.converged
+                && ba.converged
+                && convergence::l1_norm(&wf.ranks, &ba.ranks) < 1e-6
+        },
+    );
+}
+
+/// The ELL layout is a lossless encoding: decoding it recovers exactly the
+/// in-edge structure with the right weights.
+#[test]
+fn prop_ell_layout_roundtrip() {
+    check(cases(), EdgeList { max_n: 30, max_m: 150 }, |(n, edges)| {
+        let g = build(*n, edges);
+        let nn = g.num_vertices();
+        let maxk = (0..nn as u32).map(|u| g.in_degree(u)).max().unwrap_or(0).max(1);
+        let l = xla_block::EllLayout::build(&g, 0.85, nn.max(1), maxk).unwrap();
+        for u in 0..nn as u32 {
+            let row = u as usize * l.k_bucket;
+            let mut decoded: Vec<u32> = (0..l.k_bucket)
+                .filter(|&j| l.weights[row + j] != 0.0)
+                .map(|j| l.indices[row + j] as u32)
+                .collect();
+            decoded.sort_unstable();
+            let mut expect: Vec<u32> = g
+                .in_neighbors(u)
+                .iter()
+                .copied()
+                .filter(|&v| g.out_degree(v) > 0)
+                .collect();
+            expect.sort_unstable();
+            if decoded != expect {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+/// Binary graph serialization round-trips arbitrary graphs.
+#[test]
+fn prop_binary_io_roundtrip() {
+    let dir = std::env::temp_dir().join("pagerank_nb_prop_io");
+    std::fs::create_dir_all(&dir).unwrap();
+    let counter = std::sync::atomic::AtomicU64::new(0);
+    check(Config::default().cases(30), EdgeList { max_n: 40, max_m: 150 }, |(n, edges)| {
+        let c = counter.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let g = build(*n, edges);
+        let path = dir.join(format!("g{c}.bin"));
+        pagerank_nb::graph::io::save_binary(&g, &path).unwrap();
+        let g2 = pagerank_nb::graph::io::load_binary(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        g == g2
+    });
+}
+
+/// RMAT generation is deterministic in its seed (reproducible figures).
+#[test]
+fn prop_rmat_deterministic() {
+    check(Config::default().cases(10), IntRange::new(0, 1_000_000), |&seed| {
+        let a = pagerank_nb::graph::rmat::generate(
+            8,
+            600,
+            pagerank_nb::graph::rmat::RmatParams::default(),
+            seed as u64,
+        );
+        let b = pagerank_nb::graph::rmat::generate(
+            8,
+            600,
+            pagerank_nb::graph::rmat::RmatParams::default(),
+            seed as u64,
+        );
+        a == b
+    });
+}
+
+/// EdgeList shrinking really does produce smaller cases (framework
+/// self-check at the integration level).
+#[test]
+fn prop_edge_list_shrink_shrinks() {
+    let gen = EdgeList { max_n: 20, max_m: 50 };
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    for _ in 0..50 {
+        let v = gen.generate(&mut rng);
+        for s in gen.shrink(&v) {
+            assert!(s.1.len() < v.1.len().max(1));
+        }
+    }
+}
