@@ -69,11 +69,20 @@ fn config_from_args(args: &ArgMap) -> Result<PrConfig> {
     })
 }
 
+/// Resolve the variant from `--mode` (execution mode, e.g. `pcpm` /
+/// `partition-centric`) or `--algo` (`--mode standard` defers to `--algo`).
+fn variant_from_args(args: &ArgMap) -> Result<Variant> {
+    match args.get("mode") {
+        Some(m) if !m.is_empty() && m != "standard" => Variant::parse(m),
+        _ => Variant::parse(args.get("algo").unwrap_or("no-sync")),
+    }
+}
+
 /// `run`: one algorithm on one graph; prints timing + top ranks.
 pub fn cmd_run(args: &ArgMap) -> Result<()> {
     let seed = args.get_parsed("seed", 42u64)?;
     let g = load_graph(args.require("graph")?, seed)?;
-    let variant = Variant::parse(args.get("algo").unwrap_or("no-sync"))?;
+    let variant = variant_from_args(args)?;
     let cfg = config_from_args(args)?;
     println!(
         "graph '{}': {} vertices, {} edges · {} · {} threads",
@@ -210,7 +219,7 @@ pub fn cmd_validate(args: &ArgMap) -> Result<()> {
         "variant", "time", "iters", "L1 vs seq", "status"
     );
     let mut failures = 0;
-    for v in Variant::parallel_cpu() {
+    for v in Variant::parallel_modes() {
         let r = pagerank::run(&g, v, &cfg)?;
         let l1 = r.l1_norm(&seq.ranks);
         // exact variants must match tightly; approximate ones loosely
@@ -258,6 +267,22 @@ mod tests {
         assert!(load_graph("warp:10", 1).is_err());
         assert!(load_graph("cycle:x", 1).is_err());
         assert!(load_graph("/no/such/file", 1).is_err());
+    }
+
+    #[test]
+    fn mode_flag_selects_pcpm() {
+        let a = ArgMap::parse(&["--mode".into(), "pcpm".into()]).unwrap();
+        assert_eq!(variant_from_args(&a).unwrap(), Variant::Pcpm);
+        let b = ArgMap::parse(&[
+            "--mode".into(),
+            "standard".into(),
+            "--algo".into(),
+            "barrier".into(),
+        ])
+        .unwrap();
+        assert_eq!(variant_from_args(&b).unwrap(), Variant::Barrier);
+        let c = ArgMap::parse(&["--algo".into(), "partition-centric".into()]).unwrap();
+        assert_eq!(variant_from_args(&c).unwrap(), Variant::Pcpm);
     }
 
     #[test]

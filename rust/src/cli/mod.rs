@@ -48,9 +48,9 @@ fn print_usage() {
         "pagerank-nb — non-blocking PageRank for massive graphs
 
 USAGE:
-  pagerank-nb run      --graph <src> [--algo <variant>] [--threads N]
-                       [--threshold X] [--iters N] [--partition vertex|edge]
-                       [--top K] [--damping D]
+  pagerank-nb run      --graph <src> [--algo <variant>] [--mode standard|pcpm]
+                       [--threads N] [--threshold X] [--iters N]
+                       [--partition vertex|edge] [--top K] [--damping D]
   pagerank-nb bench    <table1|fig1..fig9|xla|ablation|all> [--out DIR]
                        [--scale DIVISOR] [--threads N] [--samples N]
   pagerank-nb gen      (--all | --dataset NAME) --out DIR [--scale DIVISOR]
@@ -64,6 +64,7 @@ GRAPH SOURCES:
 VARIANTS:
   sequential barrier barrier-identical barrier-edge barrier-opt wait-free
   no-sync no-sync-identical no-sync-edge no-sync-opt no-sync-opt-identical
+  pcpm (partition-centric scatter-gather; also via --mode pcpm)
   xla-block (needs `make artifacts`)"
     );
 }

@@ -1,0 +1,235 @@
+//! Engine drivers — one scheduling loop per [`SyncMode`], shared by every
+//! kernel.
+//!
+//! This file is the single home of the orchestration the variant modules
+//! used to duplicate: worker spawn (through
+//! [`run_workers`](crate::coordinator::executor::run_workers), which owns
+//! the DNF watchdog), fault-plan application at iteration boundaries,
+//! barrier phasing, thread-level confirmation sweeps, and [`PrResult`]
+//! assembly with barrier-wait telemetry.
+//!
+//! ## Confirmation sweeps (non-blocking modes)
+//!
+//! The paper's Algorithm 3 exits on the first observation of a calm merged
+//! error. On hosts with fewer cores than threads a descheduled peer can
+//! hold a stale-calm slot, so the driver demands **two consecutive** calm
+//! iterations — the second sweep re-validates the partition against any
+//! updates that landed in between. See DESIGN.md §Substitutions.
+
+use crate::engine::{Kernel, SyncMode, WorkerCtx};
+use crate::coordinator::executor::run_workers;
+use crate::coordinator::metrics::RunMetrics;
+use crate::pagerank::convergence::ErrorBoard;
+use crate::pagerank::{PrConfig, PrResult, Variant};
+use crate::sync::barrier::SenseBarrier;
+use crate::sync::PhaseBarrier;
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+/// Execute a built kernel under its declared [`SyncMode`].
+pub fn execute(
+    variant: Variant,
+    cfg: &PrConfig,
+    kernel: &dyn Kernel,
+    start: Instant,
+) -> Result<PrResult> {
+    match kernel.sync_mode() {
+        SyncMode::Sequential => run_sequential(variant, kernel, start),
+        SyncMode::Blocking { pre_scatter } => {
+            Ok(run_blocking(variant, cfg, kernel, start, pre_scatter))
+        }
+        SyncMode::NonBlocking => Ok(run_nonblocking(variant, cfg, kernel, start)),
+        SyncMode::Helping => run_helping(variant, cfg, kernel, start),
+    }
+}
+
+fn run_sequential(variant: Variant, kernel: &dyn Kernel, start: Instant) -> Result<PrResult> {
+    let Some((ranks, iterations, converged)) = kernel.solve() else {
+        bail!("{variant} declares SyncMode::Sequential but implements no solve()");
+    };
+    Ok(PrResult {
+        variant,
+        ranks,
+        iterations,
+        per_thread_iterations: vec![iterations],
+        elapsed: start.elapsed(),
+        converged,
+        barrier_wait_secs: 0.0,
+        dnf: false,
+    })
+}
+
+/// Barrier-separated phases, algorithm-level convergence (Algorithms 1/2/5
+/// and PCPM). Per iteration:
+///
+/// 1. optional `scatter` + barrier (edge-centric push / PCPM bin write);
+/// 2. `gather`, publish the local error, barrier;
+/// 3. merge the global error, `commit` (`prev ← pr`), barrier;
+/// 4. decide: converged / iteration cap / next iteration.
+fn run_blocking(
+    variant: Variant,
+    cfg: &PrConfig,
+    kernel: &dyn Kernel,
+    start: Instant,
+    pre_scatter: bool,
+) -> PrResult {
+    let threads = cfg.threads;
+    let board = ErrorBoard::new(threads);
+    let barrier = SenseBarrier::new(threads);
+    let metrics = RunMetrics::new(threads);
+    let converged = AtomicBool::new(false);
+
+    let outcome = run_workers(threads, cfg.dnf_timeout, &[&barrier], |tid, stop| {
+        let ctx = WorkerCtx { tid, metrics: &metrics };
+        let mut waiter = barrier.waiter();
+        let mut iter = 0u64;
+        loop {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            if cfg.faults.apply(tid, iter) {
+                return; // injected crash: never arrives at the barrier again
+            }
+            if pre_scatter {
+                kernel.scatter(&ctx);
+                if waiter.wait().is_aborted() {
+                    return; // ── Barrier Sync Checkpoint (scatter)
+                }
+            }
+            let err = kernel.gather(&ctx);
+            board.publish(tid, err);
+            if waiter.wait().is_aborted() {
+                return; // ── Barrier Sync Checkpoint (gather)
+            }
+            // Every thread computes the same max — cheaper than electing a
+            // leader and barriering again.
+            let global_err = board.global_max();
+            kernel.commit(&ctx);
+            if waiter.wait().is_aborted() {
+                return; // ── Barrier Sync Checkpoint (commit)
+            }
+            iter += 1;
+            metrics.bump_iteration(tid);
+            if kernel.converged(global_err, cfg.threshold) {
+                converged.store(true, Ordering::Release);
+                return;
+            }
+            if iter >= cfg.max_iterations {
+                return;
+            }
+        }
+    });
+
+    PrResult {
+        variant,
+        ranks: kernel.ranks(),
+        iterations: metrics.max_iterations(),
+        per_thread_iterations: metrics.iterations_per_thread(),
+        elapsed: start.elapsed(),
+        converged: converged.load(Ordering::Acquire) && !outcome.dnf,
+        barrier_wait_secs: PhaseBarrier::total_wait_secs(&barrier),
+        dnf: outcome.dnf,
+    }
+}
+
+/// Barrier-free sweeps, thread-level convergence (Algorithms 3/4/5). Each
+/// worker runs `gather` → error merge → `scatter` (the Algorithm 4 push;
+/// a no-op for vertex-centric kernels) and exits on two consecutive calm
+/// observations or the iteration cap.
+fn run_nonblocking(
+    variant: Variant,
+    cfg: &PrConfig,
+    kernel: &dyn Kernel,
+    start: Instant,
+) -> PrResult {
+    let threads = cfg.threads;
+    let board = ErrorBoard::new(threads);
+    let metrics = RunMetrics::new(threads);
+    let capped = AtomicBool::new(false);
+
+    let outcome = run_workers(threads, cfg.dnf_timeout, &[], |tid, stop| {
+        let ctx = WorkerCtx { tid, metrics: &metrics };
+        let mut iter = 0u64;
+        // Consecutive iterations with every visible error ≤ threshold (the
+        // confirmation sweep — see the module docs).
+        let mut calm = 0u32;
+        loop {
+            if stop.load(Ordering::Acquire) {
+                return;
+            }
+            if cfg.faults.apply(tid, iter) {
+                return; // crash: error slot stays stale, peers keep spinning
+            }
+            let err = kernel.gather(&ctx);
+            iter += 1;
+            metrics.bump_iteration(tid);
+            board.publish(tid, err);
+            // Thread-level convergence: merge own error with the freshest
+            // visible values from every peer (Alg 3 lines 16-19). Peers may
+            // still be mid-iteration — that partial view is the point.
+            let merged = board.global_max();
+            kernel.scatter(&ctx);
+            if kernel.converged(merged, cfg.threshold) {
+                calm += 1;
+                if calm >= 2 {
+                    return;
+                }
+            } else {
+                calm = 0;
+            }
+            if iter >= cfg.max_iterations {
+                capped.store(true, Ordering::Release);
+                return;
+            }
+            // Cooperative fairness: on oversubscribed hosts a spinning
+            // thread can starve its peers for whole timeslices, inflating
+            // staleness far beyond what the paper's 56 hardware threads
+            // ever see. One yield per sweep keeps sweeps interleaved.
+            std::thread::yield_now();
+        }
+    });
+
+    PrResult {
+        variant,
+        ranks: kernel.ranks(),
+        iterations: metrics.max_iterations(),
+        per_thread_iterations: metrics.iterations_per_thread(),
+        elapsed: start.elapsed(),
+        converged: !capped.load(Ordering::Acquire) && !outcome.dnf,
+        barrier_wait_secs: 0.0,
+        dnf: outcome.dnf,
+    }
+}
+
+/// Wait-free helping (Algorithm 6): workers drive their own partition, then
+/// help every partition behind the frontier; termination is decided by the
+/// engine-owned [`crate::engine::helping::HelpingState`].
+fn run_helping(
+    variant: Variant,
+    cfg: &PrConfig,
+    kernel: &dyn Kernel,
+    start: Instant,
+) -> Result<PrResult> {
+    let Some(state) = kernel.helping() else {
+        bail!("{variant} declares SyncMode::Helping but exposes no HelpingState");
+    };
+    let threads = cfg.threads;
+    let metrics = RunMetrics::new(threads);
+    let outcome = run_workers(threads, cfg.dnf_timeout, &[], |tid, stop| {
+        state.drive_worker(tid, stop, &cfg.faults, &metrics);
+    });
+    // Algorithmic completion time when recorded; wall-clock join otherwise
+    // (Fig 8 measures completion, not the last sleeper's wake-up).
+    let elapsed = state.completion().unwrap_or_else(|| start.elapsed());
+    Ok(PrResult {
+        variant,
+        ranks: kernel.ranks(),
+        iterations: state.system_iteration(),
+        per_thread_iterations: metrics.iterations_per_thread(),
+        elapsed,
+        converged: state.is_converged() && !outcome.dnf,
+        barrier_wait_secs: 0.0,
+        dnf: outcome.dnf,
+    })
+}

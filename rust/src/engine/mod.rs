@@ -1,0 +1,228 @@
+//! The unified non-blocking PageRank engine.
+//!
+//! Every CPU variant used to be a standalone module re-implementing the same
+//! orchestration: spawn `p` workers, pin each to a partition, apply the
+//! fault plan, watch for DNF, detect termination at the right level, and
+//! assemble a [`PrResult`]. This subsystem owns all of that once; the
+//! variants shrink to [`Kernel`] implementations — the per-iteration math —
+//! plus a [`SyncMode`] descriptor telling the engine how to schedule them:
+//!
+//! * [`SyncMode::Sequential`] — the oracle baseline, run on the caller;
+//! * [`SyncMode::Blocking`] — barrier-separated phases with algorithm-level
+//!   convergence (Algorithms 1, 2, 5-blocking, and the PCPM mode);
+//! * [`SyncMode::NonBlocking`] — barrier-free sweeps with thread-level
+//!   convergence and confirmation sweeps (Algorithms 3, 4, 5-non-blocking);
+//! * [`SyncMode::Helping`] — the CAS-helping wait-free protocol with
+//!   engine-owned termination detection (Algorithm 6, see [`helping`]).
+//!
+//! A kernel supplies up to three hooks per iteration: `scatter` (publish
+//! phase — the edge-centric push, the PCPM bin write), `gather` (the main
+//! sweep, returning the local max delta), and `commit` (the blocking
+//! `prev ← pr` hand-off). Termination is decided by the engine from the
+//! shared [`ErrorBoard`](crate::pagerank::convergence::ErrorBoard) and the
+//! kernel's [`Kernel::converged`] predicate.
+//!
+//! Kernels register in [`REGISTRY`] — a single dispatch table that replaced
+//! the per-variant `match` in `pagerank::run`. Adding an execution mode is
+//! now one kernel file plus one table row.
+
+pub mod driver;
+pub mod helping;
+pub mod pcpm;
+
+use crate::coordinator::metrics::RunMetrics;
+use crate::graph::{Csr, Partitions, VertexId};
+use crate::pagerank::{PrConfig, PrResult, Variant};
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// How the engine schedules a kernel's workers and detects termination.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncMode {
+    /// Run on the calling thread; the kernel provides [`Kernel::solve`].
+    Sequential,
+    /// Barrier-separated phases, algorithm-level convergence. When
+    /// `pre_scatter` is set the engine runs `scatter` + a barrier before
+    /// every `gather` (the edge-centric push / PCPM bin-write phase).
+    Blocking { pre_scatter: bool },
+    /// No barriers: every worker sweeps at its own pace and exits on two
+    /// consecutive calm observations of the merged error (thread-level
+    /// convergence; see `driver` for the confirmation-sweep rationale).
+    NonBlocking,
+    /// CAS-helping wait-free protocol; the engine drives the kernel's
+    /// [`helping::HelpingState`] and takes termination from it.
+    Helping,
+}
+
+/// Per-worker context handed to kernel hooks.
+pub struct WorkerCtx<'a> {
+    /// Worker index in `0..cfg.threads` (also the partition this worker
+    /// owns under static load allocation).
+    pub tid: usize,
+    /// Shared telemetry counters (edges processed, vertices skipped).
+    pub metrics: &'a RunMetrics,
+}
+
+/// One PageRank program, reduced to its per-iteration math.
+///
+/// All hooks take `&self`: rank storage lives in atomic cells (see
+/// [`crate::sync`]) so workers share the kernel immutably.
+pub trait Kernel: Sync {
+    /// How the engine should schedule this kernel.
+    fn sync_mode(&self) -> SyncMode;
+
+    /// Publish phase, run before `gather` when the mode requests it
+    /// (blocking: behind its own barrier; non-blocking: immediately after
+    /// the error merge — the Algorithm 4 push).
+    fn scatter(&self, _ctx: &WorkerCtx<'_>) {}
+
+    /// The main sweep for this worker's share: compute new ranks and return
+    /// the local max per-vertex delta.
+    fn gather(&self, ctx: &WorkerCtx<'_>) -> f64;
+
+    /// Blocking-mode hand-off after the global error merge (`prev ← pr`).
+    fn commit(&self, _ctx: &WorkerCtx<'_>) {}
+
+    /// Termination predicate on the merged error. The default is the
+    /// paper's threshold test; kernels may tighten or loosen it.
+    fn converged(&self, global_err: f64, threshold: f64) -> bool {
+        global_err <= threshold
+    }
+
+    /// Snapshot the final rank vector.
+    fn ranks(&self) -> Vec<f64>;
+
+    /// [`SyncMode::Sequential`] kernels implement the whole solve here and
+    /// return `(ranks, iterations, converged)`.
+    fn solve(&self) -> Option<(Vec<f64>, u64, bool)> {
+        None
+    }
+
+    /// [`SyncMode::Helping`] kernels expose their engine-owned protocol
+    /// state here.
+    fn helping(&self) -> Option<&helping::HelpingState<'_>> {
+        None
+    }
+}
+
+/// Builder signature for registry entries.
+pub type KernelBuilder =
+    for<'g> fn(&'g Csr, &PrConfig, &Partitions) -> Result<Box<dyn Kernel + 'g>>;
+
+/// One row of the dispatch table.
+pub struct KernelEntry {
+    pub variant: Variant,
+    pub build: KernelBuilder,
+}
+
+/// The dispatch table: every CPU variant (and the partition-centric mode)
+/// maps to its kernel builder. `XlaBlock` is deliberately absent — it needs
+/// a loaded PJRT engine and dispatches through
+/// [`crate::pagerank::run_with_engine`].
+pub static REGISTRY: &[KernelEntry] = &[
+    KernelEntry { variant: Variant::Sequential, build: crate::pagerank::seq::kernel },
+    KernelEntry { variant: Variant::Barrier, build: crate::pagerank::barrier::kernel },
+    KernelEntry {
+        variant: Variant::BarrierIdentical,
+        build: crate::pagerank::identical::barrier_kernel,
+    },
+    KernelEntry { variant: Variant::BarrierEdge, build: crate::pagerank::barrier_edge::kernel },
+    KernelEntry {
+        variant: Variant::BarrierOpt,
+        build: crate::pagerank::perforation::barrier_opt_kernel,
+    },
+    KernelEntry { variant: Variant::WaitFree, build: crate::pagerank::waitfree::kernel },
+    KernelEntry { variant: Variant::NoSync, build: crate::pagerank::nosync::kernel },
+    KernelEntry {
+        variant: Variant::NoSyncIdentical,
+        build: crate::pagerank::identical::nosync_kernel,
+    },
+    KernelEntry { variant: Variant::NoSyncEdge, build: crate::pagerank::nosync_edge::kernel },
+    KernelEntry {
+        variant: Variant::NoSyncOpt,
+        build: crate::pagerank::perforation::nosync_opt_kernel,
+    },
+    KernelEntry {
+        variant: Variant::NoSyncOptIdentical,
+        build: crate::pagerank::perforation::nosync_opt_identical_kernel,
+    },
+    KernelEntry { variant: Variant::Pcpm, build: pcpm::kernel },
+];
+
+/// Look up a variant's kernel builder.
+pub fn lookup(variant: Variant) -> Option<&'static KernelEntry> {
+    REGISTRY.iter().find(|e| e.variant == variant)
+}
+
+/// Run `variant` on `g` through the unified engine.
+pub fn run(g: &Csr, variant: Variant, cfg: &PrConfig) -> Result<PrResult> {
+    cfg.validate()?;
+    let Some(entry) = lookup(variant) else {
+        bail!("{variant} has no CPU kernel; XlaBlock needs an engine — use run_with_engine");
+    };
+    if g.num_vertices() == 0 {
+        return Ok(PrResult::empty(variant, cfg.threads));
+    }
+    let parts = Partitions::new(g, cfg.threads, cfg.partition);
+    // The clock starts before kernel construction so preprocessing (STIC-D
+    // identical classes, PCPM bin layout) counts toward the reported wall
+    // time, as in the source papers.
+    let start = Instant::now();
+    let kernel = (entry.build)(g, cfg, &parts)?;
+    driver::execute(variant, cfg, kernel.as_ref(), start)
+}
+
+/// Reciprocal out-degrees — shared by every kernel's inner loop (hoists the
+/// per-edge division out of Eq. 1).
+pub fn inv_out_degrees(g: &Csr) -> Vec<f64> {
+    (0..g.num_vertices() as VertexId)
+        .map(|v| {
+            let od = g.out_degree(v);
+            if od == 0 {
+                0.0
+            } else {
+                1.0 / od as f64
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic;
+
+    #[test]
+    fn registry_covers_every_cpu_variant_and_pcpm() {
+        for v in Variant::ALL_MODES {
+            assert!(lookup(v).is_some(), "{v} missing from REGISTRY");
+        }
+        assert!(lookup(Variant::XlaBlock).is_none());
+        assert_eq!(REGISTRY.len(), Variant::ALL_MODES.len());
+    }
+
+    #[test]
+    fn xla_block_dispatch_is_an_error() {
+        let g = synthetic::cycle(4);
+        let err = run(&g, Variant::XlaBlock, &PrConfig::default());
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("run_with_engine"));
+    }
+
+    #[test]
+    fn empty_graph_short_circuits_for_every_mode() {
+        let g = crate::graph::GraphBuilder::new(0).build("nil");
+        for v in Variant::ALL_MODES {
+            let r = run(&g, v, &PrConfig::default()).unwrap();
+            assert!(r.converged, "{v}");
+            assert!(r.ranks.is_empty(), "{v}");
+        }
+    }
+
+    #[test]
+    fn inv_out_degrees_handles_dangling() {
+        let g = synthetic::chain(3); // 0→1→2, vertex 2 dangles
+        let inv = inv_out_degrees(&g);
+        assert_eq!(inv, vec![1.0, 1.0, 0.0]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Partition-centric scatter-gather PageRank (PCPM), after Lakhotia et al.,
+//! *"Accelerating PageRank using Partition-Centric Processing"*.
+//!
+//! The vertex-centric pull (Algorithms 1/3) reads `pr[v]` for every in-edge
+//! — a random-access stream over the whole rank array. PCPM restructures an
+//! iteration around the partition grid instead:
+//!
+//! * **Scatter** — each thread streams its own partition's vertices once and
+//!   writes each contribution `pr(u)/outdeg(u)` into *update bins* grouped
+//!   by destination partition ([`PartitionBins`]); writes into one bin are
+//!   sequential, so the phase is insert-only streaming.
+//! * **Gather** — each thread merges exactly the bins destined for its
+//!   partition: the bin reads are sequential and the accumulator writes land
+//!   only inside its own (cache-resident) partition slice.
+//!
+//! Both phases are single-writer by construction, separated by engine
+//! barriers, so the iteration is synchronous Jacobi — the same schedule (and
+//! iteration count) as the Barrier variants, with the locality profile of
+//! the edge-centric model but without its shared `m`-sized random writes.
+//!
+//! Registered as [`Variant::Pcpm`](crate::pagerank::Variant::Pcpm), exposed
+//! as `--mode pcpm` (or `--algo pcpm` / `partition-centric`) on the CLI.
+
+use crate::engine::{inv_out_degrees, Kernel, SyncMode, WorkerCtx};
+use crate::graph::partition::PartitionBins;
+use crate::graph::{Csr, Partitions};
+use crate::pagerank::{amplify_work, PrConfig};
+use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
+use anyhow::Result;
+
+pub struct PcpmKernel<'g> {
+    g: &'g Csr,
+    parts: Partitions,
+    bins: PartitionBins,
+    inv_out: Vec<f64>,
+    pr: Vec<AtomicF64>,
+    /// One slot per edge, grouped by (source partition, destination
+    /// partition) — the update bins.
+    bin_values: Vec<AtomicF64>,
+    /// Per-vertex gather accumulator; vertex `u` is only ever touched by the
+    /// thread owning `u`'s partition.
+    acc: Vec<AtomicF64>,
+    base: f64,
+    d: f64,
+    work_amplify: u32,
+}
+
+/// Registry builder for [`Variant::Pcpm`](crate::pagerank::Variant::Pcpm).
+pub fn kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
+    let n = g.num_vertices();
+    let bins = PartitionBins::new(g, parts);
+    Ok(Box::new(PcpmKernel {
+        g,
+        parts: parts.clone(),
+        inv_out: inv_out_degrees(g),
+        pr: atomic_vec(n, 1.0 / n as f64),
+        bin_values: atomic_vec(bins.num_slots(), 0.0),
+        acc: atomic_vec(n, 0.0),
+        bins,
+        base: (1.0 - cfg.damping) / n as f64,
+        d: cfg.damping,
+        work_amplify: cfg.work_amplify,
+    }))
+}
+
+impl Kernel for PcpmKernel<'_> {
+    fn sync_mode(&self) -> SyncMode {
+        SyncMode::Blocking { pre_scatter: true }
+    }
+
+    /// Scatter phase: stream this partition's contributions into its bins.
+    fn scatter(&self, ctx: &WorkerCtx<'_>) {
+        for u in self.parts.range(ctx.tid) {
+            if self.g.out_degree(u) == 0 {
+                continue;
+            }
+            let contribution = self.pr[u as usize].load() * self.inv_out[u as usize];
+            for e in self.g.out_slot_range(u) {
+                self.bin_values[self.bins.scatter_slot(e)].store(contribution);
+            }
+        }
+    }
+
+    /// Gather phase: merge every source partition's bin for this partition,
+    /// then apply Eq. 1 per destination vertex.
+    fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
+        let tid = ctx.tid;
+        for u in self.parts.range(tid) {
+            self.acc[u as usize].store(0.0);
+        }
+        let mut edges = 0u64;
+        for src in 0..self.bins.num_partitions() {
+            let range = self.bins.range(src, tid);
+            edges += range.len() as u64;
+            for slot in range {
+                let v = self.bins.dst(slot) as usize;
+                // single-writer: every destination in this bin is owned by
+                // partition `tid`
+                self.acc[v].store(self.acc[v].load() + self.bin_values[slot].load());
+                amplify_work(self.work_amplify);
+            }
+        }
+        let mut thr_err: f64 = 0.0;
+        for u in self.parts.range(tid) {
+            let previous = self.pr[u as usize].load();
+            let new = self.base + self.d * self.acc[u as usize].load();
+            self.pr[u as usize].store(new);
+            thr_err = thr_err.max((new - previous).abs());
+        }
+        ctx.metrics.add_edges(tid, edges);
+        thr_err
+    }
+
+    fn ranks(&self) -> Vec<f64> {
+        snapshot(&self.pr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::{synthetic, PartitionPolicy};
+    use crate::pagerank::{self, seq, PrConfig, Variant};
+
+    fn cfg(threads: usize) -> PrConfig {
+        PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }
+    }
+
+    #[test]
+    fn matches_sequential_on_cycle() {
+        let g = synthetic::cycle(40);
+        let c = cfg(4);
+        let r = pagerank::run(&g, Variant::Pcpm, &c).unwrap();
+        assert!(r.converged);
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.l1_norm(&sr) < 1e-10, "l1 {}", r.l1_norm(&sr));
+    }
+
+    #[test]
+    fn matches_sequential_on_web_replica() {
+        let g = synthetic::web_replica(800, 6, 17);
+        let c = cfg(3);
+        let r = pagerank::run(&g, Variant::Pcpm, &c).unwrap();
+        assert!(r.converged);
+        let (sr, seq_iters, _) = seq::solve(&g, &c);
+        assert!(r.l1_norm(&sr) < 1e-9, "l1 {}", r.l1_norm(&sr));
+        // synchronous Jacobi schedule: iteration count equals sequential
+        assert_eq!(r.iterations, seq_iters);
+    }
+
+    #[test]
+    fn handles_dangling_vertices() {
+        let g = synthetic::chain(20); // tail vertex has outdeg 0
+        let c = cfg(2);
+        let r = pagerank::run(&g, Variant::Pcpm, &c).unwrap();
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.converged);
+        assert!(r.l1_norm(&sr) < 1e-10);
+    }
+
+    #[test]
+    fn agrees_with_barrier_schedule() {
+        let g = synthetic::social_replica(400, 6, 9);
+        let c = cfg(2);
+        let pcpm = pagerank::run(&g, Variant::Pcpm, &c).unwrap();
+        let barrier = pagerank::run(&g, Variant::Barrier, &c).unwrap();
+        assert_eq!(pcpm.iterations, barrier.iterations);
+        assert!(
+            crate::pagerank::convergence::linf_norm(&pcpm.ranks, &barrier.ranks) < 1e-12
+        );
+    }
+
+    #[test]
+    fn edge_balanced_partitioning_also_correct() {
+        let g = synthetic::web_replica(600, 7, 5);
+        let c = PrConfig { partition: PartitionPolicy::EdgeBalanced, ..cfg(4) };
+        let r = pagerank::run(&g, Variant::Pcpm, &c).unwrap();
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.converged);
+        assert!(r.l1_norm(&sr) < 1e-9);
+    }
+
+    #[test]
+    fn more_threads_than_vertices() {
+        let g = synthetic::cycle(3);
+        let c = cfg(8);
+        let r = pagerank::run(&g, Variant::Pcpm, &c).unwrap();
+        assert!(r.converged);
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.l1_norm(&sr) < 1e-10);
+    }
+}

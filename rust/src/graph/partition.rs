@@ -121,6 +121,93 @@ impl Partitions {
     }
 }
 
+/// Update-bin layout for partition-centric scatter-gather (PCPM).
+///
+/// Groups every edge `(u → v)` by `(source partition, destination
+/// partition)`. The scatter phase of [`crate::engine::pcpm`] streams a
+/// thread's contributions into its own row of bins (sequential writes per
+/// bin); the gather phase merges exactly the column of bins destined for its
+/// partition (sequential reads, partition-local accumulator writes).
+///
+/// Within one `(src, dst)` bin, slots follow ascending source-vertex order —
+/// the same order the stable counting sort gives `Csr::in_neighbors` — so a
+/// PCPM gather accumulates bit-identically to the vertex-centric pull.
+#[derive(Debug, Clone)]
+pub struct PartitionBins {
+    parts: usize,
+    /// `bin_ranges[src * parts + dst]` — slot range of that bin.
+    bin_ranges: Vec<std::ops::Range<usize>>,
+    /// Destination vertex per bin slot.
+    bin_dst: Vec<VertexId>,
+    /// Out-edge index (into `Csr::out_edges` order) → bin slot.
+    scatter_slots: Vec<usize>,
+}
+
+impl PartitionBins {
+    /// Compute the bin layout of `g` under `parts`. O(m log p) (one owner
+    /// lookup per edge), done once per run.
+    pub fn new(g: &Csr, parts: &Partitions) -> Self {
+        let p = parts.count();
+        let m = g.num_edges();
+        let mut counts = vec![0usize; p * p];
+        for src_part in 0..p {
+            for u in parts.range(src_part) {
+                for &v in g.out_neighbors(u) {
+                    counts[src_part * p + parts.owner(v)] += 1;
+                }
+            }
+        }
+        let mut starts = vec![0usize; p * p + 1];
+        for i in 0..p * p {
+            starts[i + 1] = starts[i] + counts[i];
+        }
+        let bin_ranges: Vec<std::ops::Range<usize>> =
+            (0..p * p).map(|i| starts[i]..starts[i + 1]).collect();
+        let mut cursor: Vec<usize> = starts[..p * p].to_vec();
+        let mut bin_dst = vec![0 as VertexId; m];
+        let mut scatter_slots = vec![0usize; m];
+        for src_part in 0..p {
+            for u in parts.range(src_part) {
+                for e in g.out_slot_range(u) {
+                    let v = g.out_edges[e];
+                    let key = src_part * p + parts.owner(v);
+                    let slot = cursor[key];
+                    cursor[key] += 1;
+                    bin_dst[slot] = v;
+                    scatter_slots[e] = slot;
+                }
+            }
+        }
+        Self { parts: p, bin_ranges, bin_dst, scatter_slots }
+    }
+
+    pub fn num_partitions(&self) -> usize {
+        self.parts
+    }
+
+    /// Total bin slots (= number of edges).
+    pub fn num_slots(&self) -> usize {
+        self.bin_dst.len()
+    }
+
+    /// Slot range of the `(src, dst)` bin.
+    pub fn range(&self, src: usize, dst: usize) -> std::ops::Range<usize> {
+        self.bin_ranges[src * self.parts + dst].clone()
+    }
+
+    /// Destination vertex of a bin slot.
+    #[inline]
+    pub fn dst(&self, slot: usize) -> VertexId {
+        self.bin_dst[slot]
+    }
+
+    /// Bin slot written by out-edge `e` (an index into `Csr::out_edges`).
+    #[inline]
+    pub fn scatter_slot(&self, e: usize) -> usize {
+        self.scatter_slots[e]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,5 +280,85 @@ mod tests {
         let p = Partitions::new(&g, 1, PartitionPolicy::EdgeBalanced);
         assert_eq!(p.range(0), 0..10);
         assert_eq!(p.imbalance(&g), 1.0);
+    }
+
+    #[test]
+    fn bins_cover_every_edge_exactly_once() {
+        let g = synthetic::web_replica(500, 6, 13);
+        for threads in [1, 2, 5] {
+            let parts = Partitions::new(&g, threads, PartitionPolicy::VertexBalanced);
+            let bins = PartitionBins::new(&g, &parts);
+            assert_eq!(bins.num_slots(), g.num_edges());
+            // the (src, dst) ranges tile 0..m without gaps or overlap
+            let mut covered = vec![false; g.num_edges()];
+            for src in 0..bins.num_partitions() {
+                for dst in 0..bins.num_partitions() {
+                    for slot in bins.range(src, dst) {
+                        assert!(!covered[slot], "slot {slot} in two bins");
+                        covered[slot] = true;
+                    }
+                }
+            }
+            assert!(covered.iter().all(|&b| b));
+        }
+    }
+
+    #[test]
+    fn scatter_slots_are_a_bijection_onto_the_right_bins() {
+        let g = synthetic::social_replica(300, 5, 7);
+        let parts = Partitions::new(&g, 4, PartitionPolicy::EdgeBalanced);
+        let bins = PartitionBins::new(&g, &parts);
+        let mut seen = vec![false; bins.num_slots()];
+        for u in 0..g.num_vertices() as VertexId {
+            let src_part = parts.owner(u);
+            for e in g.out_slot_range(u) {
+                let slot = bins.scatter_slot(e);
+                assert!(!seen[slot], "slot {slot} claimed twice");
+                seen[slot] = true;
+                let v = g.out_edges[e];
+                assert_eq!(bins.dst(slot), v);
+                // the slot lies in the (owner(u), owner(v)) bin
+                let r = bins.range(src_part, parts.owner(v));
+                assert!(r.contains(&slot), "edge {u}->{v} slot {slot} outside {r:?}");
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn bin_destinations_belong_to_the_bin_partition() {
+        let g = synthetic::web_replica(400, 7, 3);
+        let parts = Partitions::new(&g, 3, PartitionPolicy::VertexBalanced);
+        let bins = PartitionBins::new(&g, &parts);
+        for src in 0..3 {
+            for dst in 0..3 {
+                for slot in bins.range(src, dst) {
+                    assert_eq!(parts.owner(bins.dst(slot)), dst);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bins_within_a_pair_preserve_source_order() {
+        // The bit-exactness contract with the vertex-centric pull: slots in
+        // one (src, dst) bin follow ascending source order.
+        let g = synthetic::social_replica(200, 6, 21);
+        let parts = Partitions::new(&g, 3, PartitionPolicy::VertexBalanced);
+        let bins = PartitionBins::new(&g, &parts);
+        // reconstruct source of each slot
+        let mut slot_src = vec![0 as VertexId; bins.num_slots()];
+        for u in 0..g.num_vertices() as VertexId {
+            for e in g.out_slot_range(u) {
+                slot_src[bins.scatter_slot(e)] = u;
+            }
+        }
+        for src in 0..3 {
+            for dst in 0..3 {
+                let srcs: Vec<VertexId> =
+                    bins.range(src, dst).map(|s| slot_src[s]).collect();
+                assert!(srcs.windows(2).all(|w| w[0] <= w[1]), "({src},{dst}) unsorted");
+            }
+        }
     }
 }

@@ -176,7 +176,7 @@ fn speedup_row(
 fn speedup_table(ctx: &Ctx, title: &str, names: &[&str], graphs: &[Csr]) -> Table {
     let cfg = ctx.config();
     let mut headers: Vec<String> = vec!["dataset".into(), "seq (s)".into()];
-    for v in Variant::parallel_cpu() {
+    for v in Variant::parallel_modes() {
         headers.push(format!("{v} (x)"));
     }
     let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
@@ -191,7 +191,7 @@ fn speedup_table(ctx: &Ctx, title: &str, names: &[&str], graphs: &[Csr]) -> Tabl
         let seq_secs = seq.summary.median;
         let mut row: Vec<Cell> = vec![(*name).into(), seq_secs.into()];
         let mut nonconverged: Vec<String> = Vec::new();
-        for v in Variant::parallel_cpu() {
+        for v in Variant::parallel_modes() {
             let (cell, converged) = speedup_row(ctx, g, &cfg, seq_secs, v);
             if !converged {
                 nonconverged.push(v.name().to_string());
@@ -205,6 +205,7 @@ fn speedup_table(ctx: &Ctx, title: &str, names: &[&str], graphs: &[Csr]) -> Tabl
     }
     t.note(format!("{} · {} threads", ctx.host.describe(), ctx.threads));
     t.note("paper shape: No-Sync family > Barrier family everywhere; No-Sync-Edge unreliable on web-like graphs");
+    t.note("PCPM (ours): partition-centric scatter-gather on the unified engine — synchronous schedule, streaming bins");
     t
 }
 
@@ -296,7 +297,7 @@ pub fn fig5_l1(ctx: &Ctx, web: bool) -> Table {
         0.0.into(),
         "yes".into(),
     ]);
-    for v in Variant::parallel_cpu() {
+    for v in Variant::parallel_modes() {
         let m = ctx.runner.measure_reported(v.name(), || {
             pagerank::run(&g, v, &cfg).expect("run").elapsed.as_secs_f64()
         });
@@ -324,7 +325,7 @@ pub fn fig7_iterations(ctx: &Ctx) -> Table {
     let graphs = ctx.d_series();
     let names = ["D10", "D20", "D30", "D40", "D50", "D60", "D70"];
     let cfg = ctx.config();
-    let variants: Vec<Variant> = Variant::ALL_CPU.to_vec();
+    let variants: Vec<Variant> = Variant::ALL_MODES.to_vec();
     let mut headers: Vec<String> = vec!["dataset".into()];
     headers.extend(variants.iter().map(|v| v.name().to_string()));
     let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
@@ -611,7 +612,8 @@ mod tests {
         let ctx = Ctx { divisor: 20_000, ..tiny_ctx() };
         let t = fig7_iterations(&ctx);
         assert_eq!(t.rows.len(), 7);
-        assert_eq!(t.headers.len(), 1 + Variant::ALL_CPU.len());
+        // every engine mode (paper's eleven + PCPM) gets a column
+        assert_eq!(t.headers.len(), 1 + Variant::ALL_MODES.len());
     }
 
     #[test]

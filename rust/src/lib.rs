@@ -39,6 +39,7 @@
 
 pub mod cli;
 pub mod coordinator;
+pub mod engine;
 pub mod graph;
 pub mod harness;
 pub mod pagerank;

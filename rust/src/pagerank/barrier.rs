@@ -1,145 +1,98 @@
 //! Algorithm 1 — the Barrier baseline (the paper's rendition of the
-//! STIC-D [11] baseline).
+//! STIC-D [11] baseline), as an engine kernel.
 //!
-//! Two-phase iteration with a barrier after each phase:
+//! Two-phase iteration, scheduled by the engine's Blocking driver with a
+//! barrier after each phase:
 //!
-//! * **Phase I** — each thread computes `pr(u)` for its partition from the
-//!   previous-iteration array and records its local max delta.
-//! * **Phase II** — the global error is merged and `prev ← pr`.
+//! * **gather** — each thread computes `pr(u)` for its partition from the
+//!   previous-iteration array and returns its local max delta.
+//! * **commit** — after the global error merge, `prev ← pr`.
 //!
 //! Both arrays are shared `AtomicF64` vectors; within an iteration the
 //! phases make every access single-writer, so all loads/stores are relaxed.
 //! Every thread must arrive at both barriers every iteration — the property
 //! the non-blocking variants exist to remove.
 
-use crate::coordinator::executor::run_workers;
-use crate::coordinator::metrics::RunMetrics;
-use crate::graph::{Csr, Partitions, VertexId};
-use crate::pagerank::convergence::ErrorBoard;
-use crate::pagerank::{amplify_work, PrConfig, PrResult, Variant};
-use crate::sync::atomics::{atomic_vec, snapshot};
-use crate::sync::barrier::SenseBarrier;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Instant;
+use crate::engine::{inv_out_degrees, Kernel, SyncMode, WorkerCtx};
+use crate::graph::{Csr, Partitions};
+use crate::pagerank::{amplify_work, PrConfig};
+use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
+use anyhow::Result;
 
-/// Reciprocal out-degrees, shared by every variant's inner loop (hoists the
-/// per-edge division out of Eq. 1).
-pub(crate) fn inv_out_degrees(g: &Csr) -> Vec<f64> {
-    (0..g.num_vertices() as VertexId)
-        .map(|v| {
-            let od = g.out_degree(v);
-            if od == 0 {
-                0.0
-            } else {
-                1.0 / od as f64
-            }
-        })
-        .collect()
+pub struct BarrierKernel<'g> {
+    g: &'g Csr,
+    parts: Partitions,
+    inv_out: Vec<f64>,
+    pr: Vec<AtomicF64>,
+    prev: Vec<AtomicF64>,
+    base: f64,
+    d: f64,
+    work_amplify: u32,
 }
 
-pub(crate) fn empty_result(variant: Variant, threads: usize) -> PrResult {
-    PrResult {
-        variant,
-        ranks: Vec::new(),
-        iterations: 0,
-        per_thread_iterations: vec![0; threads],
-        elapsed: std::time::Duration::ZERO,
-        converged: true,
-        barrier_wait_secs: 0.0,
-        dnf: false,
-    }
-}
-
-/// Run Algorithm 1.
-pub fn run(g: &Csr, cfg: &PrConfig, parts: &Partitions) -> PrResult {
+/// Registry builder for [`Variant::Barrier`](crate::pagerank::Variant).
+pub fn kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
     let n = g.num_vertices();
-    let threads = cfg.threads;
-    if n == 0 {
-        return empty_result(Variant::Barrier, threads);
+    Ok(Box::new(BarrierKernel {
+        g,
+        parts: parts.clone(),
+        inv_out: inv_out_degrees(g),
+        pr: atomic_vec(n, 0.0),
+        prev: atomic_vec(n, 1.0 / n as f64),
+        base: (1.0 - cfg.damping) / n as f64,
+        d: cfg.damping,
+        work_amplify: cfg.work_amplify,
+    }))
+}
+
+impl Kernel for BarrierKernel<'_> {
+    fn sync_mode(&self) -> SyncMode {
+        SyncMode::Blocking { pre_scatter: false }
     }
-    let d = cfg.damping;
-    let base = (1.0 - d) / n as f64;
-    let inv_out = inv_out_degrees(g);
 
-    let pr = atomic_vec(n, 0.0);
-    let prev = atomic_vec(n, 1.0 / n as f64);
-    let board = ErrorBoard::new(threads);
-    let barrier = SenseBarrier::new(threads);
-    let metrics = RunMetrics::new(threads);
-    let converged = AtomicBool::new(false);
-
-    let start = Instant::now();
-    let outcome = run_workers(threads, cfg.dnf_timeout, &[&barrier], |tid, stop| {
-        let mut waiter = barrier.waiter();
-        let range = parts.range(tid);
-        let mut iter = 0u64;
-        loop {
-            if stop.load(Ordering::Acquire) {
-                return;
+    /// Phase I: compute this partition from `prev`.
+    fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
+        let mut thr_err: f64 = 0.0;
+        let mut edges = 0u64;
+        for u in self.parts.range(ctx.tid) {
+            let mut sum = 0.0;
+            for &v in self.g.in_neighbors(u) {
+                // SAFETY: CSR validation bounds every endpoint (§Perf).
+                sum += unsafe {
+                    self.prev.get_unchecked(v as usize).load()
+                        * self.inv_out.get_unchecked(v as usize)
+                };
+                amplify_work(self.work_amplify);
             }
-            if cfg.faults.apply(tid, iter) {
-                return; // injected crash: never arrives at the barrier again
-            }
-            // Phase I: compute this partition from `prev`.
-            let mut thr_err: f64 = 0.0;
-            let mut edges = 0u64;
-            for u in range.clone() {
-                let mut sum = 0.0;
-                for &v in g.in_neighbors(u) {
-                    // SAFETY: CSR validation bounds every endpoint (§Perf).
-                    sum += unsafe {
-                        prev.get_unchecked(v as usize).load()
-                            * inv_out.get_unchecked(v as usize)
-                    };
-                    amplify_work(cfg.work_amplify);
-                }
-                edges += g.in_degree(u) as u64;
-                let new = base + d * sum;
-                thr_err = thr_err.max((new - prev[u as usize].load()).abs());
-                pr[u as usize].store(new);
-            }
-            metrics.add_edges(tid, edges);
-            board.publish(tid, thr_err);
-            if waiter.wait().is_aborted() {
-                return; // ── Barrier Sync Checkpoint (Phase I)
-            }
-            // Phase II: merge global error, prev ← pr for this partition.
-            let global_err = board.global_max();
-            for u in range.clone() {
-                prev[u as usize].store(pr[u as usize].load());
-            }
-            if waiter.wait().is_aborted() {
-                return; // ── Barrier Sync Checkpoint (Phase II)
-            }
-            iter += 1;
-            metrics.bump_iteration(tid);
-            if global_err <= cfg.threshold {
-                converged.store(true, Ordering::Release);
-                return;
-            }
-            if iter >= cfg.max_iterations {
-                return;
-            }
+            edges += self.g.in_degree(u) as u64;
+            let new = self.base + self.d * sum;
+            thr_err = thr_err.max((new - self.prev[u as usize].load()).abs());
+            self.pr[u as usize].store(new);
         }
-    });
+        ctx.metrics.add_edges(ctx.tid, edges);
+        thr_err
+    }
 
-    PrResult {
-        variant: Variant::Barrier,
-        ranks: snapshot(&prev),
-        iterations: metrics.max_iterations(),
-        per_thread_iterations: metrics.iterations_per_thread(),
-        elapsed: start.elapsed(),
-        converged: converged.load(Ordering::Acquire) && !outcome.dnf,
-        barrier_wait_secs: barrier.total_wait_secs(),
-        dnf: outcome.dnf,
+    /// Phase II: `prev ← pr` for this partition.
+    fn commit(&self, ctx: &WorkerCtx<'_>) {
+        for u in self.parts.range(ctx.tid) {
+            self.prev[u as usize].store(self.pr[u as usize].load());
+        }
+    }
+
+    fn ranks(&self) -> Vec<f64> {
+        snapshot(&self.prev)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::graph::{synthetic, PartitionPolicy};
-    use crate::pagerank::{self, seq};
+    use crate::pagerank::{self, seq, PrConfig, Variant};
 
     fn cfg(threads: usize) -> PrConfig {
         PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }
@@ -149,7 +102,7 @@ mod tests {
     fn matches_sequential_on_cycle() {
         let g = synthetic::cycle(40);
         let c = cfg(4);
-        let r = run(&g, &c, &Partitions::new(&g, 4, PartitionPolicy::VertexBalanced));
+        let r = pagerank::run(&g, Variant::Barrier, &c).unwrap();
         assert!(r.converged);
         let (sr, _, _) = seq::solve(&g, &c);
         assert!(r.l1_norm(&sr) < 1e-10, "l1 {}", r.l1_norm(&sr));
@@ -204,5 +157,16 @@ mod tests {
         let (sr, _, _) = seq::solve(&g, &c);
         assert!(r.converged);
         assert!(r.l1_norm(&sr) < 1e-9);
+    }
+
+    #[test]
+    fn barrier_wait_telemetry_reported() {
+        let g = synthetic::web_replica(500, 6, 11);
+        let r = pagerank::run(&g, Variant::Barrier, &cfg(4)).unwrap();
+        assert!(r.converged);
+        // Four workers over dozens of iterations: the non-leader arrivals
+        // at each phase barrier must have accumulated some wait time —
+        // 0.0 would mean the engine lost the telemetry in the refactor.
+        assert!(r.barrier_wait_secs > 0.0, "wait {}", r.barrier_wait_secs);
     }
 }

@@ -1,133 +1,108 @@
 //! Algorithm 2 — Barrier-Edge: the three-phase edge-centric baseline from
-//! Panyala et al. [7].
+//! Panyala et al. [7], as an engine kernel.
 //!
-//! * **Phase I (push)** — each vertex writes `pr(u)/outdeg(u)` into the
+//! * **scatter (push)** — each vertex writes `pr(u)/outdeg(u)` into the
 //!   contribution slot of each out-link (via the precomputed
 //!   `offset_list`, so every edge has a dedicated slot: no write conflicts).
-//! * **Phase II (pull)** — each vertex sums its in-slots and applies Eq. 1.
-//! * **Phase III** — global error merge.
+//! * **gather (pull)** — each vertex sums its in-slots and applies Eq. 1.
+//! * the engine's third phase merges the global error.
 //!
-//! Barriers separate all three phases. Compared to Algorithm 1 the gather
-//! becomes a *contiguous* read over the contribution list — better spatial
-//! locality, bought with an extra `m`-sized array and one more barrier per
-//! iteration (the trade the paper's Fig 1/2 evaluates).
+//! The Blocking driver (with `pre_scatter`) separates all three with
+//! barriers. Compared to Algorithm 1 the gather becomes a *contiguous* read
+//! over the contribution list — better spatial locality, bought with an
+//! extra `m`-sized array and one more barrier per iteration (the trade the
+//! paper's Fig 1/2 evaluates).
 
-use crate::coordinator::executor::run_workers;
-use crate::coordinator::metrics::RunMetrics;
+use crate::engine::{inv_out_degrees, Kernel, SyncMode, WorkerCtx};
 use crate::graph::{Csr, Partitions};
-use crate::pagerank::barrier::{empty_result, inv_out_degrees};
-use crate::pagerank::convergence::ErrorBoard;
-use crate::pagerank::{amplify_work, PrConfig, PrResult, Variant};
-use crate::sync::atomics::{atomic_vec, snapshot};
-use crate::sync::barrier::SenseBarrier;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Instant;
+use crate::pagerank::{amplify_work, PrConfig};
+use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
+use anyhow::Result;
 
-/// Run Algorithm 2.
-pub fn run(g: &Csr, cfg: &PrConfig, parts: &Partitions) -> PrResult {
+pub struct BarrierEdgeKernel<'g> {
+    g: &'g Csr,
+    parts: Partitions,
+    inv_out: Vec<f64>,
+    // One rank array suffices: the push phase reads ranks (iteration i-1
+    // values), the pull phase overwrites them (iteration i) — the barrier
+    // between the phases separates the two uses, and the old value needed
+    // for the error is read locally before the store. (The paper keeps an
+    // explicit prev_pr and copies in Phase III; the single-array form is
+    // numerically identical and halves the copy traffic — see
+    // EXPERIMENTS.md §Perf.)
+    pr: Vec<AtomicF64>,
+    contributions: Vec<AtomicF64>,
+    base: f64,
+    d: f64,
+    work_amplify: u32,
+}
+
+/// Registry builder for [`Variant::BarrierEdge`](crate::pagerank::Variant).
+pub fn kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
     let n = g.num_vertices();
-    let threads = cfg.threads;
-    if n == 0 {
-        return empty_result(Variant::BarrierEdge, threads);
+    Ok(Box::new(BarrierEdgeKernel {
+        g,
+        parts: parts.clone(),
+        inv_out: inv_out_degrees(g),
+        pr: atomic_vec(n, 1.0 / n as f64),
+        contributions: atomic_vec(g.num_edges(), 0.0),
+        base: (1.0 - cfg.damping) / n as f64,
+        d: cfg.damping,
+        work_amplify: cfg.work_amplify,
+    }))
+}
+
+impl Kernel for BarrierEdgeKernel<'_> {
+    fn sync_mode(&self) -> SyncMode {
+        SyncMode::Blocking { pre_scatter: true }
     }
-    let d = cfg.damping;
-    let base = (1.0 - d) / n as f64;
-    let inv_out = inv_out_degrees(g);
 
-    // One rank array suffices: Phase I reads ranks (iteration i-1 values),
-    // Phase II overwrites them (iteration i) — the barrier between the
-    // phases separates the two uses, and the old value needed for the error
-    // is read locally before the store. (The paper keeps an explicit
-    // prev_pr and copies in Phase III; the single-array form is numerically
-    // identical and halves the copy traffic — see EXPERIMENTS.md §Perf.)
-    let pr = atomic_vec(n, 1.0 / n as f64);
-    let contributions = atomic_vec(g.num_edges(), 0.0);
-    let board = ErrorBoard::new(threads);
-    let barrier = SenseBarrier::new(threads);
-    let metrics = RunMetrics::new(threads);
-    let converged = AtomicBool::new(false);
-
-    let start = Instant::now();
-    let outcome = run_workers(threads, cfg.dnf_timeout, &[&barrier], |tid, stop| {
-        let mut waiter = barrier.waiter();
-        let range = parts.range(tid);
-        let mut iter = 0u64;
-        loop {
-            if stop.load(Ordering::Acquire) {
-                return;
+    /// Push contributions along out-links (Alg 2 lines 8-13).
+    fn scatter(&self, ctx: &WorkerCtx<'_>) {
+        for u in self.parts.range(ctx.tid) {
+            if self.g.out_degree(u) == 0 {
+                continue;
             }
-            if cfg.faults.apply(tid, iter) {
-                return;
-            }
-            // Phase I: push contributions along out-links.
-            for u in range.clone() {
-                let od = g.out_degree(u);
-                if od == 0 {
-                    continue;
-                }
-                let contribution = pr[u as usize].load() * inv_out[u as usize];
-                for e in g.out_slot_range(u) {
-                    contributions[g.offset_list[e]].store(contribution);
-                }
-            }
-            if waiter.wait().is_aborted() {
-                return; // ── barrier (Phase I)
-            }
-            // Phase II: pull from the contribution list.
-            let mut thr_err: f64 = 0.0;
-            let mut edges = 0u64;
-            for u in range.clone() {
-                let mut sum = 0.0;
-                for slot in g.in_slot_range(u) {
-                    sum += contributions[slot].load();
-                    amplify_work(cfg.work_amplify);
-                }
-                edges += g.in_degree(u) as u64;
-                let prev = pr[u as usize].load();
-                let new = base + d * sum;
-                pr[u as usize].store(new);
-                thr_err = thr_err.max((prev - new).abs());
-            }
-            metrics.add_edges(tid, edges);
-            board.publish(tid, thr_err);
-            if waiter.wait().is_aborted() {
-                return; // ── barrier (Phase II)
-            }
-            // Phase III: global error merge (every thread computes the same
-            // max — cheaper than electing thread 0 and barriering again).
-            let global_err = board.global_max();
-            if waiter.wait().is_aborted() {
-                return; // ── barrier (Phase III)
-            }
-            iter += 1;
-            metrics.bump_iteration(tid);
-            if global_err <= cfg.threshold {
-                converged.store(true, Ordering::Release);
-                return;
-            }
-            if iter >= cfg.max_iterations {
-                return;
+            let contribution = self.pr[u as usize].load() * self.inv_out[u as usize];
+            for e in self.g.out_slot_range(u) {
+                self.contributions[self.g.offset_list[e]].store(contribution);
             }
         }
-    });
+    }
 
-    PrResult {
-        variant: Variant::BarrierEdge,
-        ranks: snapshot(&pr),
-        iterations: metrics.max_iterations(),
-        per_thread_iterations: metrics.iterations_per_thread(),
-        elapsed: start.elapsed(),
-        converged: converged.load(Ordering::Acquire) && !outcome.dnf,
-        barrier_wait_secs: barrier.total_wait_secs(),
-        dnf: outcome.dnf,
+    /// Pull from the contribution list (Alg 2 lines 16-23).
+    fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
+        let mut thr_err: f64 = 0.0;
+        let mut edges = 0u64;
+        for u in self.parts.range(ctx.tid) {
+            let mut sum = 0.0;
+            for slot in self.g.in_slot_range(u) {
+                sum += self.contributions[slot].load();
+                amplify_work(self.work_amplify);
+            }
+            edges += self.g.in_degree(u) as u64;
+            let prev = self.pr[u as usize].load();
+            let new = self.base + self.d * sum;
+            self.pr[u as usize].store(new);
+            thr_err = thr_err.max((prev - new).abs());
+        }
+        ctx.metrics.add_edges(ctx.tid, edges);
+        thr_err
+    }
+
+    fn ranks(&self) -> Vec<f64> {
+        snapshot(&self.pr)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::graph::{synthetic, PartitionPolicy};
-    use crate::pagerank::{self, seq};
+    use crate::pagerank::{self, seq, PrConfig, Variant};
 
     fn cfg(threads: usize) -> PrConfig {
         PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }

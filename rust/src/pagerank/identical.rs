@@ -1,25 +1,22 @@
 //! `*-Identical` variants: Algorithm 1 / Algorithm 3 augmented with the
 //! STIC-D identical-node technique (paper §3 [11], evaluated as
-//! Barriers-Identical / No-Sync-Identical in Figs 1–2).
+//! Barriers-Identical / No-Sync-Identical in Figs 1–2), as one engine
+//! kernel with two sync modes.
 //!
 //! Vertices with the same in-neighbour set provably share a PageRank, so
 //! each equivalence class is computed once (at its representative) and the
 //! value is broadcast to the members — eliminating
 //! [`IdenticalClasses::redundant_vertices`] rank computations per iteration.
 //! Class detection is a preprocessing step, included in the reported wall
-//! time (as in the source papers).
+//! time (as in the source papers): the engine starts the clock before the
+//! kernel builder runs.
 
-use crate::coordinator::executor::run_workers;
-use crate::coordinator::metrics::RunMetrics;
+use crate::engine::{inv_out_degrees, Kernel, SyncMode, WorkerCtx};
 use crate::graph::identical::IdenticalClasses;
 use crate::graph::{Csr, Partitions};
-use crate::pagerank::barrier::{empty_result, inv_out_degrees};
-use crate::pagerank::convergence::ErrorBoard;
-use crate::pagerank::{amplify_work, PrConfig, PrResult, Variant};
-use crate::sync::atomics::{atomic_vec, snapshot};
-use crate::sync::barrier::SenseBarrier;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Instant;
+use crate::pagerank::{amplify_work, PrConfig};
+use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
+use anyhow::Result;
 
 /// Split `count` class ids into `threads` contiguous chunks, balanced by
 /// the per-class `load` (in-degree of the representative — the gather cost).
@@ -49,142 +46,116 @@ pub(crate) fn split_classes(
     (0..threads).map(|i| bounds[i]..bounds[i + 1]).collect()
 }
 
-/// Barriers-Identical: Algorithm 1 over class representatives.
-pub fn run_barrier(g: &Csr, cfg: &PrConfig, _parts: &Partitions) -> PrResult {
-    run_impl(g, cfg, Variant::BarrierIdentical)
+pub struct IdenticalKernel<'g> {
+    g: &'g Csr,
+    blocking: bool,
+    classes: IdenticalClasses,
+    chunks: Vec<std::ops::Range<usize>>,
+    inv_out: Vec<f64>,
+    pr: Vec<AtomicF64>,
+    /// Only allocated in blocking mode (Alg 1 keeps two arrays; Alg 3's
+    /// in-place update needs one).
+    prev: Vec<AtomicF64>,
+    base: f64,
+    d: f64,
+    work_amplify: u32,
 }
 
-/// No-Sync-Identical: Algorithm 3 over class representatives.
-pub fn run_nosync(g: &Csr, cfg: &PrConfig, _parts: &Partitions) -> PrResult {
-    run_impl(g, cfg, Variant::NoSyncIdentical)
-}
-
-fn run_impl(g: &Csr, cfg: &PrConfig, variant: Variant) -> PrResult {
+fn build<'g>(g: &'g Csr, cfg: &PrConfig, blocking: bool) -> IdenticalKernel<'g> {
     let n = g.num_vertices();
-    let threads = cfg.threads;
-    if n == 0 {
-        return empty_result(variant, threads);
-    }
-    let start = Instant::now();
     let classes = IdenticalClasses::compute(g);
-    let d = cfg.damping;
-    let base = (1.0 - d) / n as f64;
-    let inv_out = inv_out_degrees(g);
-
     let loads: Vec<usize> = classes
         .representatives
         .iter()
         .map(|&r| g.in_degree(r).max(1))
         .collect();
-    let chunks = split_classes(&loads, threads);
+    let chunks = split_classes(&loads, cfg.threads);
+    IdenticalKernel {
+        g,
+        blocking,
+        classes,
+        chunks,
+        inv_out: inv_out_degrees(g),
+        pr: atomic_vec(n, 1.0 / n as f64),
+        prev: if blocking { atomic_vec(n, 1.0 / n as f64) } else { Vec::new() },
+        base: (1.0 - cfg.damping) / n as f64,
+        d: cfg.damping,
+        work_amplify: cfg.work_amplify,
+    }
+}
 
-    let blocking = variant == Variant::BarrierIdentical;
-    let pr = atomic_vec(n, 1.0 / n as f64);
-    // `prev` is only used by the blocking variant (Alg 1 keeps two arrays;
-    // Alg 3's in-place update needs one).
-    let prev = if blocking { atomic_vec(n, 1.0 / n as f64) } else { Vec::new() };
-    let read = |u: usize| -> f64 {
-        if blocking {
-            prev[u].load()
+/// Registry builder for Barriers-Identical (Algorithm 1 over class
+/// representatives).
+pub fn barrier_kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    _parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
+    Ok(Box::new(build(g, cfg, true)))
+}
+
+/// Registry builder for No-Sync-Identical (Algorithm 3 over class
+/// representatives).
+pub fn nosync_kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    _parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
+    Ok(Box::new(build(g, cfg, false)))
+}
+
+impl IdenticalKernel<'_> {
+    #[inline]
+    fn read(&self, u: usize) -> f64 {
+        if self.blocking {
+            self.prev[u].load()
         } else {
-            pr[u].load()
+            self.pr[u].load()
         }
-    };
+    }
+}
 
-    let board = ErrorBoard::new(threads);
-    let barrier = SenseBarrier::new(threads);
-    let metrics = RunMetrics::new(threads);
-    let converged = AtomicBool::new(false);
-    let capped = AtomicBool::new(false);
+impl Kernel for IdenticalKernel<'_> {
+    fn sync_mode(&self) -> SyncMode {
+        if self.blocking {
+            SyncMode::Blocking { pre_scatter: false }
+        } else {
+            SyncMode::NonBlocking
+        }
+    }
 
-    let outcome = run_workers(
-        threads,
-        cfg.dnf_timeout,
-        &[&barrier],
-        |tid, stop| {
-            let mut waiter = barrier.waiter();
-            let chunk = chunks[tid].clone();
-            let mut iter = 0u64;
-            // confirmation-sweep counter (non-blocking path only); see
-            // nosync.rs for the staleness rationale
-            let mut calm = 0u32;
-            loop {
-                if stop.load(Ordering::Acquire) {
-                    return;
-                }
-                if cfg.faults.apply(tid, iter) {
-                    return;
-                }
-                let mut local_err: f64 = 0.0;
-                for c in chunk.clone() {
-                    let rep = classes.representatives[c];
-                    let previous = read(rep as usize);
-                    let mut sum = 0.0;
-                    for &v in g.in_neighbors(rep) {
-                        sum += read(v as usize) * inv_out[v as usize];
-                        amplify_work(cfg.work_amplify);
-                    }
-                    let new = base + d * sum;
-                    local_err = local_err.max((new - previous).abs());
-                    // broadcast to the whole class
-                    for &m in &classes.members[c] {
-                        pr[m as usize].store(new);
-                    }
-                }
-                board.publish(tid, local_err);
-                iter += 1;
-                metrics.bump_iteration(tid);
-                if blocking {
-                    if waiter.wait().is_aborted() {
-                        return;
-                    }
-                    let global_err = board.global_max();
-                    for c in chunk.clone() {
-                        for &m in &classes.members[c] {
-                            prev[m as usize].store(pr[m as usize].load());
-                        }
-                    }
-                    if waiter.wait().is_aborted() {
-                        return;
-                    }
-                    if global_err <= cfg.threshold {
-                        converged.store(true, Ordering::Release);
-                        return;
-                    }
-                } else {
-                    let merged = board.global_max();
-                    if merged <= cfg.threshold {
-                        calm += 1;
-                        if calm >= 2 {
-                            return;
-                        }
-                    } else {
-                        calm = 0;
-                    }
-                    std::thread::yield_now();
-                }
-                if iter >= cfg.max_iterations {
-                    capped.store(true, Ordering::Release);
-                    return;
-                }
+    /// Compute each class once at its representative, broadcast to members.
+    fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
+        let mut local_err: f64 = 0.0;
+        for c in self.chunks[ctx.tid].clone() {
+            let rep = self.classes.representatives[c];
+            let previous = self.read(rep as usize);
+            let mut sum = 0.0;
+            for &v in self.g.in_neighbors(rep) {
+                sum += self.read(v as usize) * self.inv_out[v as usize];
+                amplify_work(self.work_amplify);
             }
-        },
-    );
+            let new = self.base + self.d * sum;
+            local_err = local_err.max((new - previous).abs());
+            // broadcast to the whole class
+            for &m in &self.classes.members[c] {
+                self.pr[m as usize].store(new);
+            }
+        }
+        local_err
+    }
 
-    let done = if blocking {
-        converged.load(Ordering::Acquire)
-    } else {
-        !capped.load(Ordering::Acquire)
-    };
-    PrResult {
-        variant,
-        ranks: snapshot(&pr),
-        iterations: metrics.max_iterations(),
-        per_thread_iterations: metrics.iterations_per_thread(),
-        elapsed: start.elapsed(),
-        converged: done && !outcome.dnf,
-        barrier_wait_secs: barrier.total_wait_secs(),
-        dnf: outcome.dnf,
+    /// Blocking hand-off: `prev ← pr` for this chunk's class members.
+    fn commit(&self, ctx: &WorkerCtx<'_>) {
+        for c in self.chunks[ctx.tid].clone() {
+            for &m in &self.classes.members[c] {
+                self.prev[m as usize].store(self.pr[m as usize].load());
+            }
+        }
+    }
+
+    fn ranks(&self) -> Vec<f64> {
+        snapshot(&self.pr)
     }
 }
 
@@ -192,7 +163,7 @@ fn run_impl(g: &Csr, cfg: &PrConfig, variant: Variant) -> PrResult {
 mod tests {
     use super::*;
     use crate::graph::synthetic;
-    use crate::pagerank::{self, seq};
+    use crate::pagerank::{self, seq, Variant};
 
     fn cfg(threads: usize) -> PrConfig {
         PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }

@@ -1,25 +1,32 @@
-//! The paper's PageRank algorithm family.
+//! The paper's PageRank algorithm family, decomposed into engine kernels.
 //!
-//! | Variant                | Alg | Sync        | Convergence level       |
-//! |------------------------|-----|-------------|-------------------------|
-//! | `Sequential`           | —   | none        | algorithm               |
-//! | `Barrier`              | 1   | barriers    | algorithm               |
-//! | `BarrierIdentical`     | 1+[11] | barriers | algorithm               |
-//! | `BarrierEdge`          | 2   | barriers ×3 | algorithm               |
-//! | `BarrierOpt`           | 5   | barriers    | node + algorithm        |
-//! | `WaitFree`             | 6   | CAS helping | algorithm (wait-free)   |
-//! | `NoSync`               | 3   | none        | thread                  |
-//! | `NoSyncIdentical`      | 3+[11] | none     | thread                  |
-//! | `NoSyncEdge`           | 4   | none        | thread (may not converge)|
-//! | `NoSyncOpt`            | 5   | none        | node + thread           |
-//! | `NoSyncOptIdentical`   | 5+[11] | none     | node + thread           |
-//! | `XlaBlock`             | —   | none (L3 loop) | algorithm            |
+//! Every program is a thin [`crate::engine::Kernel`] — the per-iteration
+//! math — scheduled by the unified engine under a
+//! [`crate::engine::SyncMode`]:
 //!
-//! All parallel variants run through [`run`], which partitions the graph,
-//! spawns `cfg.threads` workers, applies the configured fault plan, and
-//! returns a [`PrResult`] with ranks plus telemetry. `XlaBlock` requires a
-//! loaded [`crate::runtime::Engine`] and is dispatched through
-//! [`run_with_engine`].
+//! | Variant                | Alg | Kernel (module)         | SyncMode                 | Convergence level        |
+//! |------------------------|-----|-------------------------|--------------------------|--------------------------|
+//! | `Sequential`           | —   | `seq`                   | Sequential               | algorithm                |
+//! | `Barrier`              | 1   | `barrier`               | Blocking                 | algorithm                |
+//! | `BarrierIdentical`     | 1+[11] | `identical`          | Blocking                 | algorithm                |
+//! | `BarrierEdge`          | 2   | `barrier_edge`          | Blocking + pre-scatter   | algorithm                |
+//! | `BarrierOpt`           | 5   | `perforation`           | Blocking                 | node + algorithm         |
+//! | `WaitFree`             | 6   | `waitfree`              | Helping                  | algorithm (wait-free)    |
+//! | `NoSync`               | 3   | `nosync`                | NonBlocking              | thread                   |
+//! | `NoSyncIdentical`      | 3+[11] | `identical`          | NonBlocking              | thread                   |
+//! | `NoSyncEdge`           | 4   | `nosync_edge`           | NonBlocking + scatter    | thread (may not converge)|
+//! | `NoSyncOpt`            | 5   | `perforation`           | NonBlocking              | node + thread            |
+//! | `NoSyncOptIdentical`   | 5+[11] | `perforation`        | NonBlocking              | node + thread            |
+//! | `Pcpm`                 | —   | `engine::pcpm`          | Blocking + pre-scatter   | algorithm                |
+//! | `XlaBlock`             | —   | `xla_block` (no kernel) | — (PJRT engine)          | algorithm                |
+//!
+//! The kernel supplies `scatter`/`gather`/`commit` hooks; the engine owns
+//! worker lifecycle (spawn, partition pinning, fault-plan application, DNF
+//! watchdog), termination detection at every level (algorithm, thread,
+//! node, wait-free helping), and [`PrResult`] telemetry assembly. Dispatch
+//! goes through the single table in [`crate::engine::REGISTRY`]; `XlaBlock`
+//! requires a loaded [`crate::runtime::Engine`] and is dispatched through
+//! [`run_with_engine`] instead.
 
 pub mod barrier;
 pub mod barrier_edge;
@@ -33,7 +40,7 @@ pub mod waitfree;
 pub mod xla_block;
 
 use crate::coordinator::faults::FaultPlan;
-use crate::graph::{Csr, PartitionPolicy, Partitions};
+use crate::graph::{Csr, PartitionPolicy};
 use anyhow::{bail, Result};
 use std::time::Duration;
 
@@ -51,11 +58,15 @@ pub enum Variant {
     NoSyncEdge,
     NoSyncOpt,
     NoSyncOptIdentical,
+    /// Partition-centric scatter-gather (Lakhotia et al.) — ours, on top of
+    /// the unified engine; not one of the paper's programs.
+    Pcpm,
     XlaBlock,
 }
 
 impl Variant {
-    /// Every CPU variant, in the order the paper's figures list programs.
+    /// Every CPU variant of the paper, in the order its figures list
+    /// programs.
     pub const ALL_CPU: [Variant; 11] = [
         Variant::Sequential,
         Variant::Barrier,
@@ -70,9 +81,32 @@ impl Variant {
         Variant::NoSyncOptIdentical,
     ];
 
-    /// The parallel variants (everything but `Sequential`).
+    /// Every engine-dispatched mode: the paper's eleven CPU variants plus
+    /// the partition-centric mode.
+    pub const ALL_MODES: [Variant; 12] = [
+        Variant::Sequential,
+        Variant::Barrier,
+        Variant::BarrierIdentical,
+        Variant::BarrierEdge,
+        Variant::BarrierOpt,
+        Variant::WaitFree,
+        Variant::NoSync,
+        Variant::NoSyncIdentical,
+        Variant::NoSyncEdge,
+        Variant::NoSyncOpt,
+        Variant::NoSyncOptIdentical,
+        Variant::Pcpm,
+    ];
+
+    /// The paper's parallel variants (everything CPU but `Sequential`).
     pub fn parallel_cpu() -> impl Iterator<Item = Variant> {
         Self::ALL_CPU.into_iter().filter(|v| *v != Variant::Sequential)
+    }
+
+    /// Parallel variants plus the partition-centric mode — what the harness
+    /// sweeps so every variant×dataset experiment also covers PCPM.
+    pub fn parallel_modes() -> impl Iterator<Item = Variant> {
+        Self::parallel_cpu().chain(std::iter::once(Variant::Pcpm))
     }
 
     /// Does this variant use barriers (blocking synchronization)?
@@ -83,6 +117,7 @@ impl Variant {
                 | Variant::BarrierIdentical
                 | Variant::BarrierEdge
                 | Variant::BarrierOpt
+                | Variant::Pcpm
         )
     }
 
@@ -121,6 +156,7 @@ impl Variant {
             Variant::NoSyncEdge => "No-Sync-Edge",
             Variant::NoSyncOpt => "No-Sync-Opt",
             Variant::NoSyncOptIdentical => "No-Sync-Opt-Identical",
+            Variant::Pcpm => "PCPM",
             Variant::XlaBlock => "XLA-Block",
         }
     }
@@ -139,6 +175,7 @@ impl Variant {
             "no-sync-edge" | "nosync-edge" => Variant::NoSyncEdge,
             "no-sync-opt" | "nosync-opt" => Variant::NoSyncOpt,
             "no-sync-opt-identical" | "nosync-opt-identical" => Variant::NoSyncOptIdentical,
+            "pcpm" | "partition-centric" => Variant::Pcpm,
             "xla-block" | "xla" => Variant::XlaBlock,
             _ => bail!("unknown variant '{s}'"),
         })
@@ -236,20 +273,41 @@ pub struct PrResult {
 }
 
 impl PrResult {
+    /// The trivial result for an empty graph (every variant short-circuits
+    /// through the engine before spawning workers).
+    pub fn empty(variant: Variant, threads: usize) -> PrResult {
+        PrResult {
+            variant,
+            ranks: Vec::new(),
+            iterations: 0,
+            per_thread_iterations: vec![0; threads],
+            elapsed: Duration::ZERO,
+            converged: true,
+            barrier_wait_secs: 0.0,
+            dnf: false,
+        }
+    }
+
     /// L1 distance to a reference rank vector (the paper's accuracy metric,
     /// Figs 5–6).
     pub fn l1_norm(&self, reference: &[f64]) -> f64 {
         convergence::l1_norm(&self.ranks, reference)
     }
 
-    /// Indices of the top-k ranked vertices, descending.
+    /// Indices of the top-k ranked vertices, descending. NaN ranks (possible
+    /// in a non-converged No-Sync-Edge run) sort below every real number
+    /// instead of panicking (`total_cmp`).
     pub fn top_k(&self, k: usize) -> Vec<(u32, f64)> {
         let mut idx: Vec<u32> = (0..self.ranks.len() as u32).collect();
         idx.sort_by(|&a, &b| {
-            self.ranks[b as usize]
-                .partial_cmp(&self.ranks[a as usize])
-                .unwrap()
-                .then(a.cmp(&b))
+            let (ra, rb) = (self.ranks[a as usize], self.ranks[b as usize]);
+            // order NaN last regardless of sign-bit quirks of total_cmp
+            match (ra.is_nan(), rb.is_nan()) {
+                (true, true) => a.cmp(&b),
+                (true, false) => std::cmp::Ordering::Greater,
+                (false, true) => std::cmp::Ordering::Less,
+                (false, false) => rb.total_cmp(&ra).then(a.cmp(&b)),
+            }
         });
         idx.truncate(k);
         idx.into_iter().map(|u| (u, self.ranks[u as usize])).collect()
@@ -267,24 +325,10 @@ pub(crate) fn amplify_work(k: u32) {
     }
 }
 
-/// Run a CPU variant on `g`.
+/// Run a CPU variant on `g` through the unified engine (kernel dispatch via
+/// [`crate::engine::REGISTRY`]).
 pub fn run(g: &Csr, variant: Variant, cfg: &PrConfig) -> Result<PrResult> {
-    cfg.validate()?;
-    let parts = Partitions::new(g, cfg.threads, cfg.partition);
-    match variant {
-        Variant::Sequential => Ok(seq::run(g, cfg)),
-        Variant::Barrier => Ok(barrier::run(g, cfg, &parts)),
-        Variant::BarrierIdentical => Ok(identical::run_barrier(g, cfg, &parts)),
-        Variant::BarrierEdge => Ok(barrier_edge::run(g, cfg, &parts)),
-        Variant::BarrierOpt => Ok(perforation::run_barrier_opt(g, cfg, &parts)),
-        Variant::WaitFree => Ok(waitfree::run(g, cfg, &parts)),
-        Variant::NoSync => Ok(nosync::run(g, cfg, &parts)),
-        Variant::NoSyncIdentical => Ok(identical::run_nosync(g, cfg, &parts)),
-        Variant::NoSyncEdge => Ok(nosync_edge::run(g, cfg, &parts)),
-        Variant::NoSyncOpt => Ok(perforation::run_nosync_opt(g, cfg, &parts)),
-        Variant::NoSyncOptIdentical => Ok(perforation::run_nosync_opt_identical(g, cfg, &parts)),
-        Variant::XlaBlock => bail!("XlaBlock needs an engine; use run_with_engine"),
-    }
+    crate::engine::run(g, variant, cfg)
 }
 
 /// Run any variant, including `XlaBlock` (which executes the AOT-compiled
@@ -307,27 +351,36 @@ mod tests {
 
     #[test]
     fn variant_parse_roundtrip() {
-        for v in Variant::ALL_CPU {
+        // Every engine mode (the paper's eleven plus PCPM) and the XLA
+        // variant round-trip through their display names.
+        for v in Variant::ALL_MODES {
             assert_eq!(Variant::parse(v.name()).unwrap(), v);
         }
+        assert_eq!(Variant::parse(Variant::XlaBlock.name()).unwrap(), Variant::XlaBlock);
         assert_eq!(Variant::parse("nosync").unwrap(), Variant::NoSync);
         assert_eq!(Variant::parse("barrier_helper").unwrap(), Variant::WaitFree);
+        assert_eq!(Variant::parse("pcpm").unwrap(), Variant::Pcpm);
+        assert_eq!(Variant::parse("partition-centric").unwrap(), Variant::Pcpm);
+        assert_eq!(Variant::parse("partition_centric").unwrap(), Variant::Pcpm);
+        assert_eq!(Variant::parse("xla").unwrap(), Variant::XlaBlock);
         assert!(Variant::parse("bogus").is_err());
     }
 
     #[test]
     fn classification_is_consistent() {
-        for v in Variant::ALL_CPU {
+        for v in Variant::ALL_MODES {
             assert!(
                 !(v.is_blocking() && v.is_non_blocking()),
                 "{v} cannot be both"
             );
         }
         assert!(Variant::Barrier.is_blocking());
+        assert!(Variant::Pcpm.is_blocking());
         assert!(Variant::NoSync.is_non_blocking());
         assert!(Variant::WaitFree.is_non_blocking());
         assert!(Variant::NoSyncOpt.is_approximate());
         assert!(!Variant::NoSync.is_approximate());
+        assert!(!Variant::Pcpm.is_approximate());
     }
 
     #[test]
@@ -343,5 +396,30 @@ mod tests {
     fn all_cpu_lists_eleven() {
         assert_eq!(Variant::ALL_CPU.len(), 11);
         assert_eq!(Variant::parallel_cpu().count(), 10);
+        assert_eq!(Variant::ALL_MODES.len(), 12);
+        assert_eq!(Variant::parallel_modes().count(), 11);
+    }
+
+    #[test]
+    fn top_k_is_nan_robust() {
+        let r = PrResult {
+            variant: Variant::NoSyncEdge,
+            ranks: vec![0.3, f64::NAN, 0.5, 0.2],
+            iterations: 1,
+            per_thread_iterations: vec![1],
+            elapsed: Duration::ZERO,
+            converged: false,
+            barrier_wait_secs: 0.0,
+            dnf: false,
+        };
+        let top = r.top_k(3);
+        assert_eq!(top[0].0, 2);
+        assert_eq!(top[1].0, 0);
+        assert_eq!(top[2].0, 3);
+        // NaN sorts last, and asking for more than len never panics
+        let all = r.top_k(10);
+        assert_eq!(all.len(), 4);
+        assert_eq!(all[3].0, 1);
+        assert!(all[3].1.is_nan());
     }
 }

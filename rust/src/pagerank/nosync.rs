@@ -1,130 +1,96 @@
-//! Algorithm 3 — No-Sync: the paper's core non-blocking contribution.
+//! Algorithm 3 — No-Sync: the paper's core non-blocking contribution, as an
+//! engine kernel.
 //!
 //! Differences from Algorithm 1, exactly as §4.3 describes:
 //!
-//! 1. **No barriers.** Threads run their partitions at their own pace;
-//!    a rank read may come from the current or a neighbouring iteration
-//!    (the relaxation Lemma 1 proves convergent, and Lemma 2 proves
-//!    fixed-point-identical to sequential).
+//! 1. **No barriers.** The engine's NonBlocking driver lets threads run
+//!    their partitions at their own pace; a rank read may come from the
+//!    current or a neighbouring iteration (the relaxation Lemma 1 proves
+//!    convergent, and Lemma 2 proves fixed-point-identical to sequential).
 //! 2. **No previous-rank array.** With iteration-level dependencies gone,
 //!    updates are in place — halving rank-array memory traffic.
-//! 3. **Thread-level convergence.** Each thread merges the freshest visible
-//!    per-thread errors ([`ErrorBoard`]) and exits on its own; no global
-//!    agreement step exists.
+//! 3. **Thread-level convergence.** The driver merges the freshest visible
+//!    per-thread errors ([`crate::pagerank::convergence::ErrorBoard`]) and
+//!    each thread exits on its own; no global agreement step exists.
 //!
 //! Each rank cell has a single writer (its partition owner); concurrent
 //! readers are fine ([`crate::sync::atomics::AtomicF64`] — relaxed loads,
 //! never torn).
 
-use crate::coordinator::executor::run_workers;
-use crate::coordinator::metrics::RunMetrics;
+use crate::engine::{inv_out_degrees, Kernel, SyncMode, WorkerCtx};
 use crate::graph::{Csr, Partitions};
-use crate::pagerank::barrier::{empty_result, inv_out_degrees};
-use crate::pagerank::convergence::ErrorBoard;
-use crate::pagerank::{amplify_work, PrConfig, PrResult, Variant};
-use crate::sync::atomics::{atomic_vec, snapshot};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Instant;
+use crate::pagerank::{amplify_work, PrConfig};
+use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
+use anyhow::Result;
 
-/// Run Algorithm 3.
-pub fn run(g: &Csr, cfg: &PrConfig, parts: &Partitions) -> PrResult {
+pub struct NoSyncKernel<'g> {
+    g: &'g Csr,
+    parts: Partitions,
+    inv_out: Vec<f64>,
+    pr: Vec<AtomicF64>,
+    base: f64,
+    d: f64,
+    work_amplify: u32,
+}
+
+/// Registry builder for [`Variant::NoSync`](crate::pagerank::Variant).
+pub fn kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
     let n = g.num_vertices();
-    let threads = cfg.threads;
-    if n == 0 {
-        return empty_result(Variant::NoSync, threads);
+    Ok(Box::new(NoSyncKernel {
+        g,
+        parts: parts.clone(),
+        inv_out: inv_out_degrees(g),
+        pr: atomic_vec(n, 1.0 / n as f64),
+        base: (1.0 - cfg.damping) / n as f64,
+        d: cfg.damping,
+        work_amplify: cfg.work_amplify,
+    }))
+}
+
+impl Kernel for NoSyncKernel<'_> {
+    fn sync_mode(&self) -> SyncMode {
+        SyncMode::NonBlocking
     }
-    let d = cfg.damping;
-    let base = (1.0 - d) / n as f64;
-    let inv_out = inv_out_degrees(g);
 
-    let pr = atomic_vec(n, 1.0 / n as f64);
-    let board = ErrorBoard::new(threads);
-    let metrics = RunMetrics::new(threads);
-    let capped = AtomicBool::new(false);
-
-    let start = Instant::now();
-    let outcome = run_workers(threads, cfg.dnf_timeout, &[], |tid, stop| {
-        let range = parts.range(tid);
-        let mut iter = 0u64;
-        // Consecutive iterations with every visible error ≤ threshold. The
-        // paper's Alg 3 exits on the first such observation; on hosts with
-        // fewer cores than threads a descheduled peer can hold a stale-calm
-        // slot, so we demand a confirmation sweep (two consecutive calm
-        // iterations) — the second sweep re-validates this partition against
-        // any updates that landed in between. See DESIGN.md §Substitutions.
-        let mut calm = 0u32;
-        loop {
-            if stop.load(Ordering::Acquire) {
-                return;
+    /// One in-place sweep over this partition (Alg 3 lines 5-15).
+    fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
+        let mut local_err: f64 = 0.0;
+        let mut edges = 0u64;
+        for u in self.parts.range(ctx.tid) {
+            let mut tmp = 0.0;
+            let previous = self.pr[u as usize].load();
+            for &v in self.g.in_neighbors(u) {
+                // SAFETY: CSR validation bounds every endpoint by n
+                // (= pr.len() = inv_out.len()); the checks cost ~10%
+                // in this memory-bound gather (§Perf).
+                tmp += unsafe {
+                    self.pr.get_unchecked(v as usize).load()
+                        * self.inv_out.get_unchecked(v as usize)
+                };
+                amplify_work(self.work_amplify);
             }
-            if cfg.faults.apply(tid, iter) {
-                return; // crash: error slot stays stale, peers keep spinning
-            }
-            let mut local_err: f64 = 0.0;
-            let mut edges = 0u64;
-            for u in range.clone() {
-                let mut tmp = 0.0;
-                let previous = pr[u as usize].load();
-                for &v in g.in_neighbors(u) {
-                    // SAFETY: CSR validation bounds every endpoint by n
-                    // (= pr.len() = inv_out.len()); the checks cost ~10%
-                    // in this memory-bound gather (§Perf).
-                    tmp += unsafe {
-                        pr.get_unchecked(v as usize).load()
-                            * inv_out.get_unchecked(v as usize)
-                    };
-                    amplify_work(cfg.work_amplify);
-                }
-                edges += g.in_degree(u) as u64;
-                let new = base + d * tmp;
-                pr[u as usize].store(new);
-                local_err = local_err.max((new - previous).abs());
-            }
-            metrics.add_edges(tid, edges);
-            iter += 1;
-            metrics.bump_iteration(tid);
-            board.publish(tid, local_err);
-            // Thread-level convergence: merge own error with the freshest
-            // visible values from every peer (Alg 3 lines 16-19). Peers may
-            // still be mid-iteration — that partial view is the point.
-            let merged = board.global_max();
-            if merged <= cfg.threshold {
-                calm += 1;
-                if calm >= 2 {
-                    return;
-                }
-            } else {
-                calm = 0;
-            }
-            if iter >= cfg.max_iterations {
-                capped.store(true, Ordering::Release);
-                return;
-            }
-            // Cooperative fairness: on oversubscribed hosts a spinning
-            // thread can starve its peers for whole timeslices, inflating
-            // staleness far beyond what the paper's 56 hardware threads
-            // ever see. One yield per sweep keeps sweeps interleaved.
-            std::thread::yield_now();
+            edges += self.g.in_degree(u) as u64;
+            let new = self.base + self.d * tmp;
+            self.pr[u as usize].store(new);
+            local_err = local_err.max((new - previous).abs());
         }
-    });
+        ctx.metrics.add_edges(ctx.tid, edges);
+        local_err
+    }
 
-    PrResult {
-        variant: Variant::NoSync,
-        ranks: snapshot(&pr),
-        iterations: metrics.max_iterations(),
-        per_thread_iterations: metrics.iterations_per_thread(),
-        elapsed: start.elapsed(),
-        converged: !capped.load(Ordering::Acquire) && !outcome.dnf,
-        barrier_wait_secs: 0.0,
-        dnf: outcome.dnf,
+    fn ranks(&self) -> Vec<f64> {
+        snapshot(&self.pr)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::graph::synthetic;
-    use crate::pagerank::{self, convergence, seq};
+    use crate::pagerank::{self, convergence, seq, PrConfig, Variant};
 
     fn cfg(threads: usize) -> PrConfig {
         PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }

@@ -1,10 +1,11 @@
 //! Algorithm 4 — No-Sync-Edge: the barrier-free version of the three-phase
-//! edge-centric model.
+//! edge-centric model, as an engine kernel.
 //!
-//! Per §4.4 this variant removes all three barriers from Algorithm 2: each
-//! thread pulls from the contribution list, merges errors, then pushes its
-//! new contributions — all unsynchronized. Contributions read during a pull
-//! can therefore be an arbitrary mix of iterations.
+//! Per §4.4 this variant removes all three barriers from Algorithm 2: the
+//! engine's NonBlocking driver runs each thread's pull (`gather`), merges
+//! errors, then pushes its new contributions (`scatter`) — all
+//! unsynchronized. Contributions read during a pull can therefore be an
+//! arbitrary mix of iterations.
 //!
 //! The paper reports (and this reproduction confirms — see
 //! `integration_variants.rs` and Fig 1/2 benches) that the variant **does
@@ -13,28 +14,31 @@
 //! combination Lemma 1 covers. The iteration cap turns non-convergence into
 //! `converged = false` instead of a hang.
 
-use crate::coordinator::executor::run_workers;
-use crate::coordinator::metrics::RunMetrics;
+use crate::engine::{inv_out_degrees, Kernel, SyncMode, WorkerCtx};
 use crate::graph::{Csr, Partitions};
-use crate::pagerank::barrier::{empty_result, inv_out_degrees};
-use crate::pagerank::convergence::ErrorBoard;
-use crate::pagerank::{amplify_work, PrConfig, PrResult, Variant};
-use crate::sync::atomics::{atomic_vec, snapshot};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Instant;
+use crate::pagerank::{amplify_work, PrConfig};
+use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
+use anyhow::Result;
 
-/// Run Algorithm 4.
-pub fn run(g: &Csr, cfg: &PrConfig, parts: &Partitions) -> PrResult {
+pub struct NoSyncEdgeKernel<'g> {
+    g: &'g Csr,
+    parts: Partitions,
+    inv_out: Vec<f64>,
+    pr: Vec<AtomicF64>,
+    contributions: Vec<AtomicF64>,
+    base: f64,
+    d: f64,
+    work_amplify: u32,
+}
+
+/// Registry builder for [`Variant::NoSyncEdge`](crate::pagerank::Variant).
+pub fn kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
     let n = g.num_vertices();
-    let threads = cfg.threads;
-    if n == 0 {
-        return empty_result(Variant::NoSyncEdge, threads);
-    }
-    let d = cfg.damping;
-    let base = (1.0 - d) / n as f64;
     let inv_out = inv_out_degrees(g);
-
-    let pr = atomic_vec(n, 1.0 / n as f64);
     let contributions = atomic_vec(g.num_edges(), 0.0);
     // Seed the contribution list from the uniform initial ranks so the first
     // pull phase sees iteration-0 data.
@@ -44,88 +48,66 @@ pub fn run(g: &Csr, cfg: &PrConfig, parts: &Partitions) -> PrResult {
             contributions[g.offset_list[e]].store(c);
         }
     }
+    Ok(Box::new(NoSyncEdgeKernel {
+        g,
+        parts: parts.clone(),
+        inv_out,
+        pr: atomic_vec(n, 1.0 / n as f64),
+        contributions,
+        base: (1.0 - cfg.damping) / n as f64,
+        d: cfg.damping,
+        work_amplify: cfg.work_amplify,
+    }))
+}
 
-    let board = ErrorBoard::new(threads);
-    let metrics = RunMetrics::new(threads);
-    let capped = AtomicBool::new(false);
+impl Kernel for NoSyncEdgeKernel<'_> {
+    fn sync_mode(&self) -> SyncMode {
+        SyncMode::NonBlocking
+    }
 
-    let start = Instant::now();
-    let outcome = run_workers(threads, cfg.dnf_timeout, &[], |tid, stop| {
-        let range = parts.range(tid);
-        let mut iter = 0u64;
-        // confirmation-sweep counter; see nosync.rs for the rationale
-        let mut calm = 0u32;
-        loop {
-            if stop.load(Ordering::Acquire) {
-                return;
+    /// Pull phase (Alg 4 lines 5-13).
+    fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
+        let mut local_err: f64 = 0.0;
+        let mut edges = 0u64;
+        for u in self.parts.range(ctx.tid) {
+            let previous = self.pr[u as usize].load();
+            let mut sum = 0.0;
+            for slot in self.g.in_slot_range(u) {
+                sum += self.contributions[slot].load();
+                amplify_work(self.work_amplify);
             }
-            if cfg.faults.apply(tid, iter) {
-                return;
-            }
-            // Pull phase (Alg 4 lines 5-13).
-            let mut local_err: f64 = 0.0;
-            let mut edges = 0u64;
-            for u in range.clone() {
-                let previous = pr[u as usize].load();
-                let mut sum = 0.0;
-                for slot in g.in_slot_range(u) {
-                    sum += contributions[slot].load();
-                    amplify_work(cfg.work_amplify);
-                }
-                edges += g.in_degree(u) as u64;
-                let new = base + d * sum;
-                pr[u as usize].store(new);
-                local_err = local_err.max((new - previous).abs());
-            }
-            metrics.add_edges(tid, edges);
-            iter += 1;
-            metrics.bump_iteration(tid);
-            board.publish(tid, local_err);
-            let merged = board.global_max();
-            // Push phase (Alg 4 lines 19-27): publish new contributions.
-            for u in range.clone() {
-                let od = g.out_degree(u);
-                if od == 0 {
-                    continue;
-                }
-                let contribution = pr[u as usize].load() * inv_out[u as usize];
-                for e in g.out_slot_range(u) {
-                    contributions[g.offset_list[e]].store(contribution);
-                }
-            }
-            if merged <= cfg.threshold {
-                calm += 1;
-                if calm >= 2 {
-                    return;
-                }
-            } else {
-                calm = 0;
-            }
-            if iter >= cfg.max_iterations {
-                capped.store(true, Ordering::Release);
-                return;
-            }
-            std::thread::yield_now();
+            edges += self.g.in_degree(u) as u64;
+            let new = self.base + self.d * sum;
+            self.pr[u as usize].store(new);
+            local_err = local_err.max((new - previous).abs());
         }
-    });
+        ctx.metrics.add_edges(ctx.tid, edges);
+        local_err
+    }
 
-    PrResult {
-        variant: Variant::NoSyncEdge,
-        ranks: snapshot(&pr),
-        iterations: metrics.max_iterations(),
-        per_thread_iterations: metrics.iterations_per_thread(),
-        elapsed: start.elapsed(),
-        converged: !capped.load(Ordering::Acquire) && !outcome.dnf,
-        barrier_wait_secs: 0.0,
-        dnf: outcome.dnf,
+    /// Push phase (Alg 4 lines 19-27): publish new contributions. The
+    /// NonBlocking driver runs this right after the error merge.
+    fn scatter(&self, ctx: &WorkerCtx<'_>) {
+        for u in self.parts.range(ctx.tid) {
+            if self.g.out_degree(u) == 0 {
+                continue;
+            }
+            let contribution = self.pr[u as usize].load() * self.inv_out[u as usize];
+            for e in self.g.out_slot_range(u) {
+                self.contributions[self.g.offset_list[e]].store(contribution);
+            }
+        }
+    }
+
+    fn ranks(&self) -> Vec<f64> {
+        snapshot(&self.pr)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::graph::synthetic;
-    use crate::pagerank::{self, seq};
+    use crate::pagerank::{self, seq, PrConfig, Variant};
 
     fn cfg(threads: usize) -> PrConfig {
         PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }

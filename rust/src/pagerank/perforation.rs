@@ -1,5 +1,6 @@
 //! Algorithm 5 — loop perforation (Sidiroglou-Douskos et al. [6], applied
-//! to PageRank per Panyala et al. [7]): the `*-Opt` approximate variants.
+//! to PageRank per Panyala et al. [7]): the `*-Opt` approximate variants,
+//! as engine kernels.
 //!
 //! A vertex whose rank delta is non-zero but below
 //! `threshold * perforation_factor` (the paper freezes at `1e-21` with a
@@ -9,255 +10,221 @@
 //! vertices stop costing gather work entirely.
 //!
 //! Three variants, matching the paper's program list:
-//! * [`run_barrier_opt`]  — Algorithm 1 + perforation (algorithm + node
-//!   convergence);
-//! * [`run_nosync_opt`]   — Algorithm 3 + perforation (thread + node);
-//! * [`run_nosync_opt_identical`] — additionally computes only one vertex
+//! * [`barrier_opt_kernel`]  — Algorithm 1 + perforation (algorithm + node
+//!   convergence; Blocking mode);
+//! * [`nosync_opt_kernel`]   — Algorithm 3 + perforation (thread + node;
+//!   NonBlocking mode);
+//! * [`nosync_opt_identical_kernel`] — additionally computes only one vertex
 //!   per identical-class (all three techniques composed).
 
-use crate::coordinator::executor::run_workers;
-use crate::coordinator::metrics::RunMetrics;
+use crate::engine::{inv_out_degrees, Kernel, SyncMode, WorkerCtx};
 use crate::graph::identical::IdenticalClasses;
 use crate::graph::{Csr, Partitions};
-use crate::pagerank::barrier::{empty_result, inv_out_degrees};
-use crate::pagerank::convergence::ErrorBoard;
 use crate::pagerank::identical::split_classes;
-use crate::pagerank::{amplify_work, PrConfig, PrResult, Variant};
-use crate::sync::atomics::{atomic_vec, snapshot};
-use crate::sync::barrier::SenseBarrier;
+use crate::pagerank::{amplify_work, PrConfig};
+use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
+use anyhow::Result;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Instant;
 
-/// Barrier-Opt (Algorithm 5 over Algorithm 1).
-pub fn run_barrier_opt(g: &Csr, cfg: &PrConfig, parts: &Partitions) -> PrResult {
-    run_vertex_impl(g, cfg, parts, Variant::BarrierOpt)
+/// Vertex-level perforated kernel (Barrier-Opt / No-Sync-Opt).
+pub struct PerforatedKernel<'g> {
+    g: &'g Csr,
+    blocking: bool,
+    parts: Partitions,
+    inv_out: Vec<f64>,
+    pr: Vec<AtomicF64>,
+    /// Blocking mode only (two-array Jacobi schedule).
+    prev: Vec<AtomicF64>,
+    /// Node-level convergence marks (Alg 5's threshold_check array).
+    frozen: Vec<AtomicBool>,
+    base: f64,
+    d: f64,
+    cutoff: f64,
+    work_amplify: u32,
 }
 
-/// No-Sync-Opt (Algorithm 5 over Algorithm 3).
-pub fn run_nosync_opt(g: &Csr, cfg: &PrConfig, parts: &Partitions) -> PrResult {
-    run_vertex_impl(g, cfg, parts, Variant::NoSyncOpt)
-}
-
-fn run_vertex_impl(g: &Csr, cfg: &PrConfig, parts: &Partitions, variant: Variant) -> PrResult {
+fn build<'g>(g: &'g Csr, cfg: &PrConfig, parts: &Partitions, blocking: bool) -> PerforatedKernel<'g> {
     let n = g.num_vertices();
-    let threads = cfg.threads;
-    if n == 0 {
-        return empty_result(variant, threads);
+    PerforatedKernel {
+        g,
+        blocking,
+        parts: parts.clone(),
+        inv_out: inv_out_degrees(g),
+        pr: atomic_vec(n, 1.0 / n as f64),
+        prev: if blocking { atomic_vec(n, 1.0 / n as f64) } else { Vec::new() },
+        frozen: (0..n).map(|_| AtomicBool::new(false)).collect(),
+        base: (1.0 - cfg.damping) / n as f64,
+        d: cfg.damping,
+        cutoff: cfg.threshold * cfg.perforation_factor,
+        work_amplify: cfg.work_amplify,
     }
-    let blocking = variant == Variant::BarrierOpt;
-    let d = cfg.damping;
-    let base = (1.0 - d) / n as f64;
-    let cutoff = cfg.threshold * cfg.perforation_factor;
-    let inv_out = inv_out_degrees(g);
+}
 
-    let pr = atomic_vec(n, 1.0 / n as f64);
-    let prev = if blocking { atomic_vec(n, 1.0 / n as f64) } else { Vec::new() };
-    // node-level convergence marks (Alg 5's threshold_check array)
-    let frozen: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+/// Registry builder for Barrier-Opt (Algorithm 5 over Algorithm 1).
+pub fn barrier_opt_kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
+    Ok(Box::new(build(g, cfg, parts, true)))
+}
 
-    let board = ErrorBoard::new(threads);
-    let barrier = SenseBarrier::new(threads);
-    let metrics = RunMetrics::new(threads);
-    let converged = AtomicBool::new(false);
-    let capped = AtomicBool::new(false);
+/// Registry builder for No-Sync-Opt (Algorithm 5 over Algorithm 3).
+pub fn nosync_opt_kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
+    Ok(Box::new(build(g, cfg, parts, false)))
+}
 
-    let start = Instant::now();
-    let outcome = run_workers(threads, cfg.dnf_timeout, &[&barrier], |tid, stop| {
-        let mut waiter = barrier.waiter();
-        let range = parts.range(tid);
-        let mut iter = 0u64;
-        // confirmation-sweep counter (non-blocking path only); see nosync.rs
-        let mut calm = 0u32;
-        loop {
-            if stop.load(Ordering::Acquire) {
-                return;
+impl PerforatedKernel<'_> {
+    #[inline]
+    fn read(&self, u: usize) -> f64 {
+        if self.blocking {
+            self.prev[u].load()
+        } else {
+            self.pr[u].load()
+        }
+    }
+}
+
+impl Kernel for PerforatedKernel<'_> {
+    fn sync_mode(&self) -> SyncMode {
+        if self.blocking {
+            SyncMode::Blocking { pre_scatter: false }
+        } else {
+            SyncMode::NonBlocking
+        }
+    }
+
+    fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
+        let mut local_err: f64 = 0.0;
+        let mut skipped = 0u64;
+        for u in self.parts.range(ctx.tid) {
+            let ui = u as usize;
+            // Alg 5 line 6: skip nodes marked converged.
+            if self.frozen[ui].load(Ordering::Relaxed) {
+                skipped += 1;
+                continue;
             }
-            if cfg.faults.apply(tid, iter) {
-                return;
+            let previous = self.read(ui);
+            let mut sum = 0.0;
+            for &v in self.g.in_neighbors(u) {
+                sum += self.read(v as usize) * self.inv_out[v as usize];
+                amplify_work(self.work_amplify);
             }
-            let mut local_err: f64 = 0.0;
-            let mut skipped = 0u64;
-            for u in range.clone() {
-                let ui = u as usize;
-                // Alg 5 line 6: skip nodes marked converged.
-                if frozen[ui].load(Ordering::Relaxed) {
-                    skipped += 1;
-                    continue;
-                }
-                let previous = if blocking { prev[ui].load() } else { pr[ui].load() };
-                let mut sum = 0.0;
-                for &v in g.in_neighbors(u) {
-                    let r = if blocking { prev[v as usize].load() } else { pr[v as usize].load() };
-                    sum += r * inv_out[v as usize];
-                    amplify_work(cfg.work_amplify);
-                }
-                let new = base + d * sum;
-                pr[ui].store(new);
-                let delta = (new - previous).abs();
-                local_err = local_err.max(delta);
-                // Alg 5 line 11: freeze nodes with a tiny non-zero delta.
-                if delta != 0.0 && delta < cutoff {
-                    frozen[ui].store(true, Ordering::Relaxed);
-                }
-            }
-            metrics.add_skipped(tid, skipped);
-            board.publish(tid, local_err);
-            iter += 1;
-            metrics.bump_iteration(tid);
-            if blocking {
-                if waiter.wait().is_aborted() {
-                    return;
-                }
-                let global_err = board.global_max();
-                for u in range.clone() {
-                    prev[u as usize].store(pr[u as usize].load());
-                }
-                if waiter.wait().is_aborted() {
-                    return;
-                }
-                if global_err <= cfg.threshold {
-                    converged.store(true, Ordering::Release);
-                    return;
-                }
-            } else {
-                let merged = board.global_max();
-                if merged <= cfg.threshold {
-                    calm += 1;
-                    if calm >= 2 {
-                        return;
-                    }
-                } else {
-                    calm = 0;
-                }
-                std::thread::yield_now();
-            }
-            if iter >= cfg.max_iterations {
-                capped.store(true, Ordering::Release);
-                return;
+            let new = self.base + self.d * sum;
+            self.pr[ui].store(new);
+            let delta = (new - previous).abs();
+            local_err = local_err.max(delta);
+            // Alg 5 line 11: freeze nodes with a tiny non-zero delta.
+            if delta != 0.0 && delta < self.cutoff {
+                self.frozen[ui].store(true, Ordering::Relaxed);
             }
         }
-    });
+        ctx.metrics.add_skipped(ctx.tid, skipped);
+        local_err
+    }
 
-    let done = if blocking {
-        converged.load(Ordering::Acquire)
-    } else {
-        !capped.load(Ordering::Acquire)
-    };
-    PrResult {
-        variant,
-        ranks: snapshot(&pr),
-        iterations: metrics.max_iterations(),
-        per_thread_iterations: metrics.iterations_per_thread(),
-        elapsed: start.elapsed(),
-        converged: done && !outcome.dnf,
-        barrier_wait_secs: barrier.total_wait_secs(),
-        dnf: outcome.dnf,
+    fn commit(&self, ctx: &WorkerCtx<'_>) {
+        for u in self.parts.range(ctx.tid) {
+            self.prev[u as usize].store(self.pr[u as usize].load());
+        }
+    }
+
+    fn ranks(&self) -> Vec<f64> {
+        snapshot(&self.pr)
     }
 }
 
 /// No-Sync-Opt-Identical: perforation + identical-classes + no barriers —
-/// the most aggressive program in Figs 1–2.
-pub fn run_nosync_opt_identical(g: &Csr, cfg: &PrConfig, _parts: &Partitions) -> PrResult {
-    let n = g.num_vertices();
-    let threads = cfg.threads;
-    if n == 0 {
-        return empty_result(Variant::NoSyncOptIdentical, threads);
-    }
-    let start = Instant::now();
-    let classes = IdenticalClasses::compute(g);
-    let d = cfg.damping;
-    let base = (1.0 - d) / n as f64;
-    let cutoff = cfg.threshold * cfg.perforation_factor;
-    let inv_out = inv_out_degrees(g);
+/// the most aggressive program in Figs 1–2. Freezing happens per *class*.
+pub struct PerforatedIdenticalKernel<'g> {
+    g: &'g Csr,
+    classes: IdenticalClasses,
+    chunks: Vec<std::ops::Range<usize>>,
+    inv_out: Vec<f64>,
+    pr: Vec<AtomicF64>,
+    frozen: Vec<AtomicBool>,
+    base: f64,
+    d: f64,
+    cutoff: f64,
+    work_amplify: u32,
+}
 
+/// Registry builder for No-Sync-Opt-Identical.
+pub fn nosync_opt_identical_kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    _parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
+    let n = g.num_vertices();
+    let classes = IdenticalClasses::compute(g);
     let loads: Vec<usize> = classes
         .representatives
         .iter()
         .map(|&r| g.in_degree(r).max(1))
         .collect();
-    let chunks = split_classes(&loads, threads);
+    let chunks = split_classes(&loads, cfg.threads);
+    let frozen = (0..classes.num_classes()).map(|_| AtomicBool::new(false)).collect();
+    Ok(Box::new(PerforatedIdenticalKernel {
+        g,
+        classes,
+        chunks,
+        inv_out: inv_out_degrees(g),
+        pr: atomic_vec(n, 1.0 / n as f64),
+        frozen,
+        base: (1.0 - cfg.damping) / n as f64,
+        d: cfg.damping,
+        cutoff: cfg.threshold * cfg.perforation_factor,
+        work_amplify: cfg.work_amplify,
+    }))
+}
 
-    let pr = atomic_vec(n, 1.0 / n as f64);
-    let frozen: Vec<AtomicBool> =
-        (0..classes.num_classes()).map(|_| AtomicBool::new(false)).collect();
+impl Kernel for PerforatedIdenticalKernel<'_> {
+    fn sync_mode(&self) -> SyncMode {
+        SyncMode::NonBlocking
+    }
 
-    let board = ErrorBoard::new(threads);
-    let metrics = RunMetrics::new(threads);
-    let capped = AtomicBool::new(false);
-
-    let outcome = run_workers(threads, cfg.dnf_timeout, &[], |tid, stop| {
-        let chunk = chunks[tid].clone();
-        let mut iter = 0u64;
-        let mut calm = 0u32; // confirmation sweeps; see nosync.rs
-        loop {
-            if stop.load(Ordering::Acquire) {
-                return;
+    fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
+        let mut local_err: f64 = 0.0;
+        let mut skipped = 0u64;
+        for c in self.chunks[ctx.tid].clone() {
+            if self.frozen[c].load(Ordering::Relaxed) {
+                skipped += self.classes.members[c].len() as u64;
+                continue;
             }
-            if cfg.faults.apply(tid, iter) {
-                return;
+            let rep = self.classes.representatives[c];
+            let previous = self.pr[rep as usize].load();
+            let mut sum = 0.0;
+            for &v in self.g.in_neighbors(rep) {
+                sum += self.pr[v as usize].load() * self.inv_out[v as usize];
+                amplify_work(self.work_amplify);
             }
-            let mut local_err: f64 = 0.0;
-            let mut skipped = 0u64;
-            for c in chunk.clone() {
-                if frozen[c].load(Ordering::Relaxed) {
-                    skipped += classes.members[c].len() as u64;
-                    continue;
-                }
-                let rep = classes.representatives[c];
-                let previous = pr[rep as usize].load();
-                let mut sum = 0.0;
-                for &v in g.in_neighbors(rep) {
-                    sum += pr[v as usize].load() * inv_out[v as usize];
-                    amplify_work(cfg.work_amplify);
-                }
-                let new = base + d * sum;
-                for &m in &classes.members[c] {
-                    pr[m as usize].store(new);
-                }
-                let delta = (new - previous).abs();
-                local_err = local_err.max(delta);
-                if delta != 0.0 && delta < cutoff {
-                    frozen[c].store(true, Ordering::Relaxed);
-                }
+            let new = self.base + self.d * sum;
+            for &m in &self.classes.members[c] {
+                self.pr[m as usize].store(new);
             }
-            metrics.add_skipped(tid, skipped);
-            board.publish(tid, local_err);
-            iter += 1;
-            metrics.bump_iteration(tid);
-            let merged = board.global_max();
-            if merged <= cfg.threshold {
-                calm += 1;
-                if calm >= 2 {
-                    return;
-                }
-            } else {
-                calm = 0;
+            let delta = (new - previous).abs();
+            local_err = local_err.max(delta);
+            if delta != 0.0 && delta < self.cutoff {
+                self.frozen[c].store(true, Ordering::Relaxed);
             }
-            if iter >= cfg.max_iterations {
-                capped.store(true, Ordering::Release);
-                return;
-            }
-            std::thread::yield_now();
         }
-    });
+        ctx.metrics.add_skipped(ctx.tid, skipped);
+        local_err
+    }
 
-    PrResult {
-        variant: Variant::NoSyncOptIdentical,
-        ranks: snapshot(&pr),
-        iterations: metrics.max_iterations(),
-        per_thread_iterations: metrics.iterations_per_thread(),
-        elapsed: start.elapsed(),
-        converged: !capped.load(Ordering::Acquire) && !outcome.dnf,
-        barrier_wait_secs: 0.0,
-        dnf: outcome.dnf,
+    fn ranks(&self) -> Vec<f64> {
+        snapshot(&self.pr)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::graph::synthetic;
-    use crate::pagerank::{self, seq};
+    use crate::pagerank::{self, seq, PrConfig, Variant};
 
     fn cfg(threads: usize) -> PrConfig {
         // threshold loose enough that perforation (cutoff = thr * 1e-5)

@@ -6,9 +6,46 @@
 //! `pr(u) = (1-d)/n + d · Σ_{(v,u) ∈ E} prev(v)/outdeg(v)`, terminating when
 //! the max per-vertex delta drops below the threshold.
 
-use crate::graph::{Csr, VertexId};
+use crate::engine::{Kernel, SyncMode, WorkerCtx};
+use crate::graph::{Csr, Partitions, VertexId};
 use crate::pagerank::{PrConfig, PrResult, Variant};
+use anyhow::Result;
 use std::time::Instant;
+
+/// The Sequential "kernel": [`SyncMode::Sequential`] hands the whole solve
+/// back to [`solve`], keeping the oracle bit-stable while still dispatching
+/// through the engine registry like every other variant.
+pub struct SequentialKernel<'g> {
+    g: &'g Csr,
+    cfg: PrConfig,
+}
+
+/// Registry builder for [`Variant::Sequential`].
+pub fn kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    _parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
+    Ok(Box::new(SequentialKernel { g, cfg: cfg.clone() }))
+}
+
+impl Kernel for SequentialKernel<'_> {
+    fn sync_mode(&self) -> SyncMode {
+        SyncMode::Sequential
+    }
+
+    fn gather(&self, _ctx: &WorkerCtx<'_>) -> f64 {
+        0.0 // never scheduled: Sequential mode runs through solve()
+    }
+
+    fn ranks(&self) -> Vec<f64> {
+        Vec::new() // solve() returns the ranks directly
+    }
+
+    fn solve(&self) -> Option<(Vec<f64>, u64, bool)> {
+        Some(solve(self.g, &self.cfg))
+    }
+}
 
 /// Run the sequential baseline.
 pub fn run(g: &Csr, cfg: &PrConfig) -> PrResult {

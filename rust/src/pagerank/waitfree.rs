@@ -1,230 +1,55 @@
-//! Algorithm 6 — the Wait-Free "Barrier-Helper" variant.
+//! Algorithm 6 — the Wait-Free "Barrier-Helper" variant, as a thin kernel
+//! over the engine-owned helping protocol.
 //!
-//! Threads that finish their own partition **help** stalled peers instead of
-//! waiting: every vertex of every partition is eventually computed by
-//! *someone*, so a sleeping thread costs nothing (Fig 8) and a crashed
-//! thread cannot prevent completion (Fig 9) — the properties the paper's
-//! case studies demonstrate.
-//!
-//! ## Protocol (adapted from the paper's CAS objects; see
-//! [`crate::sync::cas_cell`] for the 64-bit reconstruction)
-//!
-//! * Each vertex is a [`VersionedCell`] whose version *is* its iteration
-//!   count (the paper's `PrCASObj`). Any thread may compute a vertex's next
-//!   value; `try_advance(iter, value)` admits exactly one winner per
-//!   iteration, so duplicated helper work is harmless.
-//! * Each partition has a [`PackedProgress`] descriptor `(iter, offset)`
-//!   (the paper's `ThreadCASObj`). Helpers **compute first, then CAS the
-//!   cursor forward** — a stalled claimer can never strand a vertex.
-//! * Per-iteration errors live in a preallocated `err_by_iter` array
-//!   (`fetch_max`-merged, idempotent — the paper's `GlobalCASObj.err`
-//!   without any reset race).
-//! * The iteration of the *system* is the minimum over partition
-//!   descriptors; termination is decided from the completed iteration's
-//!   error and published through a `done` flag (the paper's
-//!   `GlobalCASObj.check` completion set, reformulated so helpers can
-//!   finish the bookkeeping of dead threads too).
-//!
-//! Like the paper's No-Sync (and unlike its Alg 6), ranks are updated in
-//! place: all contenders for a vertex in iteration `i` read neighbours that
-//! are at iteration `i-1` or `i`, the same relaxation Lemma 1 covers, and
-//! the cell CAS keeps exactly one committed value per (vertex, iteration).
+//! The whole CAS-object machinery (versioned rank cells, per-partition
+//! progress descriptors, preallocated per-iteration error merge, and the
+//! helping/termination loop) lives in [`crate::engine::helping`]; this
+//! module only builds the state and exposes it through the
+//! [`Kernel::helping`] hook so the engine's Helping driver can schedule it.
+//! See the `helping` module docs for the protocol and the fault model.
 
-use crate::coordinator::executor::run_workers;
-use crate::coordinator::metrics::RunMetrics;
-use crate::graph::{Csr, Partitions, VertexId};
-use crate::pagerank::barrier::{empty_result, inv_out_degrees};
-use crate::pagerank::{amplify_work, PrConfig, PrResult, Variant};
-use crate::sync::atomics::AtomicF64;
-use crate::sync::cas_cell::{PackedProgress, VersionedCell};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Instant;
+use crate::engine::helping::HelpingState;
+use crate::engine::{Kernel, SyncMode, WorkerCtx};
+use crate::graph::{Csr, Partitions};
+use crate::pagerank::PrConfig;
+use anyhow::Result;
 
-struct Shared<'g> {
+pub struct WaitFreeKernel<'g> {
+    state: HelpingState<'g>,
+}
+
+/// Registry builder for [`Variant::WaitFree`](crate::pagerank::Variant).
+pub fn kernel<'g>(
     g: &'g Csr,
-    inv_out: Vec<f64>,
-    cells: Vec<VersionedCell>,
-    progress: Vec<PackedProgress>,
-    ranges: Vec<std::ops::Range<VertexId>>,
-    err_by_iter: Vec<AtomicF64>,
-    done: AtomicBool,
-    converged: AtomicBool,
-    /// Nanoseconds from run start to the `done` decision. Fig 8 measures
-    /// *algorithmic* completion: a thread that is still napping after
-    /// helpers finished its work must not count against the variant.
-    completion_nanos: std::sync::atomic::AtomicU64,
-    started: Instant,
-    base: f64,
-    d: f64,
-    threshold: f64,
-    max_iterations: u64,
-    work_amplify: u32,
+    cfg: &PrConfig,
+    parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
+    Ok(Box::new(WaitFreeKernel { state: HelpingState::new(g, cfg, parts) }))
 }
 
-impl Shared<'_> {
-    /// Compute-and-commit one vertex for iteration `iter` (0-based: the
-    /// transition from version `iter` to `iter+1`). Safe to call from any
-    /// thread, any number of times.
-    fn process_vertex(&self, u: VertexId) {
-        let cell = &self.cells[u as usize];
-        let (iter, previous) = cell.read();
-        let mut sum = 0.0;
-        for &v in self.g.in_neighbors(u) {
-            sum += self.cells[v as usize].read_value() * self.inv_out[v as usize];
-            amplify_work(self.work_amplify);
-        }
-        let new = self.base + self.d * sum;
-        // Publish the delta before committing the cell so a completed
-        // iteration always has its full error on record.
-        let delta = (new - previous).abs();
-        self.err_by_iter[iter as usize].fetch_max(delta);
-        cell.try_advance(iter, new); // losing means someone else committed
+impl Kernel for WaitFreeKernel<'_> {
+    fn sync_mode(&self) -> SyncMode {
+        SyncMode::Helping
     }
 
-    /// Drive partition `t` through iteration `iter` (helping-safe).
-    /// Returns when the partition's descriptor has moved past `iter`.
-    fn drive_partition(&self, t: usize, stop: &AtomicBool) {
-        let range = &self.ranges[t];
-        let len = range.len() as u32;
-        loop {
-            if self.done.load(Ordering::Acquire) || stop.load(Ordering::Acquire) {
-                return;
-            }
-            let (iter, off) = self.progress[t].load();
-            if u64::from(iter) >= self.max_iterations {
-                return; // cap: also bounds the err_by_iter index space
-            }
-            if off >= len {
-                // partition finished its current iteration; roll the
-                // descriptor to the next one
-                self.progress[t].try_advance((iter, off), (iter + 1, 0));
-                return;
-            }
-            let u = range.start + off;
-            // Compute first (idempotent), then claim the cursor step. If the
-            // CAS fails another helper advanced it — retry from the fresh
-            // descriptor.
-            if self.cells[u as usize].iteration() <= iter as u64 {
-                self.process_vertex(u);
-            }
-            self.progress[t].try_advance((iter, off), (iter, off + 1));
-        }
+    fn gather(&self, _ctx: &WorkerCtx<'_>) -> f64 {
+        0.0 // never scheduled: the Helping driver runs HelpingState directly
     }
 
-    /// System iteration = min over partition descriptors.
-    fn min_iter(&self) -> u32 {
-        (0..self.progress.len())
-            .map(|t| self.progress[t].load().0)
-            .min()
-            .unwrap_or(0)
+    fn ranks(&self) -> Vec<f64> {
+        self.state.ranks()
     }
 
-    /// Check termination after iteration `completed` finished everywhere.
-    fn try_finish(&self) {
-        let min = self.min_iter();
-        if min == 0 {
-            return;
-        }
-        let completed = min - 1;
-        let err = self.err_by_iter[completed as usize].load_acquire();
-        if err <= self.threshold {
-            self.converged.store(true, Ordering::Release);
-            self.finish();
-        } else if u64::from(min) >= self.max_iterations {
-            self.finish();
-        }
-    }
-
-    fn finish(&self) {
-        if !self.done.swap(true, Ordering::AcqRel) {
-            let nanos = self.started.elapsed().as_nanos() as u64;
-            self.completion_nanos.store(nanos.max(1), Ordering::Release);
-        }
-    }
-}
-
-/// Run Algorithm 6.
-pub fn run(g: &Csr, cfg: &PrConfig, parts: &Partitions) -> PrResult {
-    let n = g.num_vertices();
-    let threads = cfg.threads;
-    if n == 0 {
-        return empty_result(Variant::WaitFree, threads);
-    }
-    let start = Instant::now();
-    // err_by_iter is preallocated (one slot per iteration, no reset races),
-    // so the effective cap is clamped: 100k iterations is far beyond any
-    // practical convergence and keeps the allocation under 1 MiB.
-    let max_iterations = cfg.max_iterations.min(100_000);
-    let shared = Shared {
-        g,
-        inv_out: inv_out_degrees(g),
-        cells: (0..n).map(|_| VersionedCell::new(1.0 / n as f64)).collect(),
-        progress: (0..threads).map(|_| PackedProgress::new(0, 0)).collect(),
-        ranges: (0..threads).map(|t| parts.range(t)).collect(),
-        err_by_iter: (0..=max_iterations as usize)
-            .map(|_| AtomicF64::new(0.0))
-            .collect(),
-        done: AtomicBool::new(false),
-        converged: AtomicBool::new(false),
-        completion_nanos: std::sync::atomic::AtomicU64::new(0),
-        started: start,
-        base: (1.0 - cfg.damping) / n as f64,
-        d: cfg.damping,
-        threshold: cfg.threshold,
-        max_iterations,
-        work_amplify: cfg.work_amplify,
-    };
-    let metrics = RunMetrics::new(threads);
-    let outcome = run_workers(threads, cfg.dnf_timeout, &[], |tid, stop| {
-        let mut iter = 0u64;
-        while !shared.done.load(Ordering::Acquire) && !stop.load(Ordering::Acquire) {
-            if cfg.faults.apply(tid, iter) {
-                return; // crash — helpers will absorb this partition
-            }
-            // 1. Own partition first (computePR(threadId, threadId, …)).
-            shared.drive_partition(tid, stop);
-            metrics.bump_iteration(tid);
-            // 2. Help every partition still behind the frontier
-            //    (computePR(thr, threadId, …) for notCompletePR(thr)).
-            let my_iter = shared.progress[tid].load().0;
-            for t in 0..threads {
-                if t != tid && shared.progress[t].load().0 < my_iter {
-                    shared.drive_partition(t, stop);
-                }
-            }
-            // 3. Global bookkeeping: advance/terminate if the frontier moved
-            //    (UpdateGlobalVariable for self and for lagging peers).
-            shared.try_finish();
-            iter = u64::from(shared.progress[tid].load().0);
-        }
-    });
-
-    let ranks: Vec<f64> = shared.cells.iter().map(|c| c.read_value()).collect();
-    // Algorithmic completion time when recorded; wall-clock join otherwise.
-    let completion = shared.completion_nanos.load(Ordering::Acquire);
-    let elapsed = if completion > 0 {
-        std::time::Duration::from_nanos(completion)
-    } else {
-        start.elapsed()
-    };
-    PrResult {
-        variant: Variant::WaitFree,
-        ranks,
-        iterations: u64::from(shared.min_iter()),
-        per_thread_iterations: metrics.iterations_per_thread(),
-        elapsed,
-        converged: shared.converged.load(Ordering::Acquire) && !outcome.dnf,
-        barrier_wait_secs: 0.0,
-        dnf: outcome.dnf,
+    fn helping(&self) -> Option<&HelpingState<'_>> {
+        Some(&self.state)
     }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::coordinator::faults::FaultPlan;
     use crate::graph::synthetic;
-    use crate::pagerank::{self, seq};
+    use crate::pagerank::{self, seq, PrConfig, Variant};
     use std::time::Duration;
 
     fn cfg(threads: usize) -> PrConfig {

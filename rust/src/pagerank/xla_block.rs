@@ -68,7 +68,7 @@ pub fn run(g: &Csr, cfg: &PrConfig, engine: &Engine) -> Result<PrResult> {
     let n = g.num_vertices();
     let start = Instant::now();
     if n == 0 {
-        return Ok(crate::pagerank::barrier::empty_result(Variant::XlaBlock, cfg.threads));
+        return Ok(PrResult::empty(Variant::XlaBlock, cfg.threads));
     }
     let max_k = (0..n as VertexId).map(|u| g.in_degree(u)).max().unwrap_or(0);
     let dir = artifacts::default_dir();

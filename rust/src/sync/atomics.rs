@@ -79,6 +79,16 @@ impl AtomicF64 {
     }
 }
 
+impl crate::sync::RankCell for AtomicF64 {
+    fn value(&self) -> f64 {
+        self.load()
+    }
+
+    fn reset(&self, x: f64) {
+        self.store(x)
+    }
+}
+
 /// Allocate a shared rank vector initialized to `x`.
 pub fn atomic_vec(n: usize, x: f64) -> Vec<AtomicF64> {
     (0..n).map(|_| AtomicF64::new(x)).collect()

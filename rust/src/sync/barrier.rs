@@ -79,6 +79,16 @@ impl SenseBarrier {
     }
 }
 
+impl crate::sync::PhaseBarrier for SenseBarrier {
+    fn abort(&self) {
+        SenseBarrier::abort(self)
+    }
+
+    fn total_wait_secs(&self) -> f64 {
+        SenseBarrier::total_wait_secs(self)
+    }
+}
+
 /// Per-thread handle carrying the local sense bit.
 pub struct Waiter<'b> {
     barrier: &'b SenseBarrier,

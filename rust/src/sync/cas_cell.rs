@@ -105,6 +105,16 @@ impl VersionedCell {
     }
 }
 
+impl crate::sync::RankCell for VersionedCell {
+    fn value(&self) -> f64 {
+        self.read_value()
+    }
+
+    fn reset(&self, x: f64) {
+        VersionedCell::reset(self, x)
+    }
+}
+
 /// `ThreadCASObj`: a thread's `(iteration, next_vertex)` progress word.
 ///
 /// Helpers CAS this forward to claim work items of a stalled thread; the

@@ -12,7 +12,66 @@
 //!   paper's benign-race `vector<double>` reads/writes.
 //! * [`cas_cell`] — the versioned rank cells and CAS-object protocol used by
 //!   the wait-free Barrier-Helper algorithm (Algorithm 6).
+//!
+//! The [`RankCell`] and [`PhaseBarrier`] traits are the engine-facing
+//! surface: [`crate::engine`] snapshots rank storage and reads barrier
+//! telemetry through them without knowing whether a kernel uses plain
+//! atomic cells or the wait-free CAS protocol.
 
 pub mod atomics;
 pub mod barrier;
 pub mod cas_cell;
+
+/// Engine-facing view of one rank cell. Implemented by the plain
+/// [`atomics::AtomicF64`] and by the wait-free
+/// [`cas_cell::VersionedCell`], so the engine can seed and snapshot rank
+/// storage independently of the commit protocol.
+pub trait RankCell {
+    /// Current rank value.
+    fn value(&self) -> f64;
+    /// Unversioned (single-threaded setup) overwrite.
+    fn reset(&self, x: f64);
+}
+
+/// Snapshot any rank-cell storage into a plain `Vec<f64>`.
+pub fn snapshot_cells<C: RankCell>(cells: &[C]) -> Vec<f64> {
+    cells.iter().map(RankCell::value).collect()
+}
+
+/// Engine-facing surface of a phase barrier: the driver needs to abort one
+/// on DNF and to report cumulative wait time, nothing else.
+pub trait PhaseBarrier {
+    /// Unblock every current and future waiter (DNF unwinding).
+    fn abort(&self);
+    /// Total thread-seconds spent waiting at this barrier.
+    fn total_wait_secs(&self) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::atomics::AtomicF64;
+    use super::cas_cell::VersionedCell;
+    use super::*;
+
+    #[test]
+    fn snapshot_cells_spans_both_storage_kinds() {
+        let plain: Vec<AtomicF64> = (0..3).map(|i| AtomicF64::new(i as f64)).collect();
+        assert_eq!(snapshot_cells(&plain), vec![0.0, 1.0, 2.0]);
+
+        let versioned: Vec<VersionedCell> =
+            (0..3).map(|i| VersionedCell::new(i as f64 * 0.5)).collect();
+        assert_eq!(snapshot_cells(&versioned), vec![0.0, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn reset_works_through_the_trait() {
+        let c = AtomicF64::new(1.0);
+        RankCell::reset(&c, 2.5);
+        assert_eq!(RankCell::value(&c), 2.5);
+
+        let v = VersionedCell::new(1.0);
+        assert!(v.try_advance(0, 9.0));
+        RankCell::reset(&v, 0.25);
+        assert_eq!(v.read(), (0, 0.25));
+    }
+}

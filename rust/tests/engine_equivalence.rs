@@ -1,0 +1,127 @@
+//! Engine equivalence suite: after the kernel refactor, every CPU variant
+//! (old per-module behavior, now dispatched through `engine::REGISTRY`)
+//! must still land on the sequential fixed point — property-tested over
+//! random edge lists plus RMAT and chain fixtures, including the
+//! `XlaBlock`-excluded dispatch error path.
+
+use pagerank_nb::graph::{rmat, synthetic, Csr, GraphBuilder};
+use pagerank_nb::pagerank::{self, seq, PrConfig, Variant};
+use pagerank_nb::testkit::{check, Config, EdgeList};
+
+fn build(n: usize, edges: &[(u32, u32)]) -> Csr {
+    GraphBuilder::new(n).dedup(true).edges(edges).build("prop")
+}
+
+/// Exact engine modes: converged ranks must match sequential tightly.
+/// (No-Sync-Edge is excluded — §4.4: it may legitimately not converge.)
+fn exact_modes() -> Vec<Variant> {
+    vec![
+        Variant::Barrier,
+        Variant::BarrierIdentical,
+        Variant::BarrierEdge,
+        Variant::WaitFree,
+        Variant::NoSync,
+        Variant::NoSyncIdentical,
+        Variant::Pcpm,
+    ]
+}
+
+fn approximate_modes() -> Vec<Variant> {
+    vec![Variant::BarrierOpt, Variant::NoSyncOpt, Variant::NoSyncOptIdentical]
+}
+
+/// Property: on arbitrary random graphs, every exact kernel converges to
+/// the sequential ranks and every approximate kernel stays within its
+/// loose L1 budget.
+#[test]
+fn prop_all_kernels_match_sequential_on_random_graphs() {
+    check(
+        Config::default().cases(12),
+        EdgeList { max_n: 30, max_m: 120 },
+        |(n, edges)| {
+            let g = build(*n, edges);
+            let cfg = PrConfig { threads: 3, threshold: 1e-11, ..PrConfig::default() };
+            let (sr, _, _) = seq::solve(&g, &cfg);
+            for v in exact_modes() {
+                let r = pagerank::run(&g, v, &cfg).unwrap();
+                if !r.converged || r.l1_norm(&sr) >= 1e-6 {
+                    eprintln!("{v}: converged={} l1={}", r.converged, r.l1_norm(&sr));
+                    return false;
+                }
+            }
+            let acfg = PrConfig { threshold: 1e-8, ..cfg };
+            let (asr, _, _) = seq::solve(&g, &acfg);
+            for v in approximate_modes() {
+                let r = pagerank::run(&g, v, &acfg).unwrap();
+                if !r.converged || r.l1_norm(&asr) >= 1e-2 {
+                    eprintln!("{v}: converged={} l1={}", r.converged, r.l1_norm(&asr));
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// All twelve engine modes on RMAT and chain fixtures: exact ones match
+/// sequential; approximate ones stay bounded; No-Sync-Edge must at least
+/// terminate with finite ranks (its documented §4.4 caveat).
+#[test]
+fn every_engine_mode_runs_on_rmat_and_chain() {
+    let graphs = vec![
+        rmat::generate(6, 250, rmat::RmatParams::default(), 11),
+        rmat::generate(7, 500, rmat::RmatParams::default(), 12),
+        synthetic::chain(80),
+    ];
+    let cfg = PrConfig { threads: 4, threshold: 1e-10, ..PrConfig::default() };
+    for g in &graphs {
+        let (sr, _, _) = seq::solve(g, &cfg);
+        for v in Variant::ALL_MODES {
+            let r = pagerank::run(g, v, &cfg).unwrap();
+            assert!(
+                r.ranks.iter().all(|x| x.is_finite()),
+                "{v} on {}: non-finite ranks",
+                g.name
+            );
+            if v == Variant::NoSyncEdge {
+                continue; // may legitimately hit the cap on skewed graphs
+            }
+            assert!(r.converged, "{v} on {} did not converge", g.name);
+            let bound = if v.is_approximate() { 1e-2 } else { 1e-6 };
+            let l1 = r.l1_norm(&sr);
+            assert!(l1 < bound, "{v} on {}: L1 {l1} >= {bound}", g.name);
+        }
+    }
+}
+
+/// PCPM is a synchronous schedule: same iteration count as Barrier and
+/// well within threshold L1 distance of Sequential on the testkit graphs.
+#[test]
+fn pcpm_matches_barrier_schedule_on_random_graphs() {
+    check(
+        Config::default().cases(15),
+        EdgeList { max_n: 40, max_m: 200 },
+        |(n, edges)| {
+            let g = build(*n, edges);
+            let cfg = PrConfig { threads: 3, threshold: 1e-11, ..PrConfig::default() };
+            let pcpm = pagerank::run(&g, Variant::Pcpm, &cfg).unwrap();
+            let barrier = pagerank::run(&g, Variant::Barrier, &cfg).unwrap();
+            pcpm.converged
+                && barrier.converged
+                && pcpm.iterations == barrier.iterations
+                && pagerank_nb::pagerank::convergence::linf_norm(&pcpm.ranks, &barrier.ranks)
+                    < 1e-12
+        },
+    );
+}
+
+/// The XlaBlock-excluded dispatch path: the engine registry rejects it with
+/// a pointer at `run_with_engine` instead of panicking or hanging.
+#[test]
+fn xla_block_dispatch_error_path() {
+    let g = synthetic::chain(8);
+    let err = pagerank::run(&g, Variant::XlaBlock, &PrConfig::default());
+    assert!(err.is_err());
+    let msg = err.unwrap_err().to_string();
+    assert!(msg.contains("run_with_engine"), "unexpected message: {msg}");
+}

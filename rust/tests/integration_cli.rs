@@ -28,12 +28,22 @@ fn run_all_variant_names_parse_via_cli() {
         "no-sync-identical",
         "no-sync-opt",
         "no-sync-opt-identical",
+        "pcpm",
+        "partition-centric",
     ] {
         cli::dispatch(&argv(&[
             "run", "--graph", "cycle:60", "--algo", algo, "--threads", "2",
         ]))
         .unwrap_or_else(|e| panic!("algo {algo}: {e}"));
     }
+}
+
+#[test]
+fn mode_flag_runs_partition_centric() {
+    cli::dispatch(&argv(&[
+        "run", "--graph", "web:600:5", "--mode", "pcpm", "--threads", "3", "--top", "3",
+    ]))
+    .expect("--mode pcpm should run");
 }
 
 #[test]

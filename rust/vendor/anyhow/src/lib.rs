@@ -1,0 +1,198 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no crates.io registry, so the workspace vendors the
+//! subset of `anyhow` this project actually uses:
+//!
+//! * [`Error`] — an error value carrying a context chain (outermost message
+//!   first, root cause last);
+//! * [`Result`] — `Result<T, Error>` with the usual default parameter;
+//! * [`anyhow!`] / [`bail!`] / [`ensure!`] — formatted construction macros;
+//! * [`Context`] — the extension trait adding `.context(..)` and
+//!   `.with_context(..)` to `Result` and `Option`.
+//!
+//! Semantics match upstream where this project can observe them: `Display`
+//! prints the outermost message, `{:#}` prints the whole chain joined by
+//! `": "`, `Debug` prints the message plus a `Caused by:` list, and — as in
+//! upstream — `Error` deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket `From` conversion
+//! coherent.
+
+use std::fmt;
+
+/// An error with a chain of context messages (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    fn wrap(mut self, context: String) -> Self {
+        self.chain.insert(0, context);
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+
+    /// Iterate the context chain, outermost message first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to `Result` and `Option`.
+pub trait Context<T>: Sized {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Like [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(context.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f().to_string()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fail() -> Result<()> {
+        bail!("root {}", 42)
+    }
+
+    #[test]
+    fn display_shows_outermost_and_alternate_shows_chain() {
+        let e = fail().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root 42");
+        assert_eq!(e.root_cause(), "root 42");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = fail().with_context(|| format!("step {}", 1)).unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("step 1"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("root 42"));
+    }
+
+    #[test]
+    fn std_errors_convert_via_question_mark() {
+        fn parse() -> Result<i32> {
+            let n: i32 = "not a number".parse()?;
+            Ok(n)
+        }
+        assert!(parse().is_err());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<i32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+        assert_eq!(Some(7).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn ensure_macro() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert!(check(1).is_ok());
+        assert!(check(-1).unwrap_err().to_string().contains("-1"));
+    }
+}

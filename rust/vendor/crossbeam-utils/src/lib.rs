@@ -1,0 +1,65 @@
+//! Offline stand-in for `crossbeam-utils`: only [`CachePadded`], which is
+//! all this project uses. Vendored because the build image has no crates.io
+//! registry access.
+
+use std::ops::{Deref, DerefMut};
+
+/// Pads and aligns a value to 128 bytes so adjacent values never share a
+/// cache line (128 covers the 2-line prefetcher on modern x86 and the
+/// 128-byte lines on some aarch64 parts — same choice as upstream).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+#[repr(align(128))]
+pub struct CachePadded<T> {
+    value: T,
+}
+
+impl<T> CachePadded<T> {
+    /// Wrap a value.
+    pub const fn new(value: T) -> Self {
+        Self { value }
+    }
+
+    /// Unwrap back into the inner value.
+    pub fn into_inner(self) -> T {
+        self.value
+    }
+}
+
+impl<T> Deref for CachePadded<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+impl<T> DerefMut for CachePadded<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.value
+    }
+}
+
+impl<T> From<T> for CachePadded<T> {
+    fn from(value: T) -> Self {
+        Self::new(value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_is_128() {
+        assert_eq!(std::mem::align_of::<CachePadded<u64>>(), 128);
+        assert!(std::mem::size_of::<CachePadded<u64>>() >= 128);
+    }
+
+    #[test]
+    fn deref_roundtrip() {
+        let mut c = CachePadded::new(5u32);
+        assert_eq!(*c, 5);
+        *c = 9;
+        assert_eq!(c.into_inner(), 9);
+    }
+}

@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# Kick the tires: build the release binary and smoke-run one tiny graph
+# through every engine mode (the paper's eleven CPU variants plus the new
+# partition-centric `pcpm` mode), then cross-validate all of them against
+# the sequential oracle. Mirrors the related-repo kick-tires pattern:
+# fast, loud, and exercising every artifact a reviewer would touch.
+#
+# Usage: ./scripts/kick-tires.sh [GRAPH_SPEC]
+#   GRAPH_SPEC defaults to web:800:6 (a ~800-vertex scale-free replica).
+
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+GRAPH="${1:-web:800:6}"
+THREADS="${THREADS:-4}"
+BIN=target/release/pagerank-nb
+
+echo "Starting Kick Tires (All)"
+
+echo "── build ──"
+cargo build --release
+
+echo "── graph info ($GRAPH) ──"
+"$BIN" info --graph "$GRAPH"
+
+echo "── every variant + pcpm on $GRAPH ──"
+for algo in sequential barrier barrier-identical barrier-edge barrier-opt \
+            wait-free no-sync no-sync-identical no-sync-edge no-sync-opt \
+            no-sync-opt-identical; do
+    echo "· $algo"
+    "$BIN" run --graph "$GRAPH" --algo "$algo" --threads "$THREADS" --top 3
+done
+
+echo "· pcpm (via --mode)"
+"$BIN" run --graph "$GRAPH" --mode pcpm --threads "$THREADS" --top 3
+
+echo "── cross-validation against the sequential oracle ──"
+"$BIN" validate --graph "$GRAPH" --threads "$THREADS"
+
+echo "Kick tires passed."
