@@ -65,8 +65,22 @@ fn config_from_args(args: &ArgMap) -> Result<PrConfig> {
         max_iterations: args.get_parsed("iters", 10_000u64)?,
         threads: args.get_parsed("threads", host.default_threads())?,
         partition,
+        // frontier/delta push cutoff; 0 = derive from the threshold
+        delta_threshold: args.get_parsed("delta-threshold", 0.0f64)?,
         ..PrConfig::default()
     })
+}
+
+/// Resolve the dataset divisor: an explicit `--scale` wins; otherwise the
+/// (once-per-process, logged) `PAGERANK_NB_SCALE` default. Taken lazily so
+/// the env default is neither read nor logged when the flag already
+/// decides the scale — the log line must name the size that actually ran.
+fn scale_from_args(args: &ArgMap) -> Result<usize> {
+    if args.has("scale") {
+        Ok(args.get_parsed("scale", 1usize)?.max(1))
+    } else {
+        Ok(crate::harness::bench::dataset_divisor())
+    }
 }
 
 /// Resolve the variant from `--mode` (execution mode, e.g. `pcpm` /
@@ -99,11 +113,16 @@ pub fn cmd_run(args: &ArgMap) -> Result<()> {
         pagerank::run(&g, variant, &cfg)?
     };
     println!(
-        "{}: {} in {} ({} iterations){}",
+        "{}: {} in {} ({} iterations{}){}",
         variant,
         if r.converged { "converged" } else { "NOT converged" },
         fmt::duration(r.elapsed.as_secs_f64()),
         r.iterations,
+        if r.vertex_updates > 0 {
+            format!(", {} vertex updates", fmt::count(r.vertex_updates))
+        } else {
+            String::new()
+        },
         if r.dnf { " [DNF]" } else { "" }
     );
     let k = args.get_parsed("top", 5usize)?;
@@ -129,7 +148,7 @@ pub fn cmd_bench(argv: &[String]) -> Result<()> {
     let out_dir = PathBuf::from(args.get("out").unwrap_or("reports"));
     let host = HostInfo::detect();
     let ctx = Ctx {
-        divisor: args.get_parsed("scale", crate::harness::bench::dataset_divisor())?,
+        divisor: scale_from_args(&args)?,
         // oversubscribe to ≥4 threads on small hosts (see Ctx::default)
         threads: args.get_parsed("threads", host.default_threads().max(4))?,
         runner: BenchRunner::new(
@@ -156,11 +175,109 @@ pub fn cmd_bench(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `bench-ci`: run every registered variant on the scaled-down CI datasets,
+/// write the `BENCH_ci.json` trajectory report, and (when a baseline is
+/// given) fail on any >`--max-regress` regression. See docs/benchmarking.md.
+pub fn cmd_bench_ci(args: &ArgMap) -> Result<()> {
+    use crate::harness::trajectory::{self, BenchReport};
+    let divisor = scale_from_args(args)?;
+    let host = HostInfo::detect();
+    let threads = args.get_parsed("threads", host.default_threads().max(4))?;
+    let samples = args.get_parsed("samples", 3usize)?;
+    let seed = args.get_parsed("seed", 42u64)?;
+    eprintln!("── bench-ci: scale 1/{divisor}, {threads} threads, {samples} samples ──");
+    let report = trajectory::run_ci_bench(divisor, threads, samples, seed)?;
+    println!(
+        "{:<14} {:<22} {:>10} {:>8} {:>8} {:>14} {:>6}",
+        "dataset", "variant", "time (s)", "rel", "iters", "vertex-updates", "conv"
+    );
+    for r in &report.rows {
+        println!(
+            "{:<14} {:<22} {:>10} {:>8} {:>8} {:>14} {:>6}",
+            r.dataset,
+            r.variant,
+            if r.secs.is_finite() { format!("{:.4}", r.secs) } else { "DNF".into() },
+            if r.rel.is_finite() { format!("{:.2}x", r.rel) } else { "-".into() },
+            r.iterations,
+            if r.vertex_updates > 0 {
+                fmt::count(r.vertex_updates)
+            } else {
+                "-".into() // kernel not instrumented (Wait-Free helping)
+            },
+            if r.converged { "yes" } else { "no" }
+        );
+    }
+    let out = PathBuf::from(args.get("out").unwrap_or("BENCH_ci.json"));
+    std::fs::write(&out, report.to_json())
+        .with_context(|| format!("writing {}", out.display()))?;
+    eprintln!("trajectory written to {}", out.display());
+
+    if let Some(baseline_path) = args.get("baseline") {
+        let max_regress = args.get_parsed("max-regress", 0.25f64)?;
+        if !Path::new(baseline_path).exists() {
+            eprintln!("baseline {baseline_path} not found — gate skipped (bootstrap run?)");
+            return Ok(());
+        }
+        let text = std::fs::read_to_string(baseline_path)
+            .with_context(|| format!("reading {baseline_path}"))?;
+        let baseline = BenchReport::from_json(&text)
+            .with_context(|| format!("parsing {baseline_path}"))?;
+        if !trajectory::comparable(&report, &baseline) {
+            eprintln!(
+                "baseline {baseline_path} was recorded at scale 1/{}, {} threads \
+                 (schema {}); this run used scale 1/{}, {} threads (schema {}) — \
+                 incomparable, gate skipped. Refresh the baseline (docs/benchmarking.md).",
+                baseline.scale,
+                baseline.threads,
+                baseline.schema,
+                report.scale,
+                report.threads,
+                report.schema
+            );
+            return Ok(());
+        }
+        // One-sided rows are not gated, but must not vanish silently: a
+        // renamed/removed variant would otherwise shed its protection
+        // without a trace in the log.
+        for b in &baseline.rows {
+            if report.find(&b.dataset, &b.variant).is_none() {
+                eprintln!(
+                    "note: baseline row {}/{} has no counterpart in this run — not gated",
+                    b.dataset, b.variant
+                );
+            }
+        }
+        let regressions = trajectory::compare(&report, &baseline, max_regress);
+        if regressions.is_empty() {
+            // only rows present in BOTH reports were actually gated
+            let gated = baseline
+                .rows
+                .iter()
+                .filter(|r| r.converged && report.find(&r.dataset, &r.variant).is_some())
+                .count();
+            println!(
+                "bench-trajectory gate: OK ({gated} baseline rows held within {:.0}%)",
+                max_regress * 100.0
+            );
+        } else {
+            for msg in &regressions {
+                eprintln!("REGRESSION: {msg}");
+            }
+            bail!(
+                "{} benchmark regression(s) beyond {:.0}% vs {baseline_path}",
+                regressions.len(),
+                max_regress * 100.0
+            );
+        }
+    }
+    Ok(())
+}
+
 /// `gen`: materialize replica datasets to disk (binary + edge-list).
 pub fn cmd_gen(args: &ArgMap) -> Result<()> {
     let out = PathBuf::from(args.require("out")?);
     std::fs::create_dir_all(&out)?;
-    let divisor = args.get_parsed("scale", crate::harness::bench::dataset_divisor())?;
+    let divisor = scale_from_args(args)?;
     let seed = args.get_parsed("seed", 42u64)?;
     let wanted: Option<&str> = args.get("dataset");
     if wanted.is_none() && !args.has("all") {
@@ -283,6 +400,30 @@ mod tests {
         assert_eq!(variant_from_args(&b).unwrap(), Variant::Barrier);
         let c = ArgMap::parse(&["--algo".into(), "partition-centric".into()]).unwrap();
         assert_eq!(variant_from_args(&c).unwrap(), Variant::Pcpm);
+        let d = ArgMap::parse(&["--mode".into(), "frontier".into()]).unwrap();
+        assert_eq!(variant_from_args(&d).unwrap(), Variant::Frontier);
+        let e = ArgMap::parse(&["--mode".into(), "frontier-pcpm".into()]).unwrap();
+        assert_eq!(variant_from_args(&e).unwrap(), Variant::FrontierPcpm);
+    }
+
+    #[test]
+    fn scale_flag_overrides_env_default() {
+        let a = ArgMap::parse(&["--scale".into(), "400".into()]).unwrap();
+        assert_eq!(scale_from_args(&a).unwrap(), 400);
+        let zero = ArgMap::parse(&["--scale".into(), "0".into()]).unwrap();
+        assert_eq!(scale_from_args(&zero).unwrap(), 1, "scale floors at 1");
+        let none = ArgMap::parse(&[]).unwrap();
+        assert!(scale_from_args(&none).unwrap() >= 1);
+    }
+
+    #[test]
+    fn delta_threshold_flag_reaches_config() {
+        let a = ArgMap::parse(&["--delta-threshold".into(), "1e-4".into()]).unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.delta_threshold, 1e-4);
+        assert_eq!(cfg.resolved_delta_threshold(), 1e-4);
+        let b = ArgMap::parse(&[]).unwrap();
+        assert_eq!(config_from_args(&b).unwrap().delta_threshold, 0.0);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! ```text
 //! pagerank-nb run      --graph <src> --algo <variant> [--threads N] …
 //! pagerank-nb bench    <exp-id|all> [--out DIR]
+//! pagerank-nb bench-ci [--out FILE] [--baseline FILE] [--max-regress F]
 //! pagerank-nb gen      (--all | --dataset NAME) --out DIR
 //! pagerank-nb info     --graph <src>
 //! pagerank-nb validate --graph <src> [--threads N]
@@ -29,6 +30,7 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "run" => commands::cmd_run(&ArgMap::parse(rest)?),
         "bench" => commands::cmd_bench(rest),
+        "bench-ci" => commands::cmd_bench_ci(&ArgMap::parse(rest)?),
         "gen" => commands::cmd_gen(&ArgMap::parse(rest)?),
         "info" => commands::cmd_info(&ArgMap::parse(rest)?),
         "validate" => commands::cmd_validate(&ArgMap::parse(rest)?),
@@ -48,10 +50,14 @@ fn print_usage() {
         "pagerank-nb — non-blocking PageRank for massive graphs
 
 USAGE:
-  pagerank-nb run      --graph <src> [--algo <variant>] [--mode standard|pcpm]
+  pagerank-nb run      --graph <src> [--algo <variant>]
+                       [--mode standard|pcpm|frontier|frontier-pcpm]
                        [--threads N] [--threshold X] [--iters N]
                        [--partition vertex|edge] [--top K] [--damping D]
+                       [--delta-threshold X]
   pagerank-nb bench    <table1|fig1..fig9|xla|ablation|all> [--out DIR]
+                       [--scale DIVISOR] [--threads N] [--samples N]
+  pagerank-nb bench-ci [--out FILE] [--baseline FILE] [--max-regress F]
                        [--scale DIVISOR] [--threads N] [--samples N]
   pagerank-nb gen      (--all | --dataset NAME) --out DIR [--scale DIVISOR]
   pagerank-nb info     --graph <src>
@@ -65,6 +71,7 @@ VARIANTS:
   sequential barrier barrier-identical barrier-edge barrier-opt wait-free
   no-sync no-sync-identical no-sync-edge no-sync-opt no-sync-opt-identical
   pcpm (partition-centric scatter-gather; also via --mode pcpm)
+  frontier | frontier-pcpm (delta-scheduled gather; tune --delta-threshold)
   xla-block (needs `make artifacts`)"
     );
 }

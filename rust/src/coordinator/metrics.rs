@@ -13,6 +13,7 @@ pub struct RunMetrics {
     iterations: Vec<AtomicU64>,
     edges_processed: Vec<AtomicU64>,
     vertices_skipped: Vec<AtomicU64>,
+    vertices_gathered: Vec<AtomicU64>,
     started: Instant,
 }
 
@@ -22,6 +23,7 @@ impl RunMetrics {
             iterations: (0..threads).map(|_| AtomicU64::new(0)).collect(),
             edges_processed: (0..threads).map(|_| AtomicU64::new(0)).collect(),
             vertices_skipped: (0..threads).map(|_| AtomicU64::new(0)).collect(),
+            vertices_gathered: (0..threads).map(|_| AtomicU64::new(0)).collect(),
             started: Instant::now(),
         }
     }
@@ -41,6 +43,25 @@ impl RunMetrics {
     #[inline]
     pub fn add_skipped(&self, thread: usize, count: u64) {
         self.vertices_skipped[thread].fetch_add(count, Ordering::Relaxed);
+    }
+
+    /// Vertex updates this sweep actually computed — the work metric the
+    /// frontier/delta kernels reduce (reported as
+    /// [`crate::pagerank::PrResult::vertex_updates`]).
+    #[inline]
+    pub fn add_gathered(&self, thread: usize, count: u64) {
+        self.vertices_gathered[thread].fetch_add(count, Ordering::Relaxed);
+    }
+
+    /// Vertex updates performed by one thread so far (the NonBlocking driver
+    /// uses this to tell an empty frontier sweep from a real one).
+    #[inline]
+    pub fn gathered_by(&self, thread: usize) -> u64 {
+        self.vertices_gathered[thread].load(Ordering::Relaxed)
+    }
+
+    pub fn total_gathered(&self) -> u64 {
+        self.vertices_gathered.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
     pub fn iterations_per_thread(&self) -> Vec<u64> {
@@ -77,10 +98,15 @@ mod tests {
         m.add_edges(1, 100);
         m.add_edges(1, 50);
         m.add_skipped(2, 7);
+        m.add_gathered(0, 5);
+        m.add_gathered(2, 3);
         assert_eq!(m.iterations_per_thread(), vec![2, 0, 1]);
         assert_eq!(m.max_iterations(), 2);
         assert_eq!(m.total_edges(), 150);
         assert_eq!(m.total_skipped(), 7);
+        assert_eq!(m.gathered_by(0), 5);
+        assert_eq!(m.gathered_by(1), 0);
+        assert_eq!(m.total_gathered(), 8);
     }
 
     #[test]

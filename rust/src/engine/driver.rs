@@ -25,7 +25,7 @@ use crate::sync::barrier::SenseBarrier;
 use crate::sync::PhaseBarrier;
 use anyhow::{bail, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Execute a built kernel under its declared [`SyncMode`].
 pub fn execute(
@@ -48,6 +48,8 @@ fn run_sequential(variant: Variant, kernel: &dyn Kernel, start: Instant) -> Resu
     let Some((ranks, iterations, converged)) = kernel.solve() else {
         bail!("{variant} declares SyncMode::Sequential but implements no solve()");
     };
+    // A sequential power-iteration sweep updates every vertex once.
+    let vertex_updates = iterations * ranks.len() as u64;
     Ok(PrResult {
         variant,
         ranks,
@@ -56,6 +58,7 @@ fn run_sequential(variant: Variant, kernel: &dyn Kernel, start: Instant) -> Resu
         elapsed: start.elapsed(),
         converged,
         barrier_wait_secs: 0.0,
+        vertex_updates,
         dnf: false,
     })
 }
@@ -129,14 +132,32 @@ fn run_blocking(
         elapsed: start.elapsed(),
         converged: converged.load(Ordering::Acquire) && !outcome.dnf,
         barrier_wait_secs: PhaseBarrier::total_wait_secs(&barrier),
+        vertex_updates: metrics.total_gathered(),
         dnf: outcome.dnf,
     }
 }
+
+/// How long a frontier worker parks per empty sweep. Long enough not to
+/// burn a core while peers converge, short enough that re-activation (a
+/// peer pushing into this partition) is picked up promptly.
+const FRONTIER_IDLE_PARK: Duration = Duration::from_micros(20);
 
 /// Barrier-free sweeps, thread-level convergence (Algorithms 3/4/5). Each
 /// worker runs `gather` → error merge → `scatter` (the Algorithm 4 push;
 /// a no-op for vertex-centric kernels) and exits on two consecutive calm
 /// observations or the iteration cap.
+///
+/// Frontier-scheduled kernels ([`Kernel::frontier_scheduled`]) add one
+/// wrinkle: a sweep that drained nothing is not *work*, so it neither
+/// counts toward the iteration cap nor hot-spins — the worker parks
+/// briefly and re-checks. Two exits keep that from livelocking. A peer
+/// that hits the cap sets the shared flag (everyone gives up — the run is
+/// non-converged either way). And when the merged error is hot but every
+/// thread whose error slot is still above the threshold has *exited*
+/// (crashed under the fault plan, or gave up), no live thread can ever
+/// lower those slots, so waiting is hopeless and the worker exits
+/// non-converged. The check is exact liveness, not a timeout: a live peer
+/// mid-long-sweep never trips it, no matter how slow its sweeps are.
 fn run_nonblocking(
     variant: Variant,
     cfg: &PrConfig,
@@ -147,6 +168,9 @@ fn run_nonblocking(
     let board = ErrorBoard::new(threads);
     let metrics = RunMetrics::new(threads);
     let capped = AtomicBool::new(false);
+    let frontier = kernel.frontier_scheduled();
+    // Which workers have returned (any reason) — the hopeless-wait check.
+    let exited: Vec<AtomicBool> = (0..threads).map(|_| AtomicBool::new(false)).collect();
 
     let outcome = run_workers(threads, cfg.dnf_timeout, &[], |tid, stop| {
         let ctx = WorkerCtx { tid, metrics: &metrics };
@@ -154,40 +178,83 @@ fn run_nonblocking(
         // Consecutive iterations with every visible error ≤ threshold (the
         // confirmation sweep — see the module docs).
         let mut calm = 0u32;
-        loop {
+        'work: loop {
             if stop.load(Ordering::Acquire) {
-                return;
+                break 'work;
             }
             if cfg.faults.apply(tid, iter) {
-                return; // crash: error slot stays stale, peers keep spinning
+                break 'work; // crash: error slot stays stale
             }
+            let drained_before = metrics.gathered_by(tid);
             let err = kernel.gather(&ctx);
-            iter += 1;
-            metrics.bump_iteration(tid);
+            // An empty frontier sweep is a termination probe, not work.
+            let worked = !frontier || metrics.gathered_by(tid) != drained_before;
+            if worked {
+                iter += 1;
+                metrics.bump_iteration(tid);
+            }
             board.publish(tid, err);
             // Thread-level convergence: merge own error with the freshest
             // visible values from every peer (Alg 3 lines 16-19). Peers may
             // still be mid-iteration — that partial view is the point.
             let merged = board.global_max();
             kernel.scatter(&ctx);
-            if kernel.converged(merged, cfg.threshold) {
+            // A calm observation needs the merged error under the threshold
+            // AND — for frontier kernels — an empty own frontier this
+            // sweep: exiting with pending dirty vertices would leave them
+            // un-gathered forever. Sub-delta pushes decay geometrically,
+            // so a near-converged frontier does drain in bounded time.
+            if kernel.converged(merged, cfg.threshold) && (!frontier || !worked) {
                 calm += 1;
                 if calm >= 2 {
-                    return;
+                    break 'work;
                 }
             } else {
                 calm = 0;
+                if frontier && !worked {
+                    // Nothing to gather, yet the merged error was hot: if
+                    // every hot slot belongs to an exited worker, nobody
+                    // can ever calm it — give up (non-converged). The
+                    // slots are re-read here and may all have calmed since
+                    // the merge, so also demand at least one slot that is
+                    // still hot AND abandoned; otherwise this is just the
+                    // convergence tail and the calm path will end the run.
+                    let mut dead_hot = false;
+                    let covered = (0..threads).all(|t| {
+                        // Order matters: acquire `exited` first. Seeing it
+                        // true synchronizes with the worker's final error
+                        // publish, so the slot read below cannot be a
+                        // stale-hot value from before a calm exit.
+                        let dead = exited[t].load(Ordering::Acquire);
+                        let calm_slot = board.read(t) <= cfg.threshold;
+                        dead_hot |= dead && !calm_slot;
+                        calm_slot || dead
+                    });
+                    if covered && dead_hot {
+                        capped.store(true, Ordering::Release);
+                        break 'work;
+                    }
+                }
+            }
+            if frontier && capped.load(Ordering::Acquire) {
+                break 'work; // a peer gave up — the run is non-converged anyway
             }
             if iter >= cfg.max_iterations {
                 capped.store(true, Ordering::Release);
-                return;
+                break 'work;
             }
             // Cooperative fairness: on oversubscribed hosts a spinning
             // thread can starve its peers for whole timeslices, inflating
             // staleness far beyond what the paper's 56 hardware threads
-            // ever see. One yield per sweep keeps sweeps interleaved.
-            std::thread::yield_now();
+            // ever see. One yield per sweep keeps sweeps interleaved; an
+            // idle frontier worker parks longer.
+            if worked {
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(FRONTIER_IDLE_PARK);
+            }
         }
+        exited[tid].store(true, Ordering::Release);
     });
 
     PrResult {
@@ -198,6 +265,7 @@ fn run_nonblocking(
         elapsed: start.elapsed(),
         converged: !capped.load(Ordering::Acquire) && !outcome.dnf,
         barrier_wait_secs: 0.0,
+        vertex_updates: metrics.total_gathered(),
         dnf: outcome.dnf,
     }
 }
@@ -230,6 +298,7 @@ fn run_helping(
         elapsed,
         converged: state.is_converged() && !outcome.dnf,
         barrier_wait_secs: 0.0,
+        vertex_updates: metrics.total_gathered(),
         dnf: outcome.dnf,
     })
 }

@@ -1,0 +1,370 @@
+//! Frontier/delta-scheduled non-blocking PageRank — the first kernel family
+//! that changes *what* work a sweep does, not just how sweeps synchronize.
+//!
+//! The paper's non-blocking variants (Algorithms 3–5) still gather every
+//! vertex of a partition on every sweep, long after most ranks have gone
+//! quiet. Blanco et al. (*Delayed Asynchronous Iterative Graph Algorithms*,
+//! arXiv:2110.01409) observe that asynchronous PageRank converges with the
+//! same fixed point when only vertices whose in-neighbourhood changed are
+//! re-gathered; Kollias et al. (arXiv:cs/0606047) supply the convergence
+//! theory for such partially-updated sweeps. This module implements that
+//! schedule on the unified engine:
+//!
+//! * a lock-free per-vertex dirty bitmap ([`crate::sync::dirty::DirtyFlags`])
+//!   holds the active frontier — every vertex starts dirty;
+//! * a sweep drains only the dirty vertices of the worker's partition
+//!   (claim-per-word `fetch_and`, so concurrent re-marks are never lost);
+//! * after recomputing `pr(u)`, the worker re-marks `u`'s out-neighbours
+//!   only when the rank moved more than the delta threshold since the last
+//!   push ([`crate::pagerank::PrConfig::resolved_delta_threshold`]) — the
+//!   accumulated-delta test, so many sub-threshold moves cannot silently
+//!   drift past the cutoff;
+//! * termination reuses the NonBlocking driver's two-consecutive-calm
+//!   confirmation machinery: an empty frontier publishes a zero error, and
+//!   the run ends only after a confirmation sweep re-validates that every
+//!   peer's merged error is calm too (see `engine::driver`).
+//!
+//! Two kernels share the schedule:
+//!
+//! * [`Variant::Frontier`](crate::pagerank::Variant::Frontier) — pull model:
+//!   a dirty vertex re-reads its in-neighbours' ranks directly;
+//! * [`Variant::FrontierPcpm`](crate::pagerank::Variant::FrontierPcpm) —
+//!   PCPM propagation: a changed vertex scatters its contribution into the
+//!   [`PartitionBins`] slots of its out-edges, and a dirty vertex gathers by
+//!   summing its in-edge slots. Unlike `Variant::Pcpm`, which rescatters
+//!   every contribution every iteration, only *changed* vertices write —
+//!   the delta schedule applied to the scatter phase.
+
+use crate::engine::{inv_out_degrees, Kernel, SyncMode, WorkerCtx};
+use crate::graph::partition::PartitionBins;
+use crate::graph::{Csr, Partitions, VertexId};
+use crate::pagerank::{amplify_work, PrConfig};
+use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
+use crate::sync::dirty::DirtyFlags;
+use anyhow::Result;
+
+pub struct FrontierKernel<'g> {
+    g: &'g Csr,
+    parts: Partitions,
+    inv_out: Vec<f64>,
+    pr: Vec<AtomicF64>,
+    /// Rank value each vertex last propagated to its out-neighbours; the
+    /// push test compares against this (not the previous gather) so that
+    /// many sub-delta moves accumulate into a push instead of drifting.
+    last_pushed: Vec<AtomicF64>,
+    dirty: DirtyFlags,
+    delta: f64,
+    base: f64,
+    d: f64,
+    work_amplify: u32,
+}
+
+/// Registry builder for [`Variant::Frontier`](crate::pagerank::Variant).
+pub fn kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
+    let n = g.num_vertices();
+    let init = 1.0 / n as f64;
+    Ok(Box::new(FrontierKernel {
+        g,
+        parts: parts.clone(),
+        inv_out: inv_out_degrees(g),
+        pr: atomic_vec(n, init),
+        last_pushed: atomic_vec(n, init),
+        dirty: DirtyFlags::new_set(n),
+        delta: cfg.resolved_delta_threshold(),
+        base: (1.0 - cfg.damping) / n as f64,
+        d: cfg.damping,
+        work_amplify: cfg.work_amplify,
+    }))
+}
+
+impl Kernel for FrontierKernel<'_> {
+    fn sync_mode(&self) -> SyncMode {
+        SyncMode::NonBlocking
+    }
+
+    fn frontier_scheduled(&self) -> bool {
+        true
+    }
+
+    /// One sweep over this partition's *dirty* vertices only.
+    fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
+        let mut local_err: f64 = 0.0;
+        let mut edges = 0u64;
+        let gathered = self.dirty.drain_range(self.parts.range(ctx.tid), |u| {
+            let ui = u as usize;
+            let previous = self.pr[ui].load();
+            let mut tmp = 0.0;
+            for &v in self.g.in_neighbors(u) {
+                // SAFETY: CSR validation bounds every endpoint by n
+                // (= pr.len() = inv_out.len()), as in the NoSync kernel.
+                tmp += unsafe {
+                    self.pr.get_unchecked(v as usize).load()
+                        * self.inv_out.get_unchecked(v as usize)
+                };
+                amplify_work(self.work_amplify);
+            }
+            edges += self.g.in_degree(u) as u64;
+            let new = self.base + self.d * tmp;
+            self.pr[ui].store(new);
+            local_err = local_err.max((new - previous).abs());
+            if (new - self.last_pushed[ui].load()).abs() > self.delta {
+                self.last_pushed[ui].store(new);
+                for &w in self.g.out_neighbors(u) {
+                    self.dirty.set(w);
+                }
+            }
+        });
+        if gathered > 0 {
+            ctx.metrics.add_gathered(ctx.tid, gathered);
+            ctx.metrics.add_edges(ctx.tid, edges);
+        }
+        local_err
+    }
+
+    fn ranks(&self) -> Vec<f64> {
+        snapshot(&self.pr)
+    }
+}
+
+pub struct FrontierPcpmKernel<'g> {
+    g: &'g Csr,
+    parts: Partitions,
+    bins: PartitionBins,
+    /// In-edge slot (index into the CSR in-edge array) → bin slot, so a
+    /// dirty vertex can gather its in-contributions straight from the bins.
+    in_slot_bins: Vec<usize>,
+    inv_out: Vec<f64>,
+    pr: Vec<AtomicF64>,
+    /// Per-edge contribution slots, grouped by (src, dst) partition.
+    bin_values: Vec<AtomicF64>,
+    last_pushed: Vec<AtomicF64>,
+    dirty: DirtyFlags,
+    delta: f64,
+    base: f64,
+    d: f64,
+    work_amplify: u32,
+}
+
+/// Registry builder for
+/// [`Variant::FrontierPcpm`](crate::pagerank::Variant::FrontierPcpm).
+pub fn pcpm_kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    parts: &Partitions,
+) -> Result<Box<dyn Kernel + 'g>> {
+    let n = g.num_vertices();
+    let m = g.num_edges();
+    let init = 1.0 / n as f64;
+    let inv_out = inv_out_degrees(g);
+    let bins = PartitionBins::new(g, parts);
+    let in_slot_bins = bins.in_gather_slots(g);
+    // Seed every slot with its source's initial contribution (every vertex
+    // starts dirty, so the first sweeps read a fully-populated grid).
+    let bin_values = atomic_vec(m, 0.0);
+    for u in 0..n as VertexId {
+        let contribution = init * inv_out[u as usize];
+        for e in g.out_slot_range(u) {
+            bin_values[bins.scatter_slot(e)].store(contribution);
+        }
+    }
+    Ok(Box::new(FrontierPcpmKernel {
+        g,
+        parts: parts.clone(),
+        bins,
+        in_slot_bins,
+        inv_out,
+        pr: atomic_vec(n, init),
+        bin_values,
+        last_pushed: atomic_vec(n, init),
+        dirty: DirtyFlags::new_set(n),
+        delta: cfg.resolved_delta_threshold(),
+        base: (1.0 - cfg.damping) / n as f64,
+        d: cfg.damping,
+        work_amplify: cfg.work_amplify,
+    }))
+}
+
+impl Kernel for FrontierPcpmKernel<'_> {
+    fn sync_mode(&self) -> SyncMode {
+        SyncMode::NonBlocking
+    }
+
+    fn frontier_scheduled(&self) -> bool {
+        true
+    }
+
+    /// One sweep over the partition's dirty vertices, gathering from the
+    /// bin slots and scattering changed contributions back through them.
+    fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
+        let mut local_err: f64 = 0.0;
+        let mut edges = 0u64;
+        let gathered = self.dirty.drain_range(self.parts.range(ctx.tid), |u| {
+            let ui = u as usize;
+            let previous = self.pr[ui].load();
+            let mut tmp = 0.0;
+            for s in self.g.in_slot_range(u) {
+                tmp += self.bin_values[self.in_slot_bins[s]].load();
+                amplify_work(self.work_amplify);
+            }
+            edges += self.g.in_degree(u) as u64;
+            let new = self.base + self.d * tmp;
+            self.pr[ui].store(new);
+            local_err = local_err.max((new - previous).abs());
+            if (new - self.last_pushed[ui].load()).abs() > self.delta
+                && self.g.out_degree(u) > 0
+            {
+                self.last_pushed[ui].store(new);
+                let contribution = new * self.inv_out[ui];
+                for e in self.g.out_slot_range(u) {
+                    self.bin_values[self.bins.scatter_slot(e)].store(contribution);
+                }
+                for &w in self.g.out_neighbors(u) {
+                    self.dirty.set(w);
+                }
+            }
+        });
+        if gathered > 0 {
+            ctx.metrics.add_gathered(ctx.tid, gathered);
+            ctx.metrics.add_edges(ctx.tid, edges);
+        }
+        local_err
+    }
+
+    fn ranks(&self) -> Vec<f64> {
+        snapshot(&self.pr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::{synthetic, GraphBuilder, PartitionPolicy};
+    use crate::pagerank::{self, convergence, seq, PrConfig, Variant};
+
+    fn cfg(threads: usize) -> PrConfig {
+        PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }
+    }
+
+    const BOTH: [Variant; 2] = [Variant::Frontier, Variant::FrontierPcpm];
+
+    #[test]
+    fn matches_sequential_on_fixture_families() {
+        let c = cfg(3);
+        for g in [
+            synthetic::cycle(60),
+            synthetic::chain(60),
+            synthetic::star(60),
+            synthetic::complete(20),
+            synthetic::web_replica(700, 6, 19),
+        ] {
+            let (sr, _, _) = seq::solve(&g, &c);
+            for v in BOTH {
+                let r = pagerank::run(&g, v, &c).unwrap();
+                assert!(r.converged, "{v} on {} did not converge", g.name);
+                let l1 = r.l1_norm(&sr);
+                assert!(l1 < 1e-7, "{v} on {}: l1 {l1}", g.name);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_graph_terminates_immediately() {
+        let g = GraphBuilder::new(0).build("nil");
+        for v in BOTH {
+            let r = pagerank::run(&g, v, &cfg(4)).unwrap();
+            assert!(r.converged, "{v}");
+            assert!(r.ranks.is_empty(), "{v}");
+            assert_eq!(r.vertex_updates, 0, "{v}");
+        }
+    }
+
+    #[test]
+    fn single_dangling_vertex_converges_in_one_update() {
+        // One vertex, no edges: pr = (1-d)/1 after a single gather; the
+        // frontier is empty afterwards and only the confirmation sweeps
+        // remain.
+        let g = synthetic::chain(1);
+        for v in BOTH {
+            let r = pagerank::run(&g, v, &cfg(2)).unwrap();
+            assert!(r.converged, "{v}");
+            assert!((r.ranks[0] - 0.15).abs() < 1e-12, "{v}: {}", r.ranks[0]);
+            assert_eq!(r.vertex_updates, 1, "{v} must gather exactly once");
+        }
+    }
+
+    /// The confirmation-sweep edge case: on a long chain the downstream
+    /// partitions' frontiers drain long before rank mass has propagated from
+    /// upstream. Workers must keep re-validating (empty frontier ⇒ calm
+    /// sweep, but the merged error stays hot) instead of exiting early with
+    /// stale ranks.
+    #[test]
+    fn drained_frontier_waits_for_global_convergence() {
+        let g = synthetic::chain(400);
+        let c = cfg(4);
+        let (sr, _, _) = seq::solve(&g, &c);
+        for v in BOTH {
+            let r = pagerank::run(&g, v, &c).unwrap();
+            assert!(r.converged, "{v}");
+            let linf = convergence::linf_norm(&r.ranks, &sr);
+            assert!(linf < 1e-10, "{v} exited before the chain settled: linf {linf}");
+        }
+    }
+
+    #[test]
+    fn more_threads_than_vertices() {
+        let g = synthetic::cycle(3);
+        for v in BOTH {
+            let r = pagerank::run(&g, v, &cfg(8)).unwrap();
+            assert!(r.converged, "{v}");
+            let (sr, _, _) = seq::solve(&g, &cfg(8));
+            assert!(r.l1_norm(&sr) < 1e-9, "{v}");
+        }
+    }
+
+    #[test]
+    fn edge_balanced_partitioning_also_correct() {
+        let g = synthetic::web_replica(600, 7, 5);
+        let c = PrConfig { partition: PartitionPolicy::EdgeBalanced, ..cfg(4) };
+        let (sr, _, _) = seq::solve(&g, &c);
+        for v in BOTH {
+            let r = pagerank::run(&g, v, &c).unwrap();
+            assert!(r.converged, "{v}");
+            assert!(r.l1_norm(&sr) < 1e-7, "{v}: l1 {}", r.l1_norm(&sr));
+        }
+    }
+
+    /// A coarser delta threshold trades accuracy for fewer vertex updates —
+    /// the ablation knob behind `--delta-threshold`.
+    #[test]
+    fn coarse_delta_threshold_gathers_less() {
+        let g = synthetic::web_replica(900, 6, 23);
+        let tight = PrConfig { threshold: 1e-10, ..cfg(4) };
+        let coarse = PrConfig { delta_threshold: 1e-6, ..tight.clone() };
+        let fine = pagerank::run(&g, Variant::Frontier, &tight).unwrap();
+        let rough = pagerank::run(&g, Variant::Frontier, &coarse).unwrap();
+        assert!(fine.converged && rough.converged);
+        assert!(
+            rough.vertex_updates <= fine.vertex_updates,
+            "coarse delta did more work: {} > {}",
+            rough.vertex_updates,
+            fine.vertex_updates
+        );
+        // still a sane approximation: un-pushed residual is bounded by
+        // delta / (1 - d) per vertex
+        let (sr, _, _) = seq::solve(&g, &tight);
+        assert!(rough.l1_norm(&sr) < 1e-1, "l1 {}", rough.l1_norm(&sr));
+    }
+
+    #[test]
+    fn iteration_cap_reports_unconverged() {
+        let g = synthetic::web_replica(400, 6, 8);
+        let c = PrConfig { max_iterations: 2, ..cfg(2) };
+        for v in BOTH {
+            let r = pagerank::run(&g, v, &c).unwrap();
+            assert!(!r.converged, "{v}");
+        }
+    }
+}

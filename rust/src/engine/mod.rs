@@ -27,6 +27,7 @@
 //! now one kernel file plus one table row.
 
 pub mod driver;
+pub mod frontier;
 pub mod helping;
 pub mod pcpm;
 
@@ -89,6 +90,14 @@ pub trait Kernel: Sync {
         global_err <= threshold
     }
 
+    /// Does this kernel schedule work through a frontier (a sweep may
+    /// legitimately process zero vertices)? The NonBlocking driver exempts
+    /// such empty sweeps from the iteration cap and parks the worker
+    /// briefly instead of hot-spinning (see `driver::run_nonblocking`).
+    fn frontier_scheduled(&self) -> bool {
+        false
+    }
+
     /// Snapshot the final rank vector.
     fn ranks(&self) -> Vec<f64>;
 
@@ -147,6 +156,8 @@ pub static REGISTRY: &[KernelEntry] = &[
         build: crate::pagerank::perforation::nosync_opt_identical_kernel,
     },
     KernelEntry { variant: Variant::Pcpm, build: pcpm::kernel },
+    KernelEntry { variant: Variant::Frontier, build: frontier::kernel },
+    KernelEntry { variant: Variant::FrontierPcpm, build: frontier::pcpm_kernel },
 ];
 
 /// Look up a variant's kernel builder.

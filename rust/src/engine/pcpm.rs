@@ -112,6 +112,7 @@ impl Kernel for PcpmKernel<'_> {
             thr_err = thr_err.max((new - previous).abs());
         }
         ctx.metrics.add_edges(tid, edges);
+        ctx.metrics.add_gathered(tid, self.parts.range(tid).len() as u64);
         thr_err
     }
 

@@ -206,6 +206,27 @@ impl PartitionBins {
     pub fn scatter_slot(&self, e: usize) -> usize {
         self.scatter_slots[e]
     }
+
+    /// For each in-edge slot of the CSR (the pull-direction edge array),
+    /// the bin slot its source vertex scatters into — this is what lets a
+    /// frontier gather read one vertex's in-contributions straight out of
+    /// the bins ([`crate::engine::frontier`]). The cursor walk pairs each
+    /// of `v`'s in-slots with exactly one out-edge targeting `v`: a
+    /// bijection, which is all a gather *sum* needs (order-independent).
+    pub fn in_gather_slots(&self, g: &Csr) -> Vec<usize> {
+        let n = g.num_vertices();
+        let mut map = vec![0usize; g.num_edges()];
+        let mut cursor: Vec<usize> =
+            (0..n).map(|v| g.in_slot_range(v as VertexId).start).collect();
+        for u in 0..n as VertexId {
+            for e in g.out_slot_range(u) {
+                let v = g.out_edges[e] as usize;
+                map[cursor[v]] = self.scatter_slot(e);
+                cursor[v] += 1;
+            }
+        }
+        map
+    }
 }
 
 #[cfg(test)]
@@ -334,6 +355,30 @@ mod tests {
             for dst in 0..3 {
                 for slot in bins.range(src, dst) {
                     assert_eq!(parts.owner(bins.dst(slot)), dst);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn in_gather_slots_is_a_bijection_landing_on_own_destination() {
+        let g = synthetic::web_replica(400, 6, 29);
+        for threads in [1, 3, 4] {
+            let parts = Partitions::new(&g, threads, PartitionPolicy::VertexBalanced);
+            let bins = PartitionBins::new(&g, &parts);
+            let map = bins.in_gather_slots(&g);
+            assert_eq!(map.len(), g.num_edges());
+            // bijection onto the bin slots
+            let mut seen = vec![false; bins.num_slots()];
+            for &slot in &map {
+                assert!(!seen[slot], "bin slot {slot} mapped twice");
+                seen[slot] = true;
+            }
+            assert!(seen.iter().all(|&b| b));
+            // each vertex's in-slots map to slots whose destination is it
+            for v in 0..g.num_vertices() as VertexId {
+                for s in g.in_slot_range(v) {
+                    assert_eq!(bins.dst(map[s]), v, "in-slot {s} of vertex {v}");
                 }
             }
         }

@@ -8,9 +8,11 @@
 //! * `PAGERANK_NB_BENCH_SAMPLES` — samples per measurement (default 5)
 //! * `PAGERANK_NB_BENCH_WARMUP`  — warmup runs (default 1)
 //! * `PAGERANK_NB_SCALE`         — dataset divisor for replica datasets
-//!   (default 200: Table-1 replicas at 1/200 scale fit CI hosts)
+//!   (default 200: Table-1 replicas at 1/200 scale fit CI hosts; read once
+//!   per process and logged so CI output records the effective size)
 
 use crate::util::stats::Summary;
+use std::sync::OnceLock;
 use std::time::Instant;
 
 /// One named measurement.
@@ -78,11 +80,38 @@ impl BenchRunner {
         }
         Measurement { name: name.to_string(), summary: Summary::from_samples(&samples) }
     }
+
+    /// Like [`Self::measure_reported`], but each run also yields a value
+    /// and the last *sampled* one is returned alongside the measurement —
+    /// so non-timing columns (iterations, vertex updates, convergence)
+    /// come from a run that was actually measured, with no extra probe run.
+    pub fn measure_with<T>(
+        &self,
+        name: &str,
+        mut f: impl FnMut() -> (f64, T),
+    ) -> (Measurement, T) {
+        let mut last: Option<T> = None;
+        let m = self.measure_reported(name, || {
+            let (secs, value) = f();
+            last = Some(value);
+            secs
+        });
+        (m, last.expect("measure_with: samples >= 1 always yields a value"))
+    }
 }
 
 /// Dataset divisor for Table-1 replicas (`PAGERANK_NB_SCALE`, default 200).
+///
+/// Read from the environment exactly once per process (`OnceLock`) and
+/// logged on first use, so CI output records which dataset size actually
+/// ran — later env changes within the process are deliberately ignored.
 pub fn dataset_divisor() -> usize {
-    env_usize("PAGERANK_NB_SCALE", 200).max(1)
+    static DIVISOR: OnceLock<usize> = OnceLock::new();
+    *DIVISOR.get_or_init(|| {
+        let d = env_usize("PAGERANK_NB_SCALE", 200).max(1);
+        eprintln!("dataset scale: 1/{d} of Table-1 sizes (PAGERANK_NB_SCALE={d})");
+        d
+    })
 }
 
 fn env_usize(key: &str, default: usize) -> usize {
@@ -117,7 +146,23 @@ mod tests {
     }
 
     #[test]
-    fn divisor_defaults_positive() {
-        assert!(dataset_divisor() >= 1);
+    fn measure_with_returns_last_sampled_value() {
+        let mut calls = 0u32;
+        let r = BenchRunner::new(3, 1);
+        let (m, last) = r.measure_with("counted", || {
+            calls += 1;
+            (calls as f64, calls)
+        });
+        assert_eq!(m.summary.n, 3);
+        // 1 warmup + 3 samples; the returned value is from the last sample
+        assert_eq!(last, 4);
+    }
+
+    #[test]
+    fn divisor_defaults_positive_and_is_stable() {
+        let first = dataset_divisor();
+        assert!(first >= 1);
+        // OnceLock: repeated calls return the cached value
+        assert_eq!(dataset_divisor(), first);
     }
 }

@@ -490,12 +490,13 @@ pub fn ablation(ctx: &Ctx) -> Vec<Table> {
     let g = ctx.web_stanford();
     let base = ctx.config();
 
-    // (a) partition policy
+    // (a) partition policy — one blocking, one non-blocking, plus the
+    // engine-native modes (the "pcpm row": partition policy × mode)
     let mut a = Table::new(
         "Ablation A — partition policy (vertex- vs edge-balanced)",
         &["variant", "vertex-balanced (s)", "edge-balanced (s)", "edge-balanced gain"],
     );
-    for v in [Variant::Barrier, Variant::NoSync] {
+    for v in [Variant::Barrier, Variant::NoSync, Variant::Pcpm, Variant::Frontier] {
         let tv = ctx
             .runner
             .measure_reported("vb", || {
@@ -564,6 +565,27 @@ pub fn ablation(ctx: &Ctx) -> Vec<Table> {
     }
     d.note("identical-node and chain techniques target different classes: web graphs have identical pages, road networks have chains; SCC counts bound the condensation-order technique");
 
+    // (e) sweep scheduling: full sweeps vs frontier/delta gathering
+    let mut e = Table::new(
+        "Ablation E — sweep scheduling (full vs frontier/delta)",
+        &["variant", "time (s)", "iterations", "vertex updates", "L1 vs seq"],
+    );
+    let seq_sched = pagerank::run(&g, Variant::Sequential, &base).expect("seq");
+    for v in [Variant::NoSync, Variant::Frontier, Variant::FrontierPcpm, Variant::Pcpm] {
+        let (m, probe): (_, PrResult) = ctx.runner.measure_with(v.name(), || {
+            let r = pagerank::run(&g, v, &base).expect("run");
+            (r.elapsed.as_secs_f64(), r)
+        });
+        e.push_row(vec![
+            v.name().into(),
+            m.summary.median.into(),
+            (probe.iterations as i64).into(),
+            (probe.vertex_updates as i64).into(),
+            probe.l1_norm(&seq_sched.ranks).into(),
+        ]);
+    }
+    e.note("frontier gathers only vertices whose in-neighbourhood changed past the delta threshold (delayed-async, Blanco et al.); 'vertex updates' is the total gather count across threads — the work the schedule removes");
+
     // (c) barrier wait share vs threads
     let mut c = Table::new(
         "Ablation C — time at barriers (Barrier variant)",
@@ -583,7 +605,7 @@ pub fn ablation(ctx: &Ctx) -> Vec<Table> {
     }
     c.note("the wait share is the speedup ceiling the No-Sync variants remove");
 
-    vec![a, b, c, d]
+    vec![a, b, c, d, e]
 }
 
 #[cfg(test)]

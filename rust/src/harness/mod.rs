@@ -8,5 +8,6 @@
 
 pub mod bench;
 pub mod experiments;
+pub mod trajectory;
 
 pub use bench::{BenchRunner, Measurement};

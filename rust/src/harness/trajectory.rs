@@ -1,0 +1,609 @@
+//! Benchmark-trajectory recording and the CI regression gate.
+//!
+//! `pagerank-nb bench-ci` runs every registered engine variant on the
+//! scaled-down CI datasets, writes a `BENCH_ci.json` report (per-variant
+//! wall time, normalized time, iteration count, vertex updates), and —
+//! given a committed baseline — fails when a variant regresses beyond the
+//! allowed budget. Timing is normalized *within the run* against the
+//! Sequential row of the same dataset (`rel = secs / seq_secs`), so the
+//! gate compares schedules, not host generations: a slower CI machine moves
+//! every row together and leaves `rel` unchanged.
+//!
+//! The JSON schema is documented in `docs/benchmarking.md`. The parser here
+//! is a minimal recursive-descent JSON reader (the build image is offline —
+//! no serde), tolerant of unknown keys so the schema can grow.
+
+use crate::coordinator::host::HostInfo;
+use crate::graph::{synthetic, Csr};
+use crate::harness::bench::BenchRunner;
+use crate::pagerank::{self, PrConfig, PrResult, Variant};
+use crate::util::report::{json_escape, json_f64};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+/// One (dataset, variant) measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRow {
+    pub dataset: String,
+    pub variant: String,
+    /// Median wall-clock seconds over the sample runs.
+    pub secs: f64,
+    /// `secs / sequential secs` on the same dataset in the same run — the
+    /// host-neutral number the gate compares.
+    pub rel: f64,
+    pub iterations: u64,
+    pub vertex_updates: u64,
+    pub converged: bool,
+}
+
+/// A full `BENCH_ci.json` document.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub schema: u64,
+    pub scale: usize,
+    pub threads: usize,
+    pub samples: usize,
+    pub host: String,
+    pub rows: Vec<BenchRow>,
+}
+
+pub const SCHEMA_VERSION: u64 = 1;
+
+impl BenchReport {
+    pub fn find(&self, dataset: &str, variant: &str) -> Option<&BenchRow> {
+        self.rows.iter().find(|r| r.dataset == dataset && r.variant == variant)
+    }
+
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema\": {},\n", self.schema));
+        s.push_str(&format!("  \"scale\": {},\n", self.scale));
+        s.push_str(&format!("  \"threads\": {},\n", self.threads));
+        s.push_str(&format!("  \"samples\": {},\n", self.samples));
+        s.push_str(&format!("  \"host\": {},\n", json_escape(&self.host)));
+        s.push_str("  \"rows\": [\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"dataset\": {}, \"variant\": {}, \"secs\": {}, \"rel\": {}, \
+                 \"iterations\": {}, \"vertex_updates\": {}, \"converged\": {}}}{}\n",
+                json_escape(&r.dataset),
+                json_escape(&r.variant),
+                json_f64(r.secs),
+                json_f64(r.rel),
+                r.iterations,
+                r.vertex_updates,
+                r.converged,
+                if i + 1 < self.rows.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    pub fn from_json(text: &str) -> Result<BenchReport> {
+        let v = Json::parse(text)?;
+        let obj = v.as_object().context("BENCH json root must be an object")?;
+        let num =
+            |k: &str, d: f64| obj.get(k).and_then(Json::as_f64).unwrap_or(d);
+        let mut rows = Vec::new();
+        // "rows" must be present (possibly empty): silently accepting a
+        // missing/mistyped key would turn a hand-edit typo in the baseline
+        // into a report that trivially gates nothing.
+        let rows_v = obj.get("rows").context("BENCH json missing 'rows'")?;
+        let Json::Array(raw) = rows_v else {
+            bail!("BENCH json 'rows' must be an array");
+        };
+        for r in raw {
+            let ro = r.as_object().context("rows[] entries must be objects")?;
+            let s = |k: &str| -> Result<String> {
+                ro.get(k)
+                    .and_then(Json::as_str)
+                    .map(str::to_string)
+                    .with_context(|| format!("row missing string field '{k}'"))
+            };
+            // numeric fields may be null (a DNF run has no finite time)
+            let f = |k: &str| ro.get(k).and_then(Json::as_f64);
+            rows.push(BenchRow {
+                dataset: s("dataset")?,
+                variant: s("variant")?,
+                secs: f("secs").unwrap_or(f64::INFINITY),
+                rel: f("rel").unwrap_or(f64::INFINITY),
+                iterations: f("iterations").unwrap_or(0.0) as u64,
+                vertex_updates: f("vertex_updates").unwrap_or(0.0) as u64,
+                converged: ro
+                    .get("converged")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
+            });
+        }
+        Ok(BenchReport {
+            schema: num("schema", 1.0) as u64,
+            scale: num("scale", 0.0) as usize,
+            threads: num("threads", 0.0) as usize,
+            samples: num("samples", 0.0) as usize,
+            host: obj
+                .get("host")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            rows,
+        })
+    }
+}
+
+/// The scaled-down CI dataset pair: one skewed web-class replica (where the
+/// frontier schedule shines) and one high-diameter road-class replica
+/// (where it is stressed). Sizes follow Table 1 at `1/divisor` scale.
+pub fn ci_datasets(divisor: usize, seed: u64) -> Vec<(&'static str, Csr)> {
+    // floor the sizes so an absurd divisor still yields runnable graphs
+    vec![
+        ("webStanford", synthetic::web_replica((281_903 / divisor).max(8), 8, seed)),
+        ("roaditalyosm", synthetic::road_replica((6_686_493 / divisor).max(16), seed + 8)),
+    ]
+}
+
+/// Run every registered engine variant on the CI datasets and collect the
+/// trajectory rows. `Sequential` is measured first per dataset and anchors
+/// the normalized column.
+pub fn run_ci_bench(
+    divisor: usize,
+    threads: usize,
+    samples: usize,
+    seed: u64,
+) -> Result<BenchReport> {
+    let runner = BenchRunner::new(samples, 1);
+    let cfg = PrConfig {
+        threads,
+        max_iterations: 2_000,
+        dnf_timeout: Some(Duration::from_secs(60)),
+        ..PrConfig::default()
+    };
+    // Reject bad input (e.g. --threads 65) with a clean error here; the
+    // per-run .expect()s below can then only fire on internal bugs.
+    cfg.validate()?;
+    let mut rows = Vec::new();
+    for (name, g) in ci_datasets(divisor, seed) {
+        let (seq_m, seq_probe): (_, PrResult) = runner.measure_with("seq", || {
+            let r = pagerank::run(&g, Variant::Sequential, &cfg).expect("sequential run");
+            (r.elapsed.as_secs_f64(), r)
+        });
+        let seq_secs = seq_m.summary.median.max(1e-12);
+        for v in Variant::ALL_MODES {
+            // Samples stay finite even for a DNF run (the watchdog bounds
+            // its wall time) — Summary's percentile math cannot handle
+            // infinities. A DNF on ANY run (warmup included) poisons the
+            // median, so it marks the whole row DNF (`secs` becomes the
+            // JSON `null` below) instead of silently inflating `rel`.
+            let mut any_dnf = false;
+            let (median, probe) = if v == Variant::Sequential {
+                (seq_secs, seq_probe.clone())
+            } else {
+                let (m, r) = runner.measure_with(v.name(), || {
+                    let r = pagerank::run(&g, v, &cfg).expect("variant run");
+                    any_dnf |= r.dnf;
+                    (r.elapsed.as_secs_f64(), r)
+                });
+                (m.summary.median, r)
+            };
+            let secs = if any_dnf { f64::INFINITY } else { median };
+            rows.push(BenchRow {
+                dataset: name.to_string(),
+                variant: v.name().to_string(),
+                secs,
+                rel: secs / seq_secs,
+                iterations: probe.iterations,
+                vertex_updates: probe.vertex_updates,
+                converged: probe.converged && !any_dnf,
+            });
+        }
+    }
+    Ok(BenchReport {
+        schema: SCHEMA_VERSION,
+        scale: divisor,
+        threads,
+        samples,
+        host: HostInfo::detect().describe(),
+        rows,
+    })
+}
+
+/// Gate: compare `current` against `baseline` and return one message per
+/// regression (empty = gate passes).
+///
+/// Rules, per (dataset, variant) row present in **both** reports with a
+/// converged baseline:
+/// * normalized time may grow to `base.rel * (1 + max_regress) + 1.0`
+///   (the absolute slack absorbs scheduler noise, which dominates in the
+///   millisecond regime the scaled-down CI graphs run in);
+/// * iterations may grow to `base.iterations * (1 + max_regress) + 8`
+///   (non-blocking schedules jitter by a few confirmation sweeps);
+/// * a variant that converged in the baseline must still converge
+///   (`No-Sync-Edge` is exempt: §4.4 documents its instability).
+///
+/// Rows only in one report (new variants, retired datasets) are not gated.
+///
+/// Reports recorded under a different schema, dataset scale, or thread
+/// count are **incomparable** — rel and iteration counts shift with graph
+/// size and parallelism — so no row is gated (see [`comparable`]; the CLI
+/// warns when it skips for this reason).
+pub fn compare(current: &BenchReport, baseline: &BenchReport, max_regress: f64) -> Vec<String> {
+    let mut regressions = Vec::new();
+    if !comparable(current, baseline) {
+        return regressions;
+    }
+    for base in &baseline.rows {
+        let Some(cur) = current.find(&base.dataset, &base.variant) else {
+            continue;
+        };
+        if !base.converged {
+            continue; // baseline itself was unstable here: nothing to hold
+        }
+        if !cur.converged {
+            // Exempt No-Sync-Edge entirely: §4.4 documents its instability,
+            // and a capped/DNF run would also trip the rel/iteration
+            // budgets below, so no check may apply to this row.
+            if base.variant != Variant::NoSyncEdge.name() {
+                regressions.push(format!(
+                    "{}/{}: no longer converges (baseline did)",
+                    base.dataset, base.variant
+                ));
+            }
+            continue;
+        }
+        let rel_budget = base.rel * (1.0 + max_regress) + 1.0;
+        if cur.rel > rel_budget {
+            regressions.push(format!(
+                "{}/{}: normalized time {:.3}x vs sequential, budget {:.3}x (baseline {:.3}x)",
+                base.dataset, base.variant, cur.rel, rel_budget, base.rel
+            ));
+        }
+        let iter_budget =
+            (base.iterations as f64 * (1.0 + max_regress)).round() as u64 + 8;
+        if cur.iterations > iter_budget {
+            regressions.push(format!(
+                "{}/{}: {} iterations, budget {} (baseline {})",
+                base.dataset, base.variant, cur.iterations, iter_budget, base.iterations
+            ));
+        }
+    }
+    regressions
+}
+
+/// Were the two reports produced under the same measurement conditions?
+/// (An empty baseline is trivially comparable — there is nothing to gate.)
+pub fn comparable(current: &BenchReport, baseline: &BenchReport) -> bool {
+    baseline.rows.is_empty()
+        || (baseline.schema == current.schema
+            && baseline.scale == current.scale
+            && baseline.threads == current.threads)
+}
+
+/// Minimal JSON value — just enough to read our own reports back.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<Json>),
+    Object(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn parse(text: &str) -> Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing characters at byte {pos}");
+        }
+        Ok(v)
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Object(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    let Some(&c) = b.get(*pos) else {
+        bail!("unexpected end of input");
+    };
+    match c {
+        b'{' => {
+            *pos += 1;
+            let mut map = BTreeMap::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Object(map));
+            }
+            loop {
+                skip_ws(b, pos);
+                let Json::Str(key) = parse_value(b, pos)? else {
+                    bail!("object key must be a string (byte {pos})");
+                };
+                skip_ws(b, pos);
+                if b.get(*pos) != Some(&b':') {
+                    bail!("expected ':' at byte {pos}");
+                }
+                *pos += 1;
+                let val = parse_value(b, pos)?;
+                map.insert(key, val);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(&b',') => *pos += 1,
+                    Some(&b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Object(map));
+                    }
+                    _ => bail!("expected ',' or '}}' at byte {pos}"),
+                }
+            }
+        }
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Array(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(&b',') => *pos += 1,
+                    Some(&b']') => {
+                        *pos += 1;
+                        return Ok(Json::Array(items));
+                    }
+                    _ => bail!("expected ',' or ']' at byte {pos}"),
+                }
+            }
+        }
+        b'"' => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                let Some(&c) = b.get(*pos) else {
+                    bail!("unterminated string");
+                };
+                *pos += 1;
+                match c {
+                    b'"' => return Ok(Json::Str(s)),
+                    b'\\' => {
+                        let Some(&e) = b.get(*pos) else {
+                            bail!("unterminated escape");
+                        };
+                        *pos += 1;
+                        match e {
+                            b'"' => s.push('"'),
+                            b'\\' => s.push('\\'),
+                            b'/' => s.push('/'),
+                            b'n' => s.push('\n'),
+                            b't' => s.push('\t'),
+                            b'r' => s.push('\r'),
+                            b'b' => s.push('\u{8}'),
+                            b'f' => s.push('\u{c}'),
+                            b'u' => {
+                                if *pos + 4 > b.len() {
+                                    bail!("truncated \\u escape");
+                                }
+                                let hex = std::str::from_utf8(&b[*pos..*pos + 4])
+                                    .ok()
+                                    .and_then(|h| u32::from_str_radix(h, 16).ok())
+                                    .context("bad \\u escape")?;
+                                *pos += 4;
+                                // Our writer never emits surrogate pairs
+                                // (non-BMP chars go out as raw UTF-8);
+                                // reject rather than silently corrupt.
+                                if (0xD800..=0xDFFF).contains(&hex) {
+                                    bail!("surrogate \\u escapes unsupported");
+                                }
+                                s.push(char::from_u32(hex).unwrap_or('\u{fffd}'));
+                            }
+                            other => bail!("unknown escape '\\{}'", other as char),
+                        }
+                    }
+                    c => {
+                        // Re-assemble multi-byte UTF-8 sequences.
+                        if c < 0x80 {
+                            s.push(c as char);
+                        } else {
+                            let start = *pos - 1;
+                            let width = match c {
+                                0xC0..=0xDF => 2,
+                                0xE0..=0xEF => 3,
+                                _ => 4,
+                            };
+                            if start + width > b.len() {
+                                bail!("truncated UTF-8 sequence");
+                            }
+                            let chunk = std::str::from_utf8(&b[start..start + width])
+                                .context("invalid UTF-8 in string")?;
+                            s.push_str(chunk);
+                            *pos = start + width;
+                        }
+                    }
+                }
+            }
+        }
+        b't' => expect_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => expect_lit(b, pos, "false", Json::Bool(false)),
+        b'n' => expect_lit(b, pos, "null", Json::Null),
+        _ => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let s = std::str::from_utf8(&b[start..*pos]).unwrap_or("");
+            s.parse::<f64>()
+                .map(Json::Num)
+                .with_context(|| format!("bad number '{s}' at byte {start}"))
+        }
+    }
+}
+
+fn expect_lit(b: &[u8], pos: &mut usize, lit: &str, val: Json) -> Result<Json> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(val)
+    } else {
+        bail!("expected '{lit}' at byte {pos}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_report() -> BenchReport {
+        // Tiny graphs (1/20000 scale) keep this an actual end-to-end run of
+        // every registered variant while staying inside the test budget;
+        // the OnceLock shares the single run across every test that needs
+        // a report instead of re-benching per test.
+        static REPORT: std::sync::OnceLock<BenchReport> = std::sync::OnceLock::new();
+        REPORT
+            .get_or_init(|| run_ci_bench(20_000, 2, 1, 7).expect("ci bench run"))
+            .clone()
+    }
+
+    #[test]
+    fn report_covers_every_mode_on_every_dataset() {
+        let r = tiny_report();
+        assert_eq!(r.rows.len(), 2 * Variant::ALL_MODES.len());
+        for v in Variant::ALL_MODES {
+            for ds in ["webStanford", "roaditalyosm"] {
+                let row = r.find(ds, v.name()).unwrap_or_else(|| panic!("{ds}/{v}"));
+                assert!(row.rel >= 0.0);
+            }
+        }
+        // frontier rows carry the work metric the schedule is about
+        let f = r.find("roaditalyosm", "Frontier").unwrap();
+        assert!(f.vertex_updates > 0);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_rows() {
+        let r = tiny_report();
+        let parsed = BenchReport::from_json(&r.to_json()).expect("parse back");
+        assert_eq!(parsed.schema, SCHEMA_VERSION);
+        assert_eq!(parsed.rows.len(), r.rows.len());
+        for (a, b) in r.rows.iter().zip(&parsed.rows) {
+            assert_eq!(a.dataset, b.dataset);
+            assert_eq!(a.variant, b.variant);
+            assert_eq!(a.iterations, b.iterations);
+            assert_eq!(a.vertex_updates, b.vertex_updates);
+            assert_eq!(a.converged, b.converged);
+            if a.rel.is_finite() {
+                assert!((a.rel - b.rel).abs() < 1e-9 * a.rel.abs().max(1.0));
+            } else {
+                assert!(!b.rel.is_finite(), "null rel must parse back non-finite");
+            }
+        }
+    }
+
+    #[test]
+    fn self_comparison_passes_and_regressions_trip() {
+        let r = tiny_report();
+        assert!(compare(&r, &r, 0.25).is_empty(), "a run must not regress vs itself");
+
+        // manufacture a 2x normalized-time regression and a convergence loss
+        let mut bad = r.clone();
+        if let Some(row) = bad.rows.iter_mut().find(|x| x.variant == "No-Sync") {
+            row.rel = row.rel * 2.0 + 1.0;
+        }
+        if let Some(row) = bad.rows.iter_mut().find(|x| x.variant == "Frontier") {
+            row.converged = false;
+        }
+        let msgs = compare(&bad, &r, 0.25);
+        assert!(
+            msgs.iter().any(|m| m.contains("No-Sync") && m.contains("normalized time")),
+            "{msgs:?}"
+        );
+        assert!(
+            msgs.iter().any(|m| m.contains("Frontier") && m.contains("no longer converges")),
+            "{msgs:?}"
+        );
+    }
+
+    #[test]
+    fn mismatched_scale_skips_gating() {
+        let r = tiny_report();
+        let mut other = r.clone();
+        other.scale *= 2;
+        if let Some(row) = other.rows.iter_mut().find(|x| x.variant == "No-Sync") {
+            row.rel = row.rel * 10.0 + 5.0; // would trip the gate if compared
+        }
+        assert!(!comparable(&other, &r), "different scale must be incomparable");
+        assert!(compare(&other, &r, 0.25).is_empty());
+    }
+
+    #[test]
+    fn empty_baseline_gates_nothing() {
+        let r = tiny_report();
+        let empty = BenchReport {
+            schema: SCHEMA_VERSION,
+            scale: 0,
+            threads: 0,
+            samples: 0,
+            host: String::new(),
+            rows: Vec::new(),
+        };
+        assert!(compare(&r, &empty, 0.25).is_empty());
+    }
+
+    #[test]
+    fn report_without_rows_key_is_rejected() {
+        assert!(BenchReport::from_json(r#"{"schema": 1}"#).is_err());
+        assert!(BenchReport::from_json(r#"{"schema": 1, "rows": {}}"#).is_err());
+        assert!(BenchReport::from_json(r#"{"schema": 1, "rows": []}"#).is_ok());
+    }
+
+    #[test]
+    fn parser_handles_escapes_and_rejects_garbage() {
+        let v = Json::parse(r#"{"a": "x\"y\n", "b": [1, 2.5e-3, true, null]}"#).unwrap();
+        let o = v.as_object().unwrap();
+        assert_eq!(o.get("a").and_then(Json::as_str), Some("x\"y\n"));
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("nope").is_err());
+    }
+}

@@ -74,6 +74,7 @@ impl Kernel for BarrierKernel<'_> {
             self.pr[u as usize].store(new);
         }
         ctx.metrics.add_edges(ctx.tid, edges);
+        ctx.metrics.add_gathered(ctx.tid, self.parts.range(ctx.tid).len() as u64);
         thr_err
     }
 

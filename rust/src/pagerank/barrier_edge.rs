@@ -91,6 +91,7 @@ impl Kernel for BarrierEdgeKernel<'_> {
             thr_err = thr_err.max((prev - new).abs());
         }
         ctx.metrics.add_edges(ctx.tid, edges);
+        ctx.metrics.add_gathered(ctx.tid, self.parts.range(ctx.tid).len() as u64);
         thr_err
     }
 

@@ -142,6 +142,8 @@ impl Kernel for IdenticalKernel<'_> {
                 self.pr[m as usize].store(new);
             }
         }
+        // one rank computation per class — the STIC-D savings show up here
+        ctx.metrics.add_gathered(ctx.tid, self.chunks[ctx.tid].len() as u64);
         local_err
     }
 

@@ -18,6 +18,8 @@
 //! | `NoSyncOpt`            | 5   | `perforation`           | NonBlocking              | node + thread            |
 //! | `NoSyncOptIdentical`   | 5+[11] | `perforation`        | NonBlocking              | node + thread            |
 //! | `Pcpm`                 | —   | `engine::pcpm`          | Blocking + pre-scatter   | algorithm                |
+//! | `Frontier`             | —   | `engine::frontier`      | NonBlocking (frontier)   | thread                   |
+//! | `FrontierPcpm`         | —   | `engine::frontier`      | NonBlocking (frontier)   | thread                   |
 //! | `XlaBlock`             | —   | `xla_block` (no kernel) | — (PJRT engine)          | algorithm                |
 //!
 //! The kernel supplies `scatter`/`gather`/`commit` hooks; the engine owns
@@ -61,6 +63,14 @@ pub enum Variant {
     /// Partition-centric scatter-gather (Lakhotia et al.) — ours, on top of
     /// the unified engine; not one of the paper's programs.
     Pcpm,
+    /// Frontier/delta-scheduled non-blocking kernel (delayed-async per
+    /// Blanco et al., arXiv:2110.01409): gathers only vertices whose
+    /// in-neighbourhood changed by more than the delta threshold. Ours.
+    Frontier,
+    /// Frontier scheduling with PCPM-style propagation: changed vertices
+    /// scatter their contribution through the partition bins instead of
+    /// readers pulling the full rank array. Ours.
+    FrontierPcpm,
     XlaBlock,
 }
 
@@ -82,8 +92,8 @@ impl Variant {
     ];
 
     /// Every engine-dispatched mode: the paper's eleven CPU variants plus
-    /// the partition-centric mode.
-    pub const ALL_MODES: [Variant; 12] = [
+    /// the partition-centric and frontier/delta modes.
+    pub const ALL_MODES: [Variant; 14] = [
         Variant::Sequential,
         Variant::Barrier,
         Variant::BarrierIdentical,
@@ -96,6 +106,8 @@ impl Variant {
         Variant::NoSyncOpt,
         Variant::NoSyncOptIdentical,
         Variant::Pcpm,
+        Variant::Frontier,
+        Variant::FrontierPcpm,
     ];
 
     /// The paper's parallel variants (everything CPU but `Sequential`).
@@ -103,10 +115,11 @@ impl Variant {
         Self::ALL_CPU.into_iter().filter(|v| *v != Variant::Sequential)
     }
 
-    /// Parallel variants plus the partition-centric mode — what the harness
-    /// sweeps so every variant×dataset experiment also covers PCPM.
+    /// Parallel variants plus the engine-native modes (partition-centric
+    /// and frontier/delta) — what the harness sweeps so every
+    /// variant×dataset experiment also covers them.
     pub fn parallel_modes() -> impl Iterator<Item = Variant> {
-        Self::parallel_cpu().chain(std::iter::once(Variant::Pcpm))
+        Self::parallel_cpu().chain([Variant::Pcpm, Variant::Frontier, Variant::FrontierPcpm])
     }
 
     /// Does this variant use barriers (blocking synchronization)?
@@ -131,6 +144,8 @@ impl Variant {
                 | Variant::NoSyncEdge
                 | Variant::NoSyncOpt
                 | Variant::NoSyncOptIdentical
+                | Variant::Frontier
+                | Variant::FrontierPcpm
         )
     }
 
@@ -157,6 +172,8 @@ impl Variant {
             Variant::NoSyncOpt => "No-Sync-Opt",
             Variant::NoSyncOptIdentical => "No-Sync-Opt-Identical",
             Variant::Pcpm => "PCPM",
+            Variant::Frontier => "Frontier",
+            Variant::FrontierPcpm => "Frontier-PCPM",
             Variant::XlaBlock => "XLA-Block",
         }
     }
@@ -176,6 +193,8 @@ impl Variant {
             "no-sync-opt" | "nosync-opt" => Variant::NoSyncOpt,
             "no-sync-opt-identical" | "nosync-opt-identical" => Variant::NoSyncOptIdentical,
             "pcpm" | "partition-centric" => Variant::Pcpm,
+            "frontier" | "delta" | "frontier-delta" => Variant::Frontier,
+            "frontier-pcpm" | "delta-pcpm" => Variant::FrontierPcpm,
             "xla-block" | "xla" => Variant::XlaBlock,
             _ => bail!("unknown variant '{s}'"),
         })
@@ -207,6 +226,12 @@ pub struct PrConfig {
     /// below `threshold * perforation_factor` is frozen (Alg 5 uses
     /// `threshold * 1e-5`, i.e. the paper's `1e-21` at threshold `1e-16`).
     pub perforation_factor: f64,
+    /// Frontier scheduling push cutoff: a vertex re-marks its out-neighbours
+    /// only when its rank moved more than this since its last push. `0.0`
+    /// (the default) means "derive from the convergence threshold" — see
+    /// [`PrConfig::resolved_delta_threshold`]. Only the `Frontier*` variants
+    /// read it. CLI: `--delta-threshold`.
+    pub delta_threshold: f64,
     /// Synthetic extra work per edge (spin iterations through
     /// `std::hint::black_box`) so scheduling effects dominate on hosts with
     /// fewer cores than the paper's 56; numerics are unaffected. 0 = off.
@@ -227,6 +252,7 @@ impl Default for PrConfig {
             threads: 4,
             partition: PartitionPolicy::VertexBalanced,
             perforation_factor: 1e-5,
+            delta_threshold: 0.0,
             work_amplify: 0,
             faults: FaultPlan::none(),
             dnf_timeout: None,
@@ -249,7 +275,23 @@ impl PrConfig {
             // Wait-free global descriptor uses a 64-bit completion bitmask.
             bail!("at most 64 threads supported");
         }
+        if !self.delta_threshold.is_finite() || self.delta_threshold < 0.0 {
+            bail!("delta-threshold must be a finite non-negative number");
+        }
         Ok(())
+    }
+
+    /// The effective frontier push cutoff: the explicit `delta_threshold`
+    /// when set, else `threshold / 10`. Keeping the cutoff a decade under
+    /// the convergence threshold bounds the un-propagated residual per
+    /// vertex by `delta / (1 - d)` — far inside the accuracy the
+    /// equivalence tests demand (L1 ≤ 1e-6 vs the barrier schedule).
+    pub fn resolved_delta_threshold(&self) -> f64 {
+        if self.delta_threshold > 0.0 {
+            self.delta_threshold
+        } else {
+            self.threshold * 0.1
+        }
     }
 }
 
@@ -268,6 +310,10 @@ pub struct PrResult {
     pub converged: bool,
     /// Total thread-seconds spent waiting at barriers (0 for non-blocking).
     pub barrier_wait_secs: f64,
+    /// Total vertex updates computed across all threads — the work metric
+    /// frontier/delta scheduling reduces. `0` for kernels that don't
+    /// instrument their gather (see `RunMetrics::add_gathered`).
+    pub vertex_updates: u64,
     /// Was the run aborted by the watchdog (thread failure wedged it)?
     pub dnf: bool,
 }
@@ -284,6 +330,7 @@ impl PrResult {
             elapsed: Duration::ZERO,
             converged: true,
             barrier_wait_secs: 0.0,
+            vertex_updates: 0,
             dnf: false,
         }
     }
@@ -362,6 +409,10 @@ mod tests {
         assert_eq!(Variant::parse("pcpm").unwrap(), Variant::Pcpm);
         assert_eq!(Variant::parse("partition-centric").unwrap(), Variant::Pcpm);
         assert_eq!(Variant::parse("partition_centric").unwrap(), Variant::Pcpm);
+        assert_eq!(Variant::parse("frontier").unwrap(), Variant::Frontier);
+        assert_eq!(Variant::parse("delta").unwrap(), Variant::Frontier);
+        assert_eq!(Variant::parse("frontier-pcpm").unwrap(), Variant::FrontierPcpm);
+        assert_eq!(Variant::parse("frontier_pcpm").unwrap(), Variant::FrontierPcpm);
         assert_eq!(Variant::parse("xla").unwrap(), Variant::XlaBlock);
         assert!(Variant::parse("bogus").is_err());
     }
@@ -378,9 +429,12 @@ mod tests {
         assert!(Variant::Pcpm.is_blocking());
         assert!(Variant::NoSync.is_non_blocking());
         assert!(Variant::WaitFree.is_non_blocking());
+        assert!(Variant::Frontier.is_non_blocking());
+        assert!(Variant::FrontierPcpm.is_non_blocking());
         assert!(Variant::NoSyncOpt.is_approximate());
         assert!(!Variant::NoSync.is_approximate());
         assert!(!Variant::Pcpm.is_approximate());
+        assert!(!Variant::Frontier.is_approximate());
     }
 
     #[test]
@@ -396,8 +450,21 @@ mod tests {
     fn all_cpu_lists_eleven() {
         assert_eq!(Variant::ALL_CPU.len(), 11);
         assert_eq!(Variant::parallel_cpu().count(), 10);
-        assert_eq!(Variant::ALL_MODES.len(), 12);
-        assert_eq!(Variant::parallel_modes().count(), 11);
+        assert_eq!(Variant::ALL_MODES.len(), 14);
+        assert_eq!(Variant::parallel_modes().count(), 13);
+    }
+
+    #[test]
+    fn delta_threshold_validation_and_resolution() {
+        let auto = PrConfig::default();
+        assert!(auto.validate().is_ok());
+        assert!((auto.resolved_delta_threshold() - auto.threshold * 0.1).abs() < 1e-30);
+        let explicit = PrConfig { delta_threshold: 1e-4, ..PrConfig::default() };
+        assert_eq!(explicit.resolved_delta_threshold(), 1e-4);
+        assert!(PrConfig { delta_threshold: -1.0, ..PrConfig::default() }.validate().is_err());
+        assert!(
+            PrConfig { delta_threshold: f64::NAN, ..PrConfig::default() }.validate().is_err()
+        );
     }
 
     #[test]
@@ -410,6 +477,7 @@ mod tests {
             elapsed: Duration::ZERO,
             converged: false,
             barrier_wait_secs: 0.0,
+            vertex_updates: 0,
             dnf: false,
         };
         let top = r.top_k(3);

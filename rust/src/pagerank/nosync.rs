@@ -79,6 +79,7 @@ impl Kernel for NoSyncKernel<'_> {
             local_err = local_err.max((new - previous).abs());
         }
         ctx.metrics.add_edges(ctx.tid, edges);
+        ctx.metrics.add_gathered(ctx.tid, self.parts.range(ctx.tid).len() as u64);
         local_err
     }
 

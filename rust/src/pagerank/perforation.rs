@@ -124,6 +124,8 @@ impl Kernel for PerforatedKernel<'_> {
             }
         }
         ctx.metrics.add_skipped(ctx.tid, skipped);
+        ctx.metrics
+            .add_gathered(ctx.tid, self.parts.range(ctx.tid).len() as u64 - skipped);
         local_err
     }
 
@@ -190,11 +192,13 @@ impl Kernel for PerforatedIdenticalKernel<'_> {
     fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
         let mut local_err: f64 = 0.0;
         let mut skipped = 0u64;
+        let mut gathered = 0u64;
         for c in self.chunks[ctx.tid].clone() {
             if self.frozen[c].load(Ordering::Relaxed) {
                 skipped += self.classes.members[c].len() as u64;
                 continue;
             }
+            gathered += 1;
             let rep = self.classes.representatives[c];
             let previous = self.pr[rep as usize].load();
             let mut sum = 0.0;
@@ -213,6 +217,7 @@ impl Kernel for PerforatedIdenticalKernel<'_> {
             }
         }
         ctx.metrics.add_skipped(ctx.tid, skipped);
+        ctx.metrics.add_gathered(ctx.tid, gathered);
         local_err
     }
 

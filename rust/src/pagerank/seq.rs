@@ -10,7 +10,6 @@ use crate::engine::{Kernel, SyncMode, WorkerCtx};
 use crate::graph::{Csr, Partitions, VertexId};
 use crate::pagerank::{PrConfig, PrResult, Variant};
 use anyhow::Result;
-use std::time::Instant;
 
 /// The Sequential "kernel": [`SyncMode::Sequential`] hands the whole solve
 /// back to [`solve`], keeping the oracle bit-stable while still dispatching
@@ -47,20 +46,10 @@ impl Kernel for SequentialKernel<'_> {
     }
 }
 
-/// Run the sequential baseline.
+/// Run the sequential baseline. Thin wrapper over the engine dispatch —
+/// the `PrResult` assembly lives in one place (`driver::run_sequential`).
 pub fn run(g: &Csr, cfg: &PrConfig) -> PrResult {
-    let start = Instant::now();
-    let (ranks, iterations, converged) = solve(g, cfg);
-    PrResult {
-        variant: Variant::Sequential,
-        ranks,
-        iterations,
-        per_thread_iterations: vec![iterations],
-        elapsed: start.elapsed(),
-        converged,
-        barrier_wait_secs: 0.0,
-        dnf: false,
-    }
+    crate::pagerank::run(g, Variant::Sequential, cfg).expect("sequential dispatch")
 }
 
 /// Core solver, also used directly by tests and by the XLA-path comparison.

@@ -110,6 +110,7 @@ pub fn run(g: &Csr, cfg: &PrConfig, engine: &Engine) -> Result<PrResult> {
         elapsed: start.elapsed(),
         converged,
         barrier_wait_secs: 0.0,
+        vertex_updates: iterations * n as u64,
         dnf: false,
     })
 }

@@ -1,0 +1,217 @@
+//! Lock-free per-vertex dirty bitmap — the frontier substrate for the
+//! delta-scheduled kernels ([`crate::engine::frontier`]).
+//!
+//! One bit per vertex, packed into `AtomicU64` words. Writers (any thread
+//! whose rank moved past the delta threshold) mark a vertex's out-neighbours
+//! with [`DirtyFlags::set`]; the partition owner drains its own vertex range
+//! with [`DirtyFlags::drain_range`], which claims every set bit in a word
+//! with a single `fetch_and` — so a drain and concurrent sets never lose an
+//! update: a bit set after the claim simply survives into the next sweep.
+//!
+//! Memory ordering: `set` is an `AcqRel` read-modify-write, so the rank
+//! stores a publisher issued *before* marking are visible to the owner that
+//! subsequently claims the bit (`drain_range` claims with `AcqRel` too; RMW
+//! chains extend the release sequence). Rank cells themselves stay relaxed,
+//! exactly like the No-Sync family — a stale read only delays, never
+//! corrupts, convergence (Lemma 1 of the source paper).
+
+use crate::graph::VertexId;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A fixed-capacity atomic bitmap over vertex ids `0..len`.
+pub struct DirtyFlags {
+    words: Vec<AtomicU64>,
+    len: usize,
+}
+
+impl DirtyFlags {
+    /// All bits clear.
+    pub fn new_clear(len: usize) -> Self {
+        let words = (0..len.div_ceil(64)).map(|_| AtomicU64::new(0)).collect();
+        Self { words, len }
+    }
+
+    /// All `len` bits set (the initial frontier: every vertex is dirty).
+    /// Bits past `len` in the last word stay clear so counts are exact.
+    pub fn new_set(len: usize) -> Self {
+        let full = len / 64;
+        let tail = len % 64;
+        let mut words: Vec<AtomicU64> = (0..full).map(|_| AtomicU64::new(!0)).collect();
+        if tail > 0 {
+            words.push(AtomicU64::new((1u64 << tail) - 1));
+        }
+        Self { words, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Mark vertex `v` dirty. Returns `true` if this call set the bit (it
+    /// was clear), `false` if it was already set.
+    ///
+    /// Test-and-test-and-set: hub vertices get re-marked by many pushers
+    /// every sweep, and skipping the exclusive-ownership RMW when the bit
+    /// is already visible keeps those words from ping-ponging. The plain
+    /// load may race with a concurrent drain; that only costs one extra
+    /// `fetch_or`, never a lost mark.
+    #[inline]
+    pub fn set(&self, v: VertexId) -> bool {
+        let (w, bit) = (v as usize / 64, 1u64 << (v as usize % 64));
+        if self.words[w].load(Ordering::Relaxed) & bit != 0 {
+            return false;
+        }
+        self.words[w].fetch_or(bit, Ordering::AcqRel) & bit == 0
+    }
+
+    /// Is vertex `v` currently marked?
+    #[inline]
+    pub fn is_set(&self, v: VertexId) -> bool {
+        let (w, bit) = (v as usize / 64, 1u64 << (v as usize % 64));
+        self.words[w].load(Ordering::Acquire) & bit != 0
+    }
+
+    /// Number of set bits (diagnostics / tests; O(len / 64)).
+    pub fn count_set(&self) -> usize {
+        self.words
+            .iter()
+            .map(|w| w.load(Ordering::Acquire).count_ones() as usize)
+            .sum()
+    }
+
+    /// Claim-and-visit every set bit in `range`, in ascending order.
+    ///
+    /// Claims all of a word's in-range bits with one `fetch_and`, then calls
+    /// `f` for each claimed vertex. Bits set concurrently after the claim
+    /// are untouched and will be seen by the next drain. Returns the number
+    /// of vertices visited. Zero-scan words cost one load.
+    pub fn drain_range(&self, range: Range<VertexId>, mut f: impl FnMut(VertexId)) -> u64 {
+        let (start, end) = (range.start as usize, range.end as usize);
+        if start >= end {
+            return 0;
+        }
+        let mut visited = 0u64;
+        let first_word = start / 64;
+        let last_word = (end - 1) / 64;
+        for w in first_word..=last_word {
+            let lo = (w * 64).max(start);
+            let hi = ((w + 1) * 64).min(end);
+            let width = hi - lo;
+            let mask: u64 = if width == 64 {
+                !0
+            } else {
+                ((1u64 << width) - 1) << (lo - w * 64)
+            };
+            if self.words[w].load(Ordering::Acquire) & mask == 0 {
+                continue; // fast path: nothing pending in this word
+            }
+            let mut claimed = self.words[w].fetch_and(!mask, Ordering::AcqRel) & mask;
+            while claimed != 0 {
+                let b = claimed.trailing_zeros() as usize;
+                claimed &= claimed - 1;
+                visited += 1;
+                f((w * 64 + b) as VertexId);
+            }
+        }
+        visited
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn new_set_counts_exactly_len() {
+        for n in [0usize, 1, 63, 64, 65, 130] {
+            let d = DirtyFlags::new_set(n);
+            assert_eq!(d.count_set(), n, "n={n}");
+            assert_eq!(d.len(), n);
+        }
+        assert!(DirtyFlags::new_set(0).is_empty());
+    }
+
+    #[test]
+    fn set_reports_transition() {
+        let d = DirtyFlags::new_clear(100);
+        assert!(!d.is_set(70));
+        assert!(d.set(70));
+        assert!(!d.set(70), "second set must report already-set");
+        assert!(d.is_set(70));
+        assert_eq!(d.count_set(), 1);
+    }
+
+    #[test]
+    fn drain_visits_only_the_range_in_order() {
+        let d = DirtyFlags::new_set(200);
+        let mut seen = Vec::new();
+        let n = d.drain_range(60..130, |v| seen.push(v));
+        assert_eq!(n, 70);
+        assert_eq!(seen, (60u32..130).collect::<Vec<_>>());
+        // outside the range untouched, inside cleared
+        assert!(d.is_set(59));
+        assert!(d.is_set(130));
+        assert!(!d.is_set(60));
+        assert!(!d.is_set(129));
+        assert_eq!(d.count_set(), 130);
+        assert_eq!(d.drain_range(60..130, |_| ()), 0);
+    }
+
+    #[test]
+    fn drain_empty_range_is_zero() {
+        let d = DirtyFlags::new_set(64);
+        assert_eq!(d.drain_range(10..10, |_| panic!("must not visit")), 0);
+    }
+
+    #[test]
+    fn concurrent_sets_are_never_lost() {
+        // Setters mark every vertex once; a draining owner sweeps its range
+        // until quiet. Every marked vertex must be drained exactly once.
+        let n = 4096usize;
+        let d = Arc::new(DirtyFlags::new_clear(n));
+        let drained = Arc::new(
+            (0..n).map(|_| std::sync::atomic::AtomicU64::new(0)).collect::<Vec<_>>(),
+        );
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let d = Arc::clone(&d);
+                s.spawn(move || {
+                    let mut v = t;
+                    while v < n {
+                        d.set(v as VertexId);
+                        v += 4;
+                    }
+                });
+            }
+            for half in 0..2 {
+                let d = Arc::clone(&d);
+                let drained = Arc::clone(&drained);
+                s.spawn(move || {
+                    let range = (half * n / 2) as VertexId..((half + 1) * n / 2) as VertexId;
+                    let mut total = 0u64;
+                    while total < (n / 2) as u64 {
+                        total += d.drain_range(range.clone(), |v| {
+                            drained[v as usize]
+                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        });
+                        std::thread::yield_now();
+                    }
+                });
+            }
+        });
+        for (v, c) in drained.iter().enumerate() {
+            assert_eq!(
+                c.load(std::sync::atomic::Ordering::Relaxed),
+                1,
+                "vertex {v} drained wrong number of times"
+            );
+        }
+        assert_eq!(d.count_set(), 0);
+    }
+}

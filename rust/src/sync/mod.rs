@@ -12,6 +12,9 @@
 //!   paper's benign-race `vector<double>` reads/writes.
 //! * [`cas_cell`] — the versioned rank cells and CAS-object protocol used by
 //!   the wait-free Barrier-Helper algorithm (Algorithm 6).
+//! * [`dirty::DirtyFlags`] — a lock-free per-vertex dirty bitmap, the
+//!   frontier substrate of the delta-scheduled kernels (ours, after Blanco
+//!   et al.'s delayed-async scheduling; not a paper primitive).
 //!
 //! The [`RankCell`] and [`PhaseBarrier`] traits are the engine-facing
 //! surface: [`crate::engine`] snapshots rank storage and reads barrier
@@ -21,6 +24,7 @@
 pub mod atomics;
 pub mod barrier;
 pub mod cas_cell;
+pub mod dirty;
 
 /// Engine-facing view of one rank cell. Implemented by the plain
 /// [`atomics::AtomicF64`] and by the wait-free

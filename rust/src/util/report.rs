@@ -38,15 +38,20 @@ impl Cell {
         match self {
             Cell::Str(s) => json_escape(s),
             Cell::Int(i) => i.to_string(),
-            Cell::Float(x) => {
-                if x.is_finite() {
-                    format!("{x}")
-                } else {
-                    "null".to_string()
-                }
-            }
+            Cell::Float(x) => json_f64(*x),
             Cell::Dnf => "\"DNF\"".to_string(),
         }
+    }
+}
+
+/// JSON number formatting for `f64`: Display (shortest round-trip) when
+/// finite, `null` otherwise — JSON has no Infinity/NaN literals. Shared
+/// with the benchmark trajectory writer ([`crate::harness::trajectory`]).
+pub(crate) fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
     }
 }
 
@@ -80,7 +85,9 @@ impl From<f64> for Cell {
     }
 }
 
-fn json_escape(s: &str) -> String {
+/// Quote + escape a string for JSON output (shared with the benchmark
+/// trajectory writer in [`crate::harness::trajectory`]).
+pub(crate) fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {

@@ -23,6 +23,8 @@ fn exact_modes() -> Vec<Variant> {
         Variant::NoSync,
         Variant::NoSyncIdentical,
         Variant::Pcpm,
+        Variant::Frontier,
+        Variant::FrontierPcpm,
     ]
 }
 
@@ -113,6 +115,32 @@ fn pcpm_matches_barrier_schedule_on_random_graphs() {
                     < 1e-12
         },
     );
+}
+
+/// The acceptance criterion of the frontier/delta schedule: on a web-class
+/// dataset the frontier kernel must land within 1e-6 L1 of the Barrier
+/// schedule's ranks while computing strictly fewer vertex updates than
+/// No-Sync's gather-everything sweeps.
+#[test]
+fn frontier_matches_barrier_with_fewer_vertex_updates() {
+    let g = synthetic::web_replica(2_000, 6, 42);
+    let cfg = PrConfig { threads: 4, threshold: 1e-10, ..PrConfig::default() };
+    let barrier = pagerank::run(&g, Variant::Barrier, &cfg).unwrap();
+    let nosync = pagerank::run(&g, Variant::NoSync, &cfg).unwrap();
+    assert!(barrier.converged && nosync.converged);
+    assert!(nosync.vertex_updates > 0, "No-Sync must be instrumented");
+    for v in [Variant::Frontier, Variant::FrontierPcpm] {
+        let r = pagerank::run(&g, v, &cfg).unwrap();
+        assert!(r.converged, "{v} did not converge");
+        let l1 = r.l1_norm(&barrier.ranks);
+        assert!(l1 < 1e-6, "{v}: L1 vs barrier {l1}");
+        assert!(
+            r.vertex_updates < nosync.vertex_updates,
+            "{v} gathered {} vertex updates, No-Sync {}",
+            r.vertex_updates,
+            nosync.vertex_updates
+        );
+    }
 }
 
 /// The XlaBlock-excluded dispatch path: the engine registry rejects it with

@@ -30,6 +30,8 @@ fn run_all_variant_names_parse_via_cli() {
         "no-sync-opt-identical",
         "pcpm",
         "partition-centric",
+        "frontier",
+        "frontier-pcpm",
     ] {
         cli::dispatch(&argv(&[
             "run", "--graph", "cycle:60", "--algo", algo, "--threads", "2",
@@ -44,6 +46,54 @@ fn mode_flag_runs_partition_centric() {
         "run", "--graph", "web:600:5", "--mode", "pcpm", "--threads", "3", "--top", "3",
     ]))
     .expect("--mode pcpm should run");
+}
+
+#[test]
+fn mode_flag_runs_frontier_with_delta_threshold() {
+    cli::dispatch(&argv(&[
+        "run", "--graph", "web:600:5", "--mode", "frontier", "--threads", "3",
+        "--delta-threshold", "1e-9", "--top", "3",
+    ]))
+    .expect("--mode frontier should run");
+    cli::dispatch(&argv(&[
+        "run", "--graph", "web:600:5", "--mode", "frontier-pcpm", "--threads", "3",
+    ]))
+    .expect("--mode frontier-pcpm should run");
+    cli::dispatch(&argv(&[
+        "run", "--graph", "cycle:20", "--mode", "frontier", "--delta-threshold", "-1",
+    ]))
+    .expect_err("negative delta threshold must be rejected");
+}
+
+#[test]
+fn bench_ci_writes_report_and_gates_against_itself() {
+    // per-process dir: concurrent `cargo test` runs must not race on files
+    let dir = std::env::temp_dir()
+        .join(format!("pagerank_nb_cli_bench_ci_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("BENCH_ci.json");
+    let base = dir.join("BENCH_baseline.json");
+    let _ = std::fs::remove_file(&out);
+    let _ = std::fs::remove_file(&base);
+    // bootstrap: no baseline yet — must still write the report and pass
+    cli::dispatch(&argv(&[
+        "bench-ci", "--scale", "20000", "--threads", "2", "--samples", "1",
+        "--out", out.to_str().unwrap(), "--baseline", base.to_str().unwrap(),
+    ]))
+    .expect("bench-ci bootstrap run");
+    let text = std::fs::read_to_string(&out).expect("report written");
+    assert!(text.contains("\"Frontier\""), "report must cover the frontier variant");
+    assert!(text.contains("\"PCPM\""));
+    // Gate a fresh run against the first run's report. Tiny-graph timings
+    // jitter (thread spawn dominates), so give the gate a wide budget —
+    // this asserts the comparison machinery runs, not timing stability.
+    std::fs::copy(&out, &base).unwrap();
+    cli::dispatch(&argv(&[
+        "bench-ci", "--scale", "20000", "--threads", "2", "--samples", "1",
+        "--max-regress", "25",
+        "--out", out.to_str().unwrap(), "--baseline", base.to_str().unwrap(),
+    ]))
+    .expect("bench-ci gate vs own baseline");
 }
 
 #[test]

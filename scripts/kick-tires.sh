@@ -1,9 +1,11 @@
 #!/usr/bin/env bash
 # Kick the tires: build the release binary and smoke-run one tiny graph
-# through every engine mode (the paper's eleven CPU variants plus the new
-# partition-centric `pcpm` mode), then cross-validate all of them against
-# the sequential oracle. Mirrors the related-repo kick-tires pattern:
-# fast, loud, and exercising every artifact a reviewer would touch.
+# through every engine mode (the paper's eleven CPU variants plus the
+# partition-centric `pcpm` and the frontier/delta modes), then
+# cross-validate all of them against the sequential oracle and smoke the
+# ablation tables (including the pcpm/frontier rows). Mirrors the
+# related-repo kick-tires pattern: fast, loud, and exercising every
+# artifact a reviewer would touch.
 #
 # Usage: ./scripts/kick-tires.sh [GRAPH_SPEC]
 #   GRAPH_SPEC defaults to web:800:6 (a ~800-vertex scale-free replica).
@@ -24,7 +26,7 @@ cargo build --release
 echo "── graph info ($GRAPH) ──"
 "$BIN" info --graph "$GRAPH"
 
-echo "── every variant + pcpm on $GRAPH ──"
+echo "── every variant + pcpm + frontier on $GRAPH ──"
 for algo in sequential barrier barrier-identical barrier-edge barrier-opt \
             wait-free no-sync no-sync-identical no-sync-edge no-sync-opt \
             no-sync-opt-identical; do
@@ -35,7 +37,18 @@ done
 echo "· pcpm (via --mode)"
 "$BIN" run --graph "$GRAPH" --mode pcpm --threads "$THREADS" --top 3
 
+echo "· frontier (via --mode, explicit delta threshold)"
+"$BIN" run --graph "$GRAPH" --mode frontier --threads "$THREADS" \
+    --delta-threshold 1e-11 --top 3
+
+echo "· frontier-pcpm (via --mode)"
+"$BIN" run --graph "$GRAPH" --mode frontier-pcpm --threads "$THREADS" --top 3
+
 echo "── cross-validation against the sequential oracle ──"
 "$BIN" validate --graph "$GRAPH" --threads "$THREADS"
+
+echo "── ablation smoke (partition-policy and scheduling rows) ──"
+PAGERANK_NB_SCALE="${ABLATION_SCALE:-20000}" "$BIN" bench ablation \
+    --threads 2 --samples 1 --out "${ABLATION_OUT:-reports/kick-tires}"
 
 echo "Kick tires passed."
