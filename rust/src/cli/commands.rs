@@ -7,7 +7,7 @@ use crate::graph::synthetic::{self, table1};
 use crate::graph::{io, Csr, PartitionPolicy};
 use crate::harness::bench::BenchRunner;
 use crate::harness::experiments::{self, Ctx, ALL_EXPERIMENTS};
-use crate::pagerank::{self, PrConfig, Variant};
+use crate::pagerank::{self, PcpmLayout, PrConfig, Variant};
 use crate::util::fmt;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -59,6 +59,10 @@ fn config_from_args(args: &ArgMap) -> Result<PrConfig> {
         "edge" => PartitionPolicy::EdgeBalanced,
         other => bail!("--partition must be vertex|edge, got '{other}'"),
     };
+    let pcpm_layout = match args.get("pcpm-layout") {
+        None => PcpmLayout::Compressed,
+        Some(s) => PcpmLayout::parse(s)?,
+    };
     Ok(PrConfig {
         damping: args.get_parsed("damping", crate::DAMPING)?,
         threshold: args.get_parsed("threshold", crate::DEFAULT_THRESHOLD)?,
@@ -67,6 +71,9 @@ fn config_from_args(args: &ArgMap) -> Result<PrConfig> {
         partition,
         // frontier/delta push cutoff; 0 = derive from the threshold
         delta_threshold: args.get_parsed("delta-threshold", 0.0f64)?,
+        // partition-centric knobs: source-partition batch + bin layout
+        pcpm_batch: args.get_parsed("pcpm-batch", 1usize)?,
+        pcpm_layout,
         ..PrConfig::default()
     })
 }
@@ -98,6 +105,18 @@ pub fn cmd_run(args: &ArgMap) -> Result<()> {
     let g = load_graph(args.require("graph")?, seed)?;
     let variant = variant_from_args(args)?;
     let cfg = config_from_args(args)?;
+    if cfg.pcpm_batch > 1 && variant != Variant::Pcpm {
+        eprintln!(
+            "note: --pcpm-batch only affects --mode pcpm; ignored for {variant}"
+        );
+    }
+    if cfg.pcpm_layout != PcpmLayout::Compressed
+        && !matches!(variant, Variant::Pcpm | Variant::FrontierPcpm)
+    {
+        eprintln!(
+            "note: --pcpm-layout only affects the pcpm modes; ignored for {variant}"
+        );
+    }
     println!(
         "graph '{}': {} vertices, {} edges · {} · {} threads",
         g.name,
@@ -214,14 +233,43 @@ pub fn cmd_bench_ci(args: &ArgMap) -> Result<()> {
 
     if let Some(baseline_path) = args.get("baseline") {
         let max_regress = args.get_parsed("max-regress", 0.25f64)?;
-        if !Path::new(baseline_path).exists() {
-            eprintln!("baseline {baseline_path} not found — gate skipped (bootstrap run?)");
+        let baseline = if Path::new(baseline_path).exists() {
+            let text = std::fs::read_to_string(baseline_path)
+                .with_context(|| format!("reading {baseline_path}"))?;
+            Some(
+                BenchReport::from_json(&text)
+                    .with_context(|| format!("parsing {baseline_path}"))?,
+            )
+        } else {
+            None
+        };
+        // Bootstrap: no rows to hold this run against. With
+        // `--seed-baseline` the just-measured report becomes the baseline
+        // (written in place for the operator / CI artifact to commit), so
+        // the gate stops passing vacuously on the very next run.
+        let bootstrap = match &baseline {
+            None => true,
+            Some(b) => b.rows.is_empty(),
+        };
+        if bootstrap {
+            if args.has("seed-baseline") {
+                std::fs::write(baseline_path, report.to_json())
+                    .with_context(|| format!("seeding {baseline_path}"))?;
+                eprintln!(
+                    "baseline {baseline_path} seeded from this run ({} rows) — \
+                     commit it to arm the regression gate (docs/benchmarking.md)",
+                    report.rows.len()
+                );
+            } else {
+                eprintln!(
+                    "baseline {baseline_path} is {} — gate skipped (bootstrap; \
+                     re-run with --seed-baseline to seed it from this run)",
+                    if baseline.is_some() { "empty" } else { "missing" }
+                );
+            }
             return Ok(());
         }
-        let text = std::fs::read_to_string(baseline_path)
-            .with_context(|| format!("reading {baseline_path}"))?;
-        let baseline = BenchReport::from_json(&text)
-            .with_context(|| format!("parsing {baseline_path}"))?;
+        let baseline = baseline.expect("non-empty baseline checked above");
         if !trajectory::comparable(&report, &baseline) {
             eprintln!(
                 "baseline {baseline_path} was recorded at scale 1/{}, {} threads \
@@ -424,6 +472,26 @@ mod tests {
         assert_eq!(cfg.resolved_delta_threshold(), 1e-4);
         let b = ArgMap::parse(&[]).unwrap();
         assert_eq!(config_from_args(&b).unwrap().delta_threshold, 0.0);
+    }
+
+    #[test]
+    fn pcpm_flags_reach_config() {
+        let a = ArgMap::parse(&[
+            "--pcpm-batch".into(),
+            "4".into(),
+            "--pcpm-layout".into(),
+            "slots".into(),
+        ])
+        .unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.pcpm_batch, 4);
+        assert_eq!(cfg.pcpm_layout, PcpmLayout::Slots);
+        let defaults = config_from_args(&ArgMap::parse(&[]).unwrap()).unwrap();
+        assert_eq!(defaults.pcpm_batch, 1);
+        assert_eq!(defaults.pcpm_layout, PcpmLayout::Compressed);
+        let bad =
+            ArgMap::parse(&["--pcpm-layout".into(), "zip".into()]).unwrap();
+        assert!(config_from_args(&bad).is_err());
     }
 
     #[test]

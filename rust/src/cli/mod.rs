@@ -3,7 +3,7 @@
 //! ```text
 //! pagerank-nb run      --graph <src> --algo <variant> [--threads N] …
 //! pagerank-nb bench    <exp-id|all> [--out DIR]
-//! pagerank-nb bench-ci [--out FILE] [--baseline FILE] [--max-regress F]
+//! pagerank-nb bench-ci [--out FILE] [--baseline FILE] [--max-regress F] [--seed-baseline]
 //! pagerank-nb gen      (--all | --dataset NAME) --out DIR
 //! pagerank-nb info     --graph <src>
 //! pagerank-nb validate --graph <src> [--threads N]
@@ -55,10 +55,12 @@ USAGE:
                        [--threads N] [--threshold X] [--iters N]
                        [--partition vertex|edge] [--top K] [--damping D]
                        [--delta-threshold X]
+                       [--pcpm-batch B] [--pcpm-layout compressed|slots]
   pagerank-nb bench    <table1|fig1..fig9|xla|ablation|all> [--out DIR]
                        [--scale DIVISOR] [--threads N] [--samples N]
   pagerank-nb bench-ci [--out FILE] [--baseline FILE] [--max-regress F]
                        [--scale DIVISOR] [--threads N] [--samples N]
+                       [--seed-baseline]
   pagerank-nb gen      (--all | --dataset NAME) --out DIR [--scale DIVISOR]
   pagerank-nb info     --graph <src>
   pagerank-nb validate --graph <src> [--threads N]
@@ -70,8 +72,10 @@ GRAPH SOURCES:
 VARIANTS:
   sequential barrier barrier-identical barrier-edge barrier-opt wait-free
   no-sync no-sync-identical no-sync-edge no-sync-opt no-sync-opt-identical
-  pcpm (partition-centric scatter-gather; also via --mode pcpm)
-  frontier | frontier-pcpm (delta-scheduled gather; tune --delta-threshold)
+  pcpm (partition-centric scatter-gather on compressed bin streams;
+        tune --pcpm-batch / --pcpm-layout; also via --mode pcpm)
+  frontier | frontier-pcpm (delta-scheduled gather; tune --delta-threshold,
+        and --pcpm-layout for frontier-pcpm)
   xla-block (needs `make artifacts`)"
     );
 }

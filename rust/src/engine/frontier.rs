@@ -30,15 +30,18 @@
 //!   a dirty vertex re-reads its in-neighbours' ranks directly;
 //! * [`Variant::FrontierPcpm`](crate::pagerank::Variant::FrontierPcpm) —
 //!   PCPM propagation: a changed vertex scatters its contribution into the
-//!   [`PartitionBins`] slots of its out-edges, and a dirty vertex gathers by
-//!   summing its in-edge slots. Unlike `Variant::Pcpm`, which rescatters
-//!   every contribution every iteration, only *changed* vertices write —
-//!   the delta schedule applied to the scatter phase.
+//!   compressed [`CompressedBins`] value stream — one streaming store per
+//!   `(vertex, destination partition)` group, not per edge — and a dirty
+//!   vertex gathers by summing the value slots its in-edges map to
+//!   ([`CompressedBins::in_value_slots`]). Unlike `Variant::Pcpm`, which
+//!   rescatters every contribution every iteration, only *changed* vertices
+//!   write — the delta schedule applied to the scatter phase. The per-edge
+//!   baseline layout (`--pcpm-layout slots`) runs through the same code
+//!   path with a one-slot-per-edge value stream.
 
 use crate::engine::{inv_out_degrees, Kernel, SyncMode, WorkerCtx};
-use crate::graph::partition::PartitionBins;
-use crate::graph::{Csr, Partitions, VertexId};
-use crate::pagerank::{amplify_work, PrConfig};
+use crate::graph::{CompressedBins, Csr, Partitions, VertexId};
+use crate::pagerank::{amplify_work, PcpmLayout, PrConfig};
 use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
 use crate::sync::dirty::DirtyFlags;
 use anyhow::Result;
@@ -133,14 +136,16 @@ impl Kernel for FrontierKernel<'_> {
 pub struct FrontierPcpmKernel<'g> {
     g: &'g Csr,
     parts: Partitions,
-    bins: PartitionBins,
-    /// In-edge slot (index into the CSR in-edge array) → bin slot, so a
-    /// dirty vertex can gather its in-contributions straight from the bins.
-    in_slot_bins: Vec<usize>,
+    bins: CompressedBins,
+    /// In-edge slot (index into the CSR in-edge array) → value-stream slot,
+    /// so a dirty vertex can gather its in-contributions straight from the
+    /// value stream.
+    in_slots: Vec<usize>,
     inv_out: Vec<f64>,
     pr: Vec<AtomicF64>,
-    /// Per-edge contribution slots, grouped by (src, dst) partition.
-    bin_values: Vec<AtomicF64>,
+    /// Contribution value stream, grouped by (src, dst) partition — one
+    /// slot per value group (per edge under the `slots` baseline layout).
+    values: Vec<AtomicF64>,
     last_pushed: Vec<AtomicF64>,
     dirty: DirtyFlags,
     delta: f64,
@@ -157,28 +162,30 @@ pub fn pcpm_kernel<'g>(
     parts: &Partitions,
 ) -> Result<Box<dyn Kernel + 'g>> {
     let n = g.num_vertices();
-    let m = g.num_edges();
     let init = 1.0 / n as f64;
     let inv_out = inv_out_degrees(g);
-    let bins = PartitionBins::new(g, parts);
-    let in_slot_bins = bins.in_gather_slots(g);
-    // Seed every slot with its source's initial contribution (every vertex
-    // starts dirty, so the first sweeps read a fully-populated grid).
-    let bin_values = atomic_vec(m, 0.0);
+    let bins = match cfg.pcpm_layout {
+        PcpmLayout::Compressed => CompressedBins::new(g, parts),
+        PcpmLayout::Slots => CompressedBins::new_per_edge(g, parts),
+    };
+    let in_slots = bins.in_value_slots(g, parts);
+    // Seed every value slot with its source's initial contribution (every
+    // vertex starts dirty, so the first sweeps read a fully-populated grid).
+    let values = atomic_vec(bins.num_values(), 0.0);
     for u in 0..n as VertexId {
         let contribution = init * inv_out[u as usize];
-        for e in g.out_slot_range(u) {
-            bin_values[bins.scatter_slot(e)].store(contribution);
+        for &slot in bins.push_slots(u) {
+            values[slot].store(contribution);
         }
     }
     Ok(Box::new(FrontierPcpmKernel {
         g,
         parts: parts.clone(),
-        bins,
-        in_slot_bins,
+        in_slots,
         inv_out,
         pr: atomic_vec(n, init),
-        bin_values,
+        values,
+        bins,
         last_pushed: atomic_vec(n, init),
         dirty: DirtyFlags::new_set(n),
         delta: cfg.resolved_delta_threshold(),
@@ -198,7 +205,8 @@ impl Kernel for FrontierPcpmKernel<'_> {
     }
 
     /// One sweep over the partition's dirty vertices, gathering from the
-    /// bin slots and scattering changed contributions back through them.
+    /// value stream and scattering changed contributions back through it
+    /// (one store per value group — the compressed delta push).
     fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
         let mut local_err: f64 = 0.0;
         let mut edges = 0u64;
@@ -207,7 +215,7 @@ impl Kernel for FrontierPcpmKernel<'_> {
             let previous = self.pr[ui].load();
             let mut tmp = 0.0;
             for s in self.g.in_slot_range(u) {
-                tmp += self.bin_values[self.in_slot_bins[s]].load();
+                tmp += self.values[self.in_slots[s]].load();
                 amplify_work(self.work_amplify);
             }
             edges += self.g.in_degree(u) as u64;
@@ -219,8 +227,8 @@ impl Kernel for FrontierPcpmKernel<'_> {
             {
                 self.last_pushed[ui].store(new);
                 let contribution = new * self.inv_out[ui];
-                for e in self.g.out_slot_range(u) {
-                    self.bin_values[self.bins.scatter_slot(e)].store(contribution);
+                for &slot in self.bins.push_slots(u) {
+                    self.values[slot].store(contribution);
                 }
                 for &w in self.g.out_neighbors(u) {
                     self.dirty.set(w);
@@ -242,7 +250,7 @@ impl Kernel for FrontierPcpmKernel<'_> {
 #[cfg(test)]
 mod tests {
     use crate::graph::{synthetic, GraphBuilder, PartitionPolicy};
-    use crate::pagerank::{self, convergence, seq, PrConfig, Variant};
+    use crate::pagerank::{self, convergence, seq, PcpmLayout, PrConfig, Variant};
 
     fn cfg(threads: usize) -> PrConfig {
         PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }
@@ -356,6 +364,24 @@ mod tests {
         // delta / (1 - d) per vertex
         let (sr, _, _) = seq::solve(&g, &tight);
         assert!(rough.l1_norm(&sr) < 1e-1, "l1 {}", rough.l1_norm(&sr));
+    }
+
+    /// Both value-stream layouts (compressed groups and the per-edge
+    /// baseline) must land on the sequential fixed point — the delta
+    /// schedule only changes how many stores a push issues, not what a
+    /// gather sums.
+    #[test]
+    fn pcpm_layouts_both_converge() {
+        let g = synthetic::web_replica(700, 6, 31);
+        let base = cfg(4);
+        let (sr, _, _) = seq::solve(&g, &base);
+        for layout in [PcpmLayout::Compressed, PcpmLayout::Slots] {
+            let c = PrConfig { pcpm_layout: layout, ..base.clone() };
+            let r = pagerank::run(&g, Variant::FrontierPcpm, &c).unwrap();
+            assert!(r.converged, "{layout}");
+            let l1 = r.l1_norm(&sr);
+            assert!(l1 < 1e-7, "{layout}: l1 {l1}");
+        }
     }
 
     #[test]

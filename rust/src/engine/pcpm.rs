@@ -5,40 +5,59 @@
 //! — a random-access stream over the whole rank array. PCPM restructures an
 //! iteration around the partition grid instead:
 //!
-//! * **Scatter** — each thread streams its own partition's vertices once and
-//!   writes each contribution `pr(u)/outdeg(u)` into *update bins* grouped
-//!   by destination partition ([`PartitionBins`]); writes into one bin are
-//!   sequential, so the phase is insert-only streaming.
+//! * **Scatter** — each thread streams its own partitions' vertices once
+//!   and writes each contribution `pr(u)/outdeg(u)` into the *compressed
+//!   update bins* ([`CompressedBins`]): the destination indices are a
+//!   static `u32` stream built once from the CSR, so the runtime writes are
+//!   only the dense value stream — one streaming store per `(vertex,
+//!   destination partition)` group, no per-edge slots and no atomics
+//!   contended on the scatter side.
 //! * **Gather** — each thread merges exactly the bins destined for its
-//!   partition: the bin reads are sequential and the accumulator writes land
-//!   only inside its own (cache-resident) partition slice.
+//!   partitions: a sequential `(dest, value)` replay of the destination
+//!   stream against the value stream, with accumulator writes landing only
+//!   inside its own (cache-resident) partition slice.
+//!
+//! Two tuning knobs ride on top (both from
+//! [`PrConfig`](crate::pagerank::PrConfig)):
+//!
+//! * `pcpm_batch` — the graph is cut into `threads × batch` partitions and
+//!   each worker scatters its `batch` source partitions before switching to
+//!   gather, so each gather accumulator covers a partition small enough to
+//!   stay cache-resident;
+//! * `pcpm_layout` — [`PcpmLayout::Slots`] rebuilds the pre-compression
+//!   one-value-per-edge layout in stream form, kept as the ablation
+//!   baseline for the compressed stream.
 //!
 //! Both phases are single-writer by construction, separated by engine
-//! barriers, so the iteration is synchronous Jacobi — the same schedule (and
-//! iteration count) as the Barrier variants, with the locality profile of
-//! the edge-centric model but without its shared `m`-sized random writes.
+//! barriers, so the iteration is synchronous Jacobi — the same schedule
+//! (and iteration count) as the Barrier variants, with the locality profile
+//! of the edge-centric model but without its shared `m`-sized random
+//! writes. Within a bin, entries follow ascending source order, so every
+//! layout and batch size accumulates bit-identically.
 //!
 //! Registered as [`Variant::Pcpm`](crate::pagerank::Variant::Pcpm), exposed
 //! as `--mode pcpm` (or `--algo pcpm` / `partition-centric`) on the CLI.
 
 use crate::engine::{inv_out_degrees, Kernel, SyncMode, WorkerCtx};
-use crate::graph::partition::PartitionBins;
-use crate::graph::{Csr, Partitions};
-use crate::pagerank::{amplify_work, PrConfig};
+use crate::graph::{CompressedBins, Csr, Partitions};
+use crate::pagerank::{amplify_work, PcpmLayout, PrConfig};
 use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 pub struct PcpmKernel<'g> {
     g: &'g Csr,
+    /// Fine partitions: `threads × batch` contiguous ranges; worker `t`
+    /// owns partitions `t*batch .. (t+1)*batch`.
     parts: Partitions,
-    bins: PartitionBins,
+    batch: usize,
+    bins: CompressedBins,
     inv_out: Vec<f64>,
     pr: Vec<AtomicF64>,
-    /// One slot per edge, grouped by (source partition, destination
-    /// partition) — the update bins.
-    bin_values: Vec<AtomicF64>,
-    /// Per-vertex gather accumulator; vertex `u` is only ever touched by the
-    /// thread owning `u`'s partition.
+    /// Dense value stream, grouped by (src, dst) partition bin — one slot
+    /// per value group ([`CompressedBins::num_values`]).
+    values: Vec<AtomicF64>,
+    /// Per-vertex gather accumulator; vertex `u` is only ever touched by
+    /// the thread owning `u`'s partition.
     acc: Vec<AtomicF64>,
     base: f64,
     d: f64,
@@ -52,14 +71,34 @@ pub fn kernel<'g>(
     parts: &Partitions,
 ) -> Result<Box<dyn Kernel + 'g>> {
     let n = g.num_vertices();
-    let bins = PartitionBins::new(g, parts);
+    let batch = cfg.pcpm_batch.max(1);
+    if cfg.threads.saturating_mul(batch) > 1024 {
+        // The bin grid is (threads × batch)² ranges; bound it before the
+        // layout allocation grows past the graph it serves. Enforced here
+        // (not in PrConfig::validate) because only this kernel reads the
+        // knob.
+        bail!("threads × pcpm-batch must not exceed 1024");
+    }
+    // One partition per worker is exactly the partitioning the engine
+    // already built; a batch > 1 re-cuts the graph finer under the same
+    // policy.
+    let fine = if batch == 1 {
+        parts.clone()
+    } else {
+        Partitions::new(g, cfg.threads * batch, cfg.partition)
+    };
+    let bins = match cfg.pcpm_layout {
+        PcpmLayout::Compressed => CompressedBins::new(g, &fine),
+        PcpmLayout::Slots => CompressedBins::new_per_edge(g, &fine),
+    };
     Ok(Box::new(PcpmKernel {
         g,
-        parts: parts.clone(),
         inv_out: inv_out_degrees(g),
         pr: atomic_vec(n, 1.0 / n as f64),
-        bin_values: atomic_vec(bins.num_slots(), 0.0),
+        values: atomic_vec(bins.num_values(), 0.0),
         acc: atomic_vec(n, 0.0),
+        parts: fine,
+        batch,
         bins,
         base: (1.0 - cfg.damping) / n as f64,
         d: cfg.damping,
@@ -67,52 +106,81 @@ pub fn kernel<'g>(
     }))
 }
 
+impl PcpmKernel<'_> {
+    /// Fine-partition indices owned by worker `tid`.
+    #[inline]
+    fn owned(&self, tid: usize) -> std::ops::Range<usize> {
+        tid * self.batch..(tid + 1) * self.batch
+    }
+}
+
 impl Kernel for PcpmKernel<'_> {
     fn sync_mode(&self) -> SyncMode {
         SyncMode::Blocking { pre_scatter: true }
     }
 
-    /// Scatter phase: stream this partition's contributions into its bins.
+    /// Scatter phase: stream this worker's `batch` source partitions'
+    /// contributions into their value slots (the destination stream is
+    /// static — only values are written).
     fn scatter(&self, ctx: &WorkerCtx<'_>) {
-        for u in self.parts.range(ctx.tid) {
-            if self.g.out_degree(u) == 0 {
-                continue;
-            }
-            let contribution = self.pr[u as usize].load() * self.inv_out[u as usize];
-            for e in self.g.out_slot_range(u) {
-                self.bin_values[self.bins.scatter_slot(e)].store(contribution);
+        for fp in self.owned(ctx.tid) {
+            for u in self.parts.range(fp) {
+                let slots = self.bins.push_slots(u);
+                if slots.is_empty() {
+                    continue; // dangling vertex
+                }
+                let contribution = self.pr[u as usize].load() * self.inv_out[u as usize];
+                for &slot in slots {
+                    self.values[slot].store(contribution);
+                }
             }
         }
     }
 
-    /// Gather phase: merge every source partition's bin for this partition,
-    /// then apply Eq. 1 per destination vertex.
+    /// Gather phase: for each owned destination partition, merge every
+    /// source partition's bin as a sequential (dest, value) replay, then
+    /// apply Eq. 1 per destination vertex.
     fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
         let tid = ctx.tid;
-        for u in self.parts.range(tid) {
-            self.acc[u as usize].store(0.0);
-        }
+        let p = self.parts.count();
         let mut edges = 0u64;
-        for src in 0..self.bins.num_partitions() {
-            let range = self.bins.range(src, tid);
-            edges += range.len() as u64;
-            for slot in range {
-                let v = self.bins.dst(slot) as usize;
-                // single-writer: every destination in this bin is owned by
-                // partition `tid`
-                self.acc[v].store(self.acc[v].load() + self.bin_values[slot].load());
-                amplify_work(self.work_amplify);
-            }
-        }
+        let mut gathered = 0u64;
         let mut thr_err: f64 = 0.0;
-        for u in self.parts.range(tid) {
-            let previous = self.pr[u as usize].load();
-            let new = self.base + self.d * self.acc[u as usize].load();
-            self.pr[u as usize].store(new);
-            thr_err = thr_err.max((new - previous).abs());
+        for fp in self.owned(tid) {
+            let range = self.parts.range(fp);
+            for u in range.clone() {
+                self.acc[u as usize].store(0.0);
+            }
+            for src in 0..p {
+                let vr = self.bins.value_range(src, fp);
+                let mut vi = vr.start;
+                let mut val = 0.0;
+                let entries = self.bins.entries(src, fp);
+                edges += entries.len() as u64;
+                for &e in entries {
+                    let (v, fresh) = CompressedBins::decode(e);
+                    if fresh {
+                        val = self.values[vi].load();
+                        vi += 1;
+                    }
+                    let vu = v as usize;
+                    // single-writer: every destination in this bin is owned
+                    // by partition `fp`, which only this worker gathers
+                    self.acc[vu].store(self.acc[vu].load() + val);
+                    amplify_work(self.work_amplify);
+                }
+                debug_assert_eq!(vi, vr.end, "bin ({src},{fp}) value walk");
+            }
+            for u in range.clone() {
+                let previous = self.pr[u as usize].load();
+                let new = self.base + self.d * self.acc[u as usize].load();
+                self.pr[u as usize].store(new);
+                thr_err = thr_err.max((new - previous).abs());
+            }
+            gathered += range.len() as u64;
         }
         ctx.metrics.add_edges(tid, edges);
-        ctx.metrics.add_gathered(tid, self.parts.range(tid).len() as u64);
+        ctx.metrics.add_gathered(tid, gathered);
         thr_err
     }
 
@@ -124,7 +192,7 @@ impl Kernel for PcpmKernel<'_> {
 #[cfg(test)]
 mod tests {
     use crate::graph::{synthetic, PartitionPolicy};
-    use crate::pagerank::{self, seq, PrConfig, Variant};
+    use crate::pagerank::{self, seq, PcpmLayout, PrConfig, Variant};
 
     fn cfg(threads: usize) -> PrConfig {
         PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }
@@ -192,5 +260,71 @@ mod tests {
         assert!(r.converged);
         let (sr, _, _) = seq::solve(&g, &c);
         assert!(r.l1_norm(&sr) < 1e-10);
+    }
+
+    /// Within a bin, entries follow ascending source order regardless of
+    /// layout or partition count, so every batch size and both layouts
+    /// accumulate the exact same float sequence per destination:
+    /// bit-identical ranks, identical iteration counts, identical
+    /// vertex-update telemetry.
+    #[test]
+    fn batch_and_layout_are_bit_identical() {
+        let g = synthetic::web_replica(700, 6, 23);
+        let base = cfg(3);
+        let reference = pagerank::run(&g, Variant::Pcpm, &base).unwrap();
+        assert!(reference.converged);
+        for (batch, layout) in [
+            (1, PcpmLayout::Slots),
+            (2, PcpmLayout::Compressed),
+            (2, PcpmLayout::Slots),
+            (5, PcpmLayout::Compressed),
+        ] {
+            let c = PrConfig { pcpm_batch: batch, pcpm_layout: layout, ..base.clone() };
+            let r = pagerank::run(&g, Variant::Pcpm, &c).unwrap();
+            assert!(r.converged, "batch={batch} layout={layout}");
+            assert_eq!(
+                r.iterations, reference.iterations,
+                "batch={batch} layout={layout}"
+            );
+            assert_eq!(
+                r.vertex_updates, reference.vertex_updates,
+                "batch={batch} layout={layout}: vertex_updates must not depend on layout"
+            );
+            assert_eq!(
+                r.ranks, reference.ranks,
+                "batch={batch} layout={layout}: ranks must be bit-identical"
+            );
+        }
+    }
+
+    /// The bin grid is (threads × batch)² ranges, so the kernel (the only
+    /// reader of the knob) rejects oversized grids; other variants accept
+    /// the same config untouched.
+    #[test]
+    fn oversized_bin_grid_is_rejected_by_pcpm_only() {
+        let g = synthetic::cycle(10);
+        let c = PrConfig { pcpm_batch: 200, ..cfg(8) }; // 1600 partitions
+        assert!(c.validate().is_ok(), "the knob is legal config in general");
+        let err = pagerank::run(&g, Variant::Pcpm, &c);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("pcpm-batch"));
+        // a variant that ignores the knob runs fine
+        assert!(pagerank::run(&g, Variant::Barrier, &c).unwrap().converged);
+    }
+
+    /// Batching with edge-balanced fine partitions still covers every
+    /// vertex exactly once (the fine cut is rebuilt under the same policy).
+    #[test]
+    fn batched_edge_balanced_matches_sequential() {
+        let g = synthetic::web_replica(600, 7, 5);
+        let c = PrConfig {
+            partition: PartitionPolicy::EdgeBalanced,
+            pcpm_batch: 3,
+            ..cfg(4)
+        };
+        let r = pagerank::run(&g, Variant::Pcpm, &c).unwrap();
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.converged);
+        assert!(r.l1_norm(&sr) < 1e-9, "l1 {}", r.l1_norm(&sr));
     }
 }

@@ -16,7 +16,7 @@ pub mod synthetic;
 
 pub use builder::GraphBuilder;
 pub use csr::Csr;
-pub use partition::{PartitionPolicy, Partitions};
+pub use partition::{CompressedBins, PartitionPolicy, Partitions};
 
 /// Vertex id type. `u32` halves the memory traffic of the gather loop versus
 /// `usize` — the hot path is memory-bound, so this matters (see

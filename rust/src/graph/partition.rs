@@ -35,29 +35,43 @@ pub struct Partitions {
     pub policy: PartitionPolicy,
 }
 
+/// Ceil-spread of `n` vertices over `p` parts: the first `n % p` parts get
+/// one extra vertex. Shared by the vertex-balanced policy and the
+/// edge-balanced fallback for edgeless graphs.
+fn vertex_spread(n: usize, p: usize) -> Vec<usize> {
+    let mut bounds = Vec::with_capacity(p + 1);
+    bounds.push(0);
+    let base = n / p;
+    let extra = n % p;
+    let mut at = 0;
+    for i in 0..p {
+        at += base + usize::from(i < extra);
+        bounds.push(at);
+    }
+    bounds
+}
+
 impl Partitions {
     /// Partition `g` into `p` ranges under `policy`.
+    ///
+    /// Total for degenerate inputs: `p = 0` is clamped to one partition
+    /// (the stats below must never panic on caller mistakes), `n = 0`
+    /// yields `p` empty ranges, and an edge-balanced split of an edgeless
+    /// graph falls back to the vertex spread — the greedy prefix cut has no
+    /// edge mass to chase and would otherwise pile every vertex into the
+    /// head partition and leave singleton tails.
     pub fn new(g: &Csr, p: usize, policy: PartitionPolicy) -> Self {
-        assert!(p > 0, "need at least one partition");
+        let p = p.max(1);
         let n = g.num_vertices();
-        let mut bounds = Vec::with_capacity(p + 1);
-        match policy {
-            PartitionPolicy::VertexBalanced => {
-                // ceil-spread: first (n % p) parts get one extra vertex
-                bounds.push(0);
-                let base = n / p;
-                let extra = n % p;
-                let mut at = 0;
-                for i in 0..p {
-                    at += base + usize::from(i < extra);
-                    bounds.push(at);
-                }
-            }
+        let m = g.num_edges();
+        let bounds = match policy {
+            PartitionPolicy::VertexBalanced => vertex_spread(n, p),
+            PartitionPolicy::EdgeBalanced if m == 0 => vertex_spread(n, p),
             PartitionPolicy::EdgeBalanced => {
                 // Greedy prefix cut at ~m/p in-edges per part. The pull-
                 // direction work of vertex u is its in-degree.
-                let m = g.num_edges();
                 let target = (m as f64 / p as f64).max(1.0);
+                let mut bounds = Vec::with_capacity(p + 1);
                 bounds.push(0);
                 let mut acc = 0usize;
                 let mut cuts_made = 0usize;
@@ -78,8 +92,9 @@ impl Partitions {
                     bounds.push(n);
                 }
                 bounds.push(n);
+                bounds
             }
-        }
+        };
         debug_assert_eq!(bounds.len(), p + 1);
         Self { bounds, policy }
     }
@@ -108,11 +123,12 @@ impl Partitions {
             .collect()
     }
 
-    /// max/mean edge-load imbalance factor (1.0 = perfect).
+    /// max/mean edge-load imbalance factor (1.0 = perfect). Total: an
+    /// edgeless or empty graph has nothing to imbalance and reports 1.0.
     pub fn imbalance(&self, g: &Csr) -> f64 {
         let loads = self.edge_loads(g);
-        let max = *loads.iter().max().unwrap() as f64;
-        let mean = loads.iter().sum::<usize>() as f64 / loads.len() as f64;
+        let max = loads.iter().copied().max().unwrap_or(0) as f64;
+        let mean = loads.iter().sum::<usize>() as f64 / loads.len().max(1) as f64;
         if mean == 0.0 {
             1.0
         } else {
@@ -121,109 +137,244 @@ impl Partitions {
     }
 }
 
-/// Update-bin layout for partition-centric scatter-gather (PCPM).
+/// Entry flag in [`CompressedBins`]' destination stream: set on the first
+/// destination a source vertex contributes to a bin — i.e. "advance to the
+/// next slot of the value stream before applying this entry".
+pub const GROUP_FLAG: u32 = 1 << 31;
+
+/// Compressed update-bin layout for partition-centric scatter-gather
+/// (PCPM), after Lakhotia et al., *"Accelerating PageRank using
+/// Partition-Centric Processing"*.
 ///
-/// Groups every edge `(u → v)` by `(source partition, destination
-/// partition)`. The scatter phase of [`crate::engine::pcpm`] streams a
-/// thread's contributions into its own row of bins (sequential writes per
-/// bin); the gather phase merges exactly the column of bins destined for its
-/// partition (sequential reads, partition-local accumulator writes).
+/// Every edge `(u → v)` is grouped by `(source partition, destination
+/// partition)`. The destination indices never change between iterations,
+/// so they are built **once** into a static `u32` stream; only the *values*
+/// are (re)written at runtime, into a dense value stream with one slot per
+/// `(source vertex, destination partition)` group — a vertex with many
+/// out-edges into the same partition writes its contribution a single time
+/// instead of once per edge. The scatter phase of [`crate::engine::pcpm`]
+/// therefore streams at most `min(outdeg, p)` stores per vertex (each bin's
+/// writes are sequential), and the gather phase replays a bin as a
+/// sequential `(dest, value)` merge: an entry with [`GROUP_FLAG`] set pulls
+/// the next value slot, every entry adds the current value to its decoded
+/// destination.
 ///
-/// Within one `(src, dst)` bin, slots follow ascending source-vertex order —
-/// the same order the stable counting sort gives `Csr::in_neighbors` — so a
-/// PCPM gather accumulates bit-identically to the vertex-centric pull.
+/// [`CompressedBins::new_per_edge`] builds the same streams *without* the
+/// per-vertex dedup — one value slot per edge, every entry flagged. That is
+/// the old one-slot-per-edge layout expressed in the new format, kept as
+/// the ablation baseline (`--pcpm-layout slots`).
+///
+/// Within one `(src, dst)` bin, entries follow ascending source-vertex
+/// order — the same order the stable counting sort gives
+/// `Csr::in_neighbors` — so a PCPM gather accumulates bit-identically to
+/// the vertex-centric pull regardless of layout or partition count.
 #[derive(Debug, Clone)]
-pub struct PartitionBins {
+pub struct CompressedBins {
     parts: usize,
-    /// `bin_ranges[src * parts + dst]` — slot range of that bin.
-    bin_ranges: Vec<std::ops::Range<usize>>,
-    /// Destination vertex per bin slot.
-    bin_dst: Vec<VertexId>,
-    /// Out-edge index (into `Csr::out_edges` order) → bin slot.
-    scatter_slots: Vec<usize>,
+    dedup: bool,
+    /// `dst_ranges[src * parts + dst]` — that bin's slice of `dst_stream`.
+    dst_ranges: Vec<std::ops::Range<usize>>,
+    /// One entry per edge, grouped by bin: destination vertex id, with
+    /// [`GROUP_FLAG`] marking the start of a new value group.
+    dst_stream: Vec<u32>,
+    /// `value_ranges[src * parts + dst]` — that bin's slice of the value
+    /// stream (allocated by the kernels; this struct only owns the layout).
+    value_ranges: Vec<std::ops::Range<usize>>,
+    num_values: usize,
+    /// Per-vertex slice bounds into `push_slots` (len n+1).
+    push_offsets: Vec<usize>,
+    /// For each vertex, in first-encounter order of its destination
+    /// partitions (edge order when not deduped): the value-stream slot it
+    /// writes during scatter.
+    push_slots: Vec<usize>,
 }
 
-impl PartitionBins {
-    /// Compute the bin layout of `g` under `parts`. O(m log p) (one owner
-    /// lookup per edge), done once per run.
+impl CompressedBins {
+    /// Compressed layout: one value slot per `(vertex, destination
+    /// partition)` group. O(m log p) (one owner lookup per edge), done once
+    /// per run.
     pub fn new(g: &Csr, parts: &Partitions) -> Self {
+        Self::build(g, parts, true)
+    }
+
+    /// Uncompressed baseline: one value slot per edge (the pre-compression
+    /// bin layout, in stream form).
+    pub fn new_per_edge(g: &Csr, parts: &Partitions) -> Self {
+        Self::build(g, parts, false)
+    }
+
+    fn build(g: &Csr, parts: &Partitions, dedup: bool) -> Self {
         let p = parts.count();
+        let n = g.num_vertices();
         let m = g.num_edges();
-        let mut counts = vec![0usize; p * p];
+        assert!(
+            n < GROUP_FLAG as usize,
+            "vertex ids must leave the group-flag bit free (n < 2^31)"
+        );
+        // Pass 1: per-bin edge and value-group counts, per-vertex group
+        // counts. `last_u` detects a vertex revisiting a bin (its edges are
+        // walked consecutively, so one stamp per bin suffices even when the
+        // adjacency interleaves destination partitions).
+        let mut edge_counts = vec![0usize; p * p];
+        let mut value_counts = vec![0usize; p * p];
+        let mut push_offsets = vec![0usize; n + 1];
+        let mut last_u = vec![VertexId::MAX; p * p];
+        for src_part in 0..p {
+            for u in parts.range(src_part) {
+                let mut groups = 0usize;
+                for &v in g.out_neighbors(u) {
+                    let key = src_part * p + parts.owner(v);
+                    edge_counts[key] += 1;
+                    if !dedup || last_u[key] != u {
+                        last_u[key] = u;
+                        value_counts[key] += 1;
+                        groups += 1;
+                    }
+                }
+                push_offsets[u as usize + 1] = groups;
+            }
+        }
+        for i in 0..n {
+            push_offsets[i + 1] += push_offsets[i];
+        }
+        let mut dst_starts = vec![0usize; p * p + 1];
+        let mut value_starts = vec![0usize; p * p + 1];
+        for i in 0..p * p {
+            dst_starts[i + 1] = dst_starts[i] + edge_counts[i];
+            value_starts[i + 1] = value_starts[i] + value_counts[i];
+        }
+        let num_values = value_starts[p * p];
+        let dst_ranges: Vec<std::ops::Range<usize>> =
+            (0..p * p).map(|i| dst_starts[i]..dst_starts[i + 1]).collect();
+        let value_ranges: Vec<std::ops::Range<usize>> =
+            (0..p * p).map(|i| value_starts[i]..value_starts[i + 1]).collect();
+
+        // Pass 2: fill the streams. Partitions tile 0..n in ascending
+        // order, so `push_slots` is filled in ascending vertex order and
+        // lines up with the prefix-summed `push_offsets`.
+        let mut dst_cursor = dst_starts[..p * p].to_vec();
+        let mut value_cursor = value_starts[..p * p].to_vec();
+        let mut dst_stream = vec![0u32; m];
+        let mut push_slots = vec![0usize; num_values];
+        let mut push_at = 0usize;
+        last_u.fill(VertexId::MAX);
         for src_part in 0..p {
             for u in parts.range(src_part) {
                 for &v in g.out_neighbors(u) {
-                    counts[src_part * p + parts.owner(v)] += 1;
-                }
-            }
-        }
-        let mut starts = vec![0usize; p * p + 1];
-        for i in 0..p * p {
-            starts[i + 1] = starts[i] + counts[i];
-        }
-        let bin_ranges: Vec<std::ops::Range<usize>> =
-            (0..p * p).map(|i| starts[i]..starts[i + 1]).collect();
-        let mut cursor: Vec<usize> = starts[..p * p].to_vec();
-        let mut bin_dst = vec![0 as VertexId; m];
-        let mut scatter_slots = vec![0usize; m];
-        for src_part in 0..p {
-            for u in parts.range(src_part) {
-                for e in g.out_slot_range(u) {
-                    let v = g.out_edges[e];
                     let key = src_part * p + parts.owner(v);
-                    let slot = cursor[key];
-                    cursor[key] += 1;
-                    bin_dst[slot] = v;
-                    scatter_slots[e] = slot;
+                    let first = !dedup || last_u[key] != u;
+                    if first {
+                        last_u[key] = u;
+                        push_slots[push_at] = value_cursor[key];
+                        push_at += 1;
+                        value_cursor[key] += 1;
+                    }
+                    dst_stream[dst_cursor[key]] = v | if first { GROUP_FLAG } else { 0 };
+                    dst_cursor[key] += 1;
                 }
             }
         }
-        Self { parts: p, bin_ranges, bin_dst, scatter_slots }
+        debug_assert_eq!(push_at, num_values);
+        Self {
+            parts: p,
+            dedup,
+            dst_ranges,
+            dst_stream,
+            value_ranges,
+            num_values,
+            push_offsets,
+            push_slots,
+        }
     }
 
     pub fn num_partitions(&self) -> usize {
         self.parts
     }
 
-    /// Total bin slots (= number of edges).
-    pub fn num_slots(&self) -> usize {
-        self.bin_dst.len()
+    /// Destination-stream entries (= number of edges).
+    pub fn num_edges(&self) -> usize {
+        self.dst_stream.len()
     }
 
-    /// Slot range of the `(src, dst)` bin.
-    pub fn range(&self, src: usize, dst: usize) -> std::ops::Range<usize> {
-        self.bin_ranges[src * self.parts + dst].clone()
+    /// Value-stream slots the kernels must allocate. Equals `num_edges` for
+    /// the per-edge layout; at most that (usually far less on graphs with
+    /// locality) when deduped.
+    pub fn num_values(&self) -> usize {
+        self.num_values
     }
 
-    /// Destination vertex of a bin slot.
+    /// Was this layout built with per-(vertex, partition) dedup?
+    pub fn is_deduped(&self) -> bool {
+        self.dedup
+    }
+
+    /// Destination-stream range of the `(src, dst)` bin.
+    pub fn dst_range(&self, src: usize, dst: usize) -> std::ops::Range<usize> {
+        self.dst_ranges[src * self.parts + dst].clone()
+    }
+
+    /// Value-stream range of the `(src, dst)` bin.
+    pub fn value_range(&self, src: usize, dst: usize) -> std::ops::Range<usize> {
+        self.value_ranges[src * self.parts + dst].clone()
+    }
+
+    /// The `(src, dst)` bin's destination entries (decode with
+    /// [`CompressedBins::decode`]).
     #[inline]
-    pub fn dst(&self, slot: usize) -> VertexId {
-        self.bin_dst[slot]
+    pub fn entries(&self, src: usize, dst: usize) -> &[u32] {
+        &self.dst_stream[self.dst_range(src, dst)]
     }
 
-    /// Bin slot written by out-edge `e` (an index into `Csr::out_edges`).
+    /// Split a destination-stream entry into (destination vertex, does this
+    /// entry start a new value group).
     #[inline]
-    pub fn scatter_slot(&self, e: usize) -> usize {
-        self.scatter_slots[e]
+    pub fn decode(entry: u32) -> (VertexId, bool) {
+        (entry & !GROUP_FLAG, entry & GROUP_FLAG != 0)
+    }
+
+    /// The value-stream slots vertex `u` writes during scatter, one per
+    /// value group (empty iff `u` has no out-edges).
+    #[inline]
+    pub fn push_slots(&self, u: VertexId) -> &[usize] {
+        &self.push_slots[self.push_offsets[u as usize]..self.push_offsets[u as usize + 1]]
     }
 
     /// For each in-edge slot of the CSR (the pull-direction edge array),
-    /// the bin slot its source vertex scatters into — this is what lets a
-    /// frontier gather read one vertex's in-contributions straight out of
-    /// the bins ([`crate::engine::frontier`]). The cursor walk pairs each
-    /// of `v`'s in-slots with exactly one out-edge targeting `v`: a
-    /// bijection, which is all a gather *sum* needs (order-independent).
-    pub fn in_gather_slots(&self, g: &Csr) -> Vec<usize> {
+    /// the value-stream slot its source vertex scatters into — this is what
+    /// lets a frontier gather read one vertex's in-contributions straight
+    /// out of the value stream ([`crate::engine::frontier`]). `parts` must
+    /// be the same partitioning the layout was built with.
+    pub fn in_value_slots(&self, g: &Csr, parts: &Partitions) -> Vec<usize> {
+        assert_eq!(parts.count(), self.parts, "partitioning mismatch");
         let n = g.num_vertices();
         let mut map = vec![0usize; g.num_edges()];
         let mut cursor: Vec<usize> =
             (0..n).map(|v| g.in_slot_range(v as VertexId).start).collect();
+        // First-encounter bookkeeping per destination partition, stamped
+        // with the current source so it resets for free between vertices.
+        let mut stamp = vec![VertexId::MAX; self.parts];
+        let mut slot_of = vec![0usize; self.parts];
         for u in 0..n as VertexId {
-            for e in g.out_slot_range(u) {
-                let v = g.out_edges[e] as usize;
-                map[cursor[v]] = self.scatter_slot(e);
-                cursor[v] += 1;
+            let slots = self.push_slots(u);
+            let mut gi = 0usize;
+            for &v in g.out_neighbors(u) {
+                let slot = if self.dedup {
+                    let dp = parts.owner(v);
+                    if stamp[dp] != u {
+                        stamp[dp] = u;
+                        slot_of[dp] = slots[gi];
+                        gi += 1;
+                    }
+                    slot_of[dp]
+                } else {
+                    let s = slots[gi];
+                    gi += 1;
+                    s
+                };
+                map[cursor[v as usize]] = slot;
+                cursor[v as usize] += 1;
             }
+            debug_assert_eq!(gi, slots.len());
         }
         map
     }
@@ -232,7 +383,7 @@ impl PartitionBins {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::synthetic;
+    use crate::graph::{synthetic, GraphBuilder};
 
     fn check_cover(p: &Partitions, n: usize) {
         let mut seen = vec![false; n];
@@ -303,82 +454,244 @@ mod tests {
         assert_eq!(p.imbalance(&g), 1.0);
     }
 
+    /// Regression (degenerate inputs): an empty graph must partition, report
+    /// stats, and answer ownership queries without panicking — under both
+    /// policies.
     #[test]
-    fn bins_cover_every_edge_exactly_once() {
+    fn empty_graph_partitions_are_total() {
+        let g = GraphBuilder::new(0).build("nil");
+        for policy in [PartitionPolicy::VertexBalanced, PartitionPolicy::EdgeBalanced] {
+            let p = Partitions::new(&g, 4, policy);
+            assert_eq!(p.count(), 4, "{policy}");
+            assert!((0..4).all(|i| p.range(i).is_empty()), "{policy}");
+            assert_eq!(p.edge_loads(&g), vec![0; 4], "{policy}");
+            assert_eq!(p.imbalance(&g), 1.0, "{policy}");
+        }
+    }
+
+    /// Regression: edge-balanced on an edgeless graph (m = 0) used to chase
+    /// a phantom edge target and pile every vertex into degenerate cuts; it
+    /// must fall back to the vertex spread.
+    #[test]
+    fn edgeless_graph_edge_balanced_spreads_vertices() {
+        let g = GraphBuilder::new(10).build("isolated");
+        let p = Partitions::new(&g, 4, PartitionPolicy::EdgeBalanced);
+        check_cover(&p, 10);
+        let sizes: Vec<usize> = (0..4).map(|i| p.range(i).len()).collect();
+        assert!(sizes.iter().all(|&s| s == 2 || s == 3), "{sizes:?}");
+        assert_eq!(p.imbalance(&g), 1.0);
+    }
+
+    /// Regression: `p = 0` (a caller bug) clamps to one partition instead
+    /// of panicking deep inside the stats.
+    #[test]
+    fn zero_partitions_clamps_to_one() {
+        let g = synthetic::cycle(5);
+        for policy in [PartitionPolicy::VertexBalanced, PartitionPolicy::EdgeBalanced] {
+            let p = Partitions::new(&g, 0, policy);
+            assert_eq!(p.count(), 1, "{policy}");
+            assert_eq!(p.range(0), 0..5, "{policy}");
+            assert_eq!(p.owner(3), 0, "{policy}");
+            assert!(p.imbalance(&g).is_finite(), "{policy}");
+        }
+    }
+
+    fn layouts(g: &Csr, parts: &Partitions) -> [CompressedBins; 2] {
+        [CompressedBins::new(g, parts), CompressedBins::new_per_edge(g, parts)]
+    }
+
+    #[test]
+    fn bins_tile_every_edge_exactly_once() {
         let g = synthetic::web_replica(500, 6, 13);
         for threads in [1, 2, 5] {
             let parts = Partitions::new(&g, threads, PartitionPolicy::VertexBalanced);
-            let bins = PartitionBins::new(&g, &parts);
-            assert_eq!(bins.num_slots(), g.num_edges());
-            // the (src, dst) ranges tile 0..m without gaps or overlap
-            let mut covered = vec![false; g.num_edges()];
-            for src in 0..bins.num_partitions() {
-                for dst in 0..bins.num_partitions() {
-                    for slot in bins.range(src, dst) {
-                        assert!(!covered[slot], "slot {slot} in two bins");
-                        covered[slot] = true;
+            for bins in layouts(&g, &parts) {
+                assert_eq!(bins.num_edges(), g.num_edges());
+                // the (src, dst) dst-stream ranges tile 0..m without gaps
+                // or overlap, and likewise the value ranges tile 0..values
+                let mut covered = vec![false; g.num_edges()];
+                let mut vcovered = vec![false; bins.num_values()];
+                for src in 0..bins.num_partitions() {
+                    for dst in 0..bins.num_partitions() {
+                        for slot in bins.dst_range(src, dst) {
+                            assert!(!covered[slot], "slot {slot} in two bins");
+                            covered[slot] = true;
+                        }
+                        for slot in bins.value_range(src, dst) {
+                            assert!(!vcovered[slot], "value slot {slot} in two bins");
+                            vcovered[slot] = true;
+                        }
                     }
                 }
+                assert!(covered.iter().all(|&b| b));
+                assert!(vcovered.iter().all(|&b| b));
             }
-            assert!(covered.iter().all(|&b| b));
         }
     }
 
     #[test]
-    fn scatter_slots_are_a_bijection_onto_the_right_bins() {
+    fn group_flags_match_value_ranges() {
         let g = synthetic::social_replica(300, 5, 7);
         let parts = Partitions::new(&g, 4, PartitionPolicy::EdgeBalanced);
-        let bins = PartitionBins::new(&g, &parts);
-        let mut seen = vec![false; bins.num_slots()];
-        for u in 0..g.num_vertices() as VertexId {
-            let src_part = parts.owner(u);
-            for e in g.out_slot_range(u) {
-                let slot = bins.scatter_slot(e);
-                assert!(!seen[slot], "slot {slot} claimed twice");
-                seen[slot] = true;
-                let v = g.out_edges[e];
-                assert_eq!(bins.dst(slot), v);
-                // the slot lies in the (owner(u), owner(v)) bin
-                let r = bins.range(src_part, parts.owner(v));
-                assert!(r.contains(&slot), "edge {u}->{v} slot {slot} outside {r:?}");
+        for bins in layouts(&g, &parts) {
+            for src in 0..4 {
+                for dst in 0..4 {
+                    let flags = bins
+                        .entries(src, dst)
+                        .iter()
+                        .filter(|&&e| CompressedBins::decode(e).1)
+                        .count();
+                    assert_eq!(
+                        flags,
+                        bins.value_range(src, dst).len(),
+                        "({src},{dst}): one value slot per flagged entry"
+                    );
+                    // a non-empty bin must start with a group flag
+                    if let Some(&first) = bins.entries(src, dst).first() {
+                        assert!(CompressedBins::decode(first).1, "({src},{dst})");
+                    }
+                }
             }
         }
-        assert!(seen.iter().all(|&b| b));
     }
 
     #[test]
     fn bin_destinations_belong_to_the_bin_partition() {
         let g = synthetic::web_replica(400, 7, 3);
         let parts = Partitions::new(&g, 3, PartitionPolicy::VertexBalanced);
-        let bins = PartitionBins::new(&g, &parts);
-        for src in 0..3 {
-            for dst in 0..3 {
-                for slot in bins.range(src, dst) {
-                    assert_eq!(parts.owner(bins.dst(slot)), dst);
+        for bins in layouts(&g, &parts) {
+            for src in 0..3 {
+                for dst in 0..3 {
+                    for &e in bins.entries(src, dst) {
+                        let (v, _) = CompressedBins::decode(e);
+                        assert_eq!(parts.owner(v), dst);
+                    }
                 }
             }
         }
     }
 
     #[test]
-    fn in_gather_slots_is_a_bijection_landing_on_own_destination() {
+    fn push_slots_are_a_bijection_onto_the_value_stream() {
+        let g = synthetic::social_replica(300, 5, 7);
+        let parts = Partitions::new(&g, 4, PartitionPolicy::EdgeBalanced);
+        for bins in layouts(&g, &parts) {
+            let mut seen = vec![false; bins.num_values()];
+            for u in 0..g.num_vertices() as VertexId {
+                let slots = bins.push_slots(u);
+                if bins.is_deduped() {
+                    // one slot per distinct destination partition
+                    let mut dps: Vec<usize> =
+                        g.out_neighbors(u).iter().map(|&v| parts.owner(v)).collect();
+                    dps.sort_unstable();
+                    dps.dedup();
+                    assert_eq!(slots.len(), dps.len(), "vertex {u}");
+                } else {
+                    assert_eq!(slots.len(), g.out_degree(u), "vertex {u}");
+                }
+                for (k, &slot) in slots.iter().enumerate() {
+                    assert!(!seen[slot], "value slot {slot} claimed twice (u={u}, k={k})");
+                    seen[slot] = true;
+                    // the slot lies in one of u's (owner(u), *) bins
+                    let src = parts.owner(u);
+                    let owned = (0..bins.num_partitions())
+                        .any(|dst| bins.value_range(src, dst).contains(&slot));
+                    assert!(owned, "vertex {u} slot {slot} outside its source row");
+                }
+            }
+            assert!(seen.iter().all(|&b| b));
+        }
+    }
+
+    #[test]
+    fn per_edge_layout_has_one_value_per_edge_and_dedup_no_more() {
+        let g = synthetic::web_replica(400, 6, 29);
+        let parts = Partitions::new(&g, 4, PartitionPolicy::VertexBalanced);
+        let compressed = CompressedBins::new(&g, &parts);
+        let per_edge = CompressedBins::new_per_edge(&g, &parts);
+        assert_eq!(per_edge.num_values(), g.num_edges());
+        assert!(compressed.num_values() <= per_edge.num_values());
+        // on a multi-edge-per-partition graph the dedup must actually bite
+        let distinct: usize = (0..g.num_vertices() as VertexId)
+            .map(|u| {
+                let mut dps: Vec<usize> =
+                    g.out_neighbors(u).iter().map(|&v| parts.owner(v)).collect();
+                dps.sort_unstable();
+                dps.dedup();
+                dps.len()
+            })
+            .sum();
+        assert_eq!(compressed.num_values(), distinct);
+    }
+
+    /// Replaying scatter + gather through the streams must reproduce the
+    /// vertex-centric pull sums exactly — for both layouts.
+    #[test]
+    fn stream_replay_matches_pull_sums() {
         let g = synthetic::web_replica(400, 6, 29);
         for threads in [1, 3, 4] {
             let parts = Partitions::new(&g, threads, PartitionPolicy::VertexBalanced);
-            let bins = PartitionBins::new(&g, &parts);
-            let map = bins.in_gather_slots(&g);
-            assert_eq!(map.len(), g.num_edges());
-            // bijection onto the bin slots
-            let mut seen = vec![false; bins.num_slots()];
-            for &slot in &map {
-                assert!(!seen[slot], "bin slot {slot} mapped twice");
-                seen[slot] = true;
+            for bins in layouts(&g, &parts) {
+                // scatter: vertex u contributes (u+1) to each of its slots
+                let mut values = vec![0.0f64; bins.num_values()];
+                for u in 0..g.num_vertices() as VertexId {
+                    for &slot in bins.push_slots(u) {
+                        values[slot] = (u + 1) as f64;
+                    }
+                }
+                // gather: replay every bin into an accumulator
+                let mut acc = vec![0.0f64; g.num_vertices()];
+                let p = bins.num_partitions();
+                for dst in 0..p {
+                    for src in 0..p {
+                        let vr = bins.value_range(src, dst);
+                        let mut vi = vr.start;
+                        let mut val = 0.0;
+                        for &e in bins.entries(src, dst) {
+                            let (v, fresh) = CompressedBins::decode(e);
+                            if fresh {
+                                val = values[vi];
+                                vi += 1;
+                            }
+                            acc[v as usize] += val;
+                        }
+                        assert_eq!(vi, vr.end, "bin ({src},{dst}) value walk");
+                    }
+                }
+                // reference: direct pull over in-neighbours
+                for v in 0..g.num_vertices() as VertexId {
+                    let want: f64 =
+                        g.in_neighbors(v).iter().map(|&u| (u + 1) as f64).sum();
+                    assert_eq!(acc[v as usize], want, "vertex {v}");
+                }
             }
-            assert!(seen.iter().all(|&b| b));
-            // each vertex's in-slots map to slots whose destination is it
-            for v in 0..g.num_vertices() as VertexId {
-                for s in g.in_slot_range(v) {
-                    assert_eq!(bins.dst(map[s]), v, "in-slot {s} of vertex {v}");
+        }
+    }
+
+    #[test]
+    fn in_value_slots_land_on_the_sources_slot() {
+        let g = synthetic::web_replica(400, 6, 29);
+        for threads in [1, 3, 4] {
+            let parts = Partitions::new(&g, threads, PartitionPolicy::VertexBalanced);
+            for bins in layouts(&g, &parts) {
+                let map = bins.in_value_slots(&g, &parts);
+                assert_eq!(map.len(), g.num_edges());
+                // scatter a recognizable value per source, then check every
+                // vertex's in-slots read back exactly its in-neighbours
+                let mut values = vec![0.0f64; bins.num_values()];
+                for u in 0..g.num_vertices() as VertexId {
+                    for &slot in bins.push_slots(u) {
+                        values[slot] = (u + 1) as f64;
+                    }
+                }
+                for v in 0..g.num_vertices() as VertexId {
+                    for (s, &u) in g.in_slot_range(v).zip(g.in_neighbors(v)) {
+                        assert_eq!(
+                            values[map[s]],
+                            (u + 1) as f64,
+                            "in-slot {s} of vertex {v}"
+                        );
+                    }
                 }
             }
         }
@@ -386,23 +699,38 @@ mod tests {
 
     #[test]
     fn bins_within_a_pair_preserve_source_order() {
-        // The bit-exactness contract with the vertex-centric pull: slots in
-        // one (src, dst) bin follow ascending source order.
+        // The bit-exactness contract with the vertex-centric pull: entries
+        // in one (src, dst) bin follow ascending source order. Recover each
+        // entry's source by replaying the group walk against push_slots.
         let g = synthetic::social_replica(200, 6, 21);
         let parts = Partitions::new(&g, 3, PartitionPolicy::VertexBalanced);
-        let bins = PartitionBins::new(&g, &parts);
-        // reconstruct source of each slot
-        let mut slot_src = vec![0 as VertexId; bins.num_slots()];
-        for u in 0..g.num_vertices() as VertexId {
-            for e in g.out_slot_range(u) {
-                slot_src[bins.scatter_slot(e)] = u;
+        for bins in layouts(&g, &parts) {
+            // value slot -> source vertex
+            let mut slot_src = vec![0 as VertexId; bins.num_values()];
+            for u in 0..g.num_vertices() as VertexId {
+                for &slot in bins.push_slots(u) {
+                    slot_src[slot] = u;
+                }
             }
-        }
-        for src in 0..3 {
-            for dst in 0..3 {
-                let srcs: Vec<VertexId> =
-                    bins.range(src, dst).map(|s| slot_src[s]).collect();
-                assert!(srcs.windows(2).all(|w| w[0] <= w[1]), "({src},{dst}) unsorted");
+            for src in 0..3 {
+                for dst in 0..3 {
+                    let vr = bins.value_range(src, dst);
+                    let mut vi = vr.start;
+                    let mut cur = None;
+                    let mut last: Option<VertexId> = None;
+                    for &e in bins.entries(src, dst) {
+                        let (_, fresh) = CompressedBins::decode(e);
+                        if fresh {
+                            cur = Some(slot_src[vi]);
+                            vi += 1;
+                        }
+                        let s = cur.expect("bin starts with a group flag");
+                        if let Some(prev) = last {
+                            assert!(prev <= s, "({src},{dst}) unsorted: {prev} > {s}");
+                        }
+                        last = Some(s);
+                    }
+                }
             }
         }
     }

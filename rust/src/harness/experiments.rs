@@ -13,7 +13,7 @@ use crate::coordinator::host::HostInfo;
 use crate::graph::synthetic::{self, table1};
 use crate::graph::{Csr, PartitionPolicy};
 use crate::harness::bench::{dataset_divisor, BenchRunner};
-use crate::pagerank::{self, PrConfig, PrResult, Variant};
+use crate::pagerank::{self, PcpmLayout, PrConfig, PrResult, Variant};
 use crate::util::report::{Cell, Table};
 use anyhow::{bail, Result};
 use std::time::Duration;
@@ -565,19 +565,47 @@ pub fn ablation(ctx: &Ctx) -> Vec<Table> {
     }
     d.note("identical-node and chain techniques target different classes: web graphs have identical pages, road networks have chains; SCC counts bound the condensation-order technique");
 
-    // (e) sweep scheduling: full sweeps vs frontier/delta gathering
+    // (e) sweep scheduling and PCPM bin layout: full sweeps vs
+    // frontier/delta gathering, and the compressed value stream vs the
+    // per-edge baseline (plus source-partition batching)
     let mut e = Table::new(
-        "Ablation E — sweep scheduling (full vs frontier/delta)",
+        "Ablation E — sweep scheduling and PCPM bin layout",
         &["variant", "time (s)", "iterations", "vertex updates", "L1 vs seq"],
     );
     let seq_sched = pagerank::run(&g, Variant::Sequential, &base).expect("seq");
-    for v in [Variant::NoSync, Variant::Frontier, Variant::FrontierPcpm, Variant::Pcpm] {
-        let (m, probe): (_, PrResult) = ctx.runner.measure_with(v.name(), || {
-            let r = pagerank::run(&g, v, &base).expect("run");
+    let pcpm_cfg = |layout: PcpmLayout, batch: usize| PrConfig {
+        pcpm_layout: layout,
+        pcpm_batch: batch,
+        ..base.clone()
+    };
+    let schedule_rows: Vec<(String, Variant, PrConfig)> = vec![
+        ("No-Sync".into(), Variant::NoSync, base.clone()),
+        ("Frontier".into(), Variant::Frontier, base.clone()),
+        (
+            "Frontier-PCPM (compressed)".into(),
+            Variant::FrontierPcpm,
+            pcpm_cfg(PcpmLayout::Compressed, 1),
+        ),
+        (
+            "Frontier-PCPM (per-edge slots)".into(),
+            Variant::FrontierPcpm,
+            pcpm_cfg(PcpmLayout::Slots, 1),
+        ),
+        ("PCPM (compressed)".into(), Variant::Pcpm, pcpm_cfg(PcpmLayout::Compressed, 1)),
+        ("PCPM (per-edge slots)".into(), Variant::Pcpm, pcpm_cfg(PcpmLayout::Slots, 1)),
+        (
+            "PCPM (compressed, batch 4)".into(),
+            Variant::Pcpm,
+            pcpm_cfg(PcpmLayout::Compressed, 4),
+        ),
+    ];
+    for (label, v, cfg) in &schedule_rows {
+        let (m, probe): (_, PrResult) = ctx.runner.measure_with(label, || {
+            let r = pagerank::run(&g, *v, cfg).expect("run");
             (r.elapsed.as_secs_f64(), r)
         });
         e.push_row(vec![
-            v.name().into(),
+            label.clone().into(),
             m.summary.median.into(),
             (probe.iterations as i64).into(),
             (probe.vertex_updates as i64).into(),
@@ -585,6 +613,7 @@ pub fn ablation(ctx: &Ctx) -> Vec<Table> {
         ]);
     }
     e.note("frontier gathers only vertices whose in-neighbourhood changed past the delta threshold (delayed-async, Blanco et al.); 'vertex updates' is the total gather count across threads — the work the schedule removes");
+    e.note("compressed = one value slot per (vertex, destination partition) group, static u32 destination stream (Lakhotia et al.); per-edge slots = the pre-compression baseline; batch 4 = each worker scatters 4 finer source partitions before gathering");
 
     // (c) barrier wait share vs threads
     let mut c = Table::new(

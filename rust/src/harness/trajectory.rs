@@ -1,8 +1,10 @@
 //! Benchmark-trajectory recording and the CI regression gate.
 //!
-//! `pagerank-nb bench-ci` runs every registered engine variant on the
-//! scaled-down CI datasets, writes a `BENCH_ci.json` report (per-variant
-//! wall time, normalized time, iteration count, vertex updates), and —
+//! `pagerank-nb bench-ci` runs every registered engine variant — plus the
+//! PCPM layout/batching ablation rows (`PCPM-slots`, `Frontier-PCPM-slots`,
+//! `PCPM-batch4`) — on the scaled-down CI datasets, writes a
+//! `BENCH_ci.json` report (per-variant wall time, normalized time,
+//! iteration count, vertex updates), and —
 //! given a committed baseline — fails when a variant regresses beyond the
 //! allowed budget. Timing is normalized *within the run* against the
 //! Sequential row of the same dataset (`rel = secs / seq_secs`), so the
@@ -16,7 +18,7 @@
 use crate::coordinator::host::HostInfo;
 use crate::graph::{synthetic, Csr};
 use crate::harness::bench::BenchRunner;
-use crate::pagerank::{self, PrConfig, PrResult, Variant};
+use crate::pagerank::{self, PcpmLayout, PrConfig, PrResult, Variant};
 use crate::util::report::{json_escape, json_f64};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -49,6 +51,11 @@ pub struct BenchReport {
 }
 
 pub const SCHEMA_VERSION: u64 = 1;
+
+/// Floor for the Sequential median `rel` normalizes against: below one
+/// microsecond the "measurement" is timer noise, and dividing by it would
+/// turn scheduler jitter into thousand-x rel swings.
+pub const MIN_SEQ_SECS: f64 = 1e-6;
 
 impl BenchReport {
     pub fn find(&self, dataset: &str, variant: &str) -> Option<&BenchRow> {
@@ -169,34 +176,86 @@ pub fn run_ci_bench(
             let r = pagerank::run(&g, Variant::Sequential, &cfg).expect("sequential run");
             (r.elapsed.as_secs_f64(), r)
         });
-        let seq_secs = seq_m.summary.median.max(1e-12);
-        for v in Variant::ALL_MODES {
-            // Samples stay finite even for a DNF run (the watchdog bounds
-            // its wall time) — Summary's percentile math cannot handle
-            // infinities. A DNF on ANY run (warmup included) poisons the
-            // median, so it marks the whole row DNF (`secs` becomes the
-            // JSON `null` below) instead of silently inflating `rel`.
+        // `rel` divides by this number. A zero / non-finite Sequential
+        // median would make every rel inf/NaN and the gate vacuously pass
+        // — that is a measurement failure, not a benchmark result, so it
+        // is a hard error. A merely *tiny* median (micro-benchmark-sized
+        // CI datasets) is clamped to a floor and flagged: the rows still
+        // record, but the log says the normalization is noise-dominated.
+        let raw_seq = seq_m.summary.median;
+        if !raw_seq.is_finite() || raw_seq <= 0.0 {
+            bail!(
+                "bench-ci: Sequential on {name} measured {raw_seq} s — cannot \
+                 normalize 'rel' and the regression gate would be vacuous; \
+                 check the timer or enlarge the dataset (--scale)"
+            );
+        }
+        let seq_secs = if raw_seq < MIN_SEQ_SECS {
+            eprintln!(
+                "warning: Sequential on {name} took only {raw_seq:.3e} s — \
+                 'rel' is normalized against the {MIN_SEQ_SECS:.0e} s floor; \
+                 timings at this scale are noise-dominated"
+            );
+            MIN_SEQ_SECS
+        } else {
+            raw_seq
+        };
+        // Samples stay finite even for a DNF run (the watchdog bounds its
+        // wall time) — Summary's percentile math cannot handle infinities.
+        // A DNF on ANY run (warmup included) poisons the median, so it
+        // marks the whole row DNF (`secs` becomes the JSON `null` below)
+        // instead of silently inflating `rel`.
+        let measure = |v: Variant, vcfg: &PrConfig| -> (f64, PrResult) {
             let mut any_dnf = false;
-            let (median, probe) = if v == Variant::Sequential {
-                (seq_secs, seq_probe.clone())
-            } else {
-                let (m, r) = runner.measure_with(v.name(), || {
-                    let r = pagerank::run(&g, v, &cfg).expect("variant run");
-                    any_dnf |= r.dnf;
-                    (r.elapsed.as_secs_f64(), r)
-                });
-                (m.summary.median, r)
-            };
-            let secs = if any_dnf { f64::INFINITY } else { median };
+            let (m, r) = runner.measure_with(v.name(), || {
+                let r = pagerank::run(&g, v, vcfg).expect("variant run");
+                any_dnf |= r.dnf;
+                (r.elapsed.as_secs_f64(), r)
+            });
+            let secs = if any_dnf { f64::INFINITY } else { m.summary.median };
+            (secs, r)
+        };
+        let mut record = |label: &str, secs: f64, probe: &PrResult| {
             rows.push(BenchRow {
                 dataset: name.to_string(),
-                variant: v.name().to_string(),
+                variant: label.to_string(),
                 secs,
                 rel: secs / seq_secs,
                 iterations: probe.iterations,
                 vertex_updates: probe.vertex_updates,
-                converged: probe.converged && !any_dnf,
+                converged: probe.converged && secs.is_finite(),
             });
+        };
+        for v in Variant::ALL_MODES {
+            let (secs, probe) = if v == Variant::Sequential {
+                // the row keeps the honest measurement; only `rel` divides
+                // by the (possibly clamped) `seq_secs`
+                (raw_seq, seq_probe.clone())
+            } else {
+                measure(v, &cfg)
+            };
+            record(v.name(), secs, &probe);
+        }
+        // Layout / batching ablation rows: the default rows above run the
+        // compressed PCPM stream; these record the per-edge baseline and a
+        // batched scatter so the trajectory tracks what the compression
+        // and batching actually buy on the CI datasets.
+        let extras = [
+            (
+                Variant::Pcpm,
+                "PCPM-slots",
+                PrConfig { pcpm_layout: PcpmLayout::Slots, ..cfg.clone() },
+            ),
+            (
+                Variant::FrontierPcpm,
+                "Frontier-PCPM-slots",
+                PrConfig { pcpm_layout: PcpmLayout::Slots, ..cfg.clone() },
+            ),
+            (Variant::Pcpm, "PCPM-batch4", PrConfig { pcpm_batch: 4, ..cfg.clone() }),
+        ];
+        for (v, label, vcfg) in &extras {
+            let (secs, probe) = measure(*v, vcfg);
+            record(label, secs, &probe);
         }
     }
     Ok(BenchReport {
@@ -220,7 +279,9 @@ pub fn run_ci_bench(
 /// * iterations may grow to `base.iterations * (1 + max_regress) + 8`
 ///   (non-blocking schedules jitter by a few confirmation sweeps);
 /// * a variant that converged in the baseline must still converge
-///   (`No-Sync-Edge` is exempt: §4.4 documents its instability).
+///   (`No-Sync-Edge` is exempt: §4.4 documents its instability);
+/// * a non-finite `rel` on either side of a gated pair is itself a failure
+///   — inf/NaN would otherwise satisfy every budget vacuously.
 ///
 /// Rows only in one report (new variants, retired datasets) are not gated.
 ///
@@ -250,6 +311,25 @@ pub fn compare(current: &BenchReport, baseline: &BenchReport, max_regress: f64) 
                     base.dataset, base.variant
                 ));
             }
+            continue;
+        }
+        // Non-finite rel on either side makes every budget below vacuous
+        // (inf > inf is false, inf * anything is inf) — surface it as a
+        // hard failure instead of a silent pass.
+        if !base.rel.is_finite() {
+            regressions.push(format!(
+                "{}/{}: baseline rel is not finite — the baseline is corrupt \
+                 (a DNF row marked converged?); refresh it (docs/benchmarking.md)",
+                base.dataset, base.variant
+            ));
+            continue;
+        }
+        if !cur.rel.is_finite() {
+            regressions.push(format!(
+                "{}/{}: normalized time is not finite (baseline {:.3}x) — \
+                 the run produced no usable timing for a converged row",
+                base.dataset, base.variant, base.rel
+            ));
             continue;
         }
         let rel_budget = base.rel * (1.0 + max_regress) + 1.0;
@@ -508,12 +588,27 @@ mod tests {
     #[test]
     fn report_covers_every_mode_on_every_dataset() {
         let r = tiny_report();
-        assert_eq!(r.rows.len(), 2 * Variant::ALL_MODES.len());
+        // every engine mode plus the three layout/batching ablation rows
+        assert_eq!(r.rows.len(), 2 * (Variant::ALL_MODES.len() + 3));
         for v in Variant::ALL_MODES {
             for ds in ["webStanford", "roaditalyosm"] {
                 let row = r.find(ds, v.name()).unwrap_or_else(|| panic!("{ds}/{v}"));
                 assert!(row.rel >= 0.0);
             }
+        }
+        for label in ["PCPM-slots", "Frontier-PCPM-slots", "PCPM-batch4"] {
+            for ds in ["webStanford", "roaditalyosm"] {
+                let row = r.find(ds, label).unwrap_or_else(|| panic!("{ds}/{label}"));
+                assert!(row.rel >= 0.0, "{ds}/{label}");
+            }
+        }
+        // the layout only changes the value-stream width, never the
+        // synchronous schedule: identical work telemetry per dataset
+        for ds in ["webStanford", "roaditalyosm"] {
+            let compressed = r.find(ds, "PCPM").unwrap();
+            let slots = r.find(ds, "PCPM-slots").unwrap();
+            assert_eq!(compressed.vertex_updates, slots.vertex_updates, "{ds}");
+            assert_eq!(compressed.iterations, slots.iterations, "{ds}");
         }
         // frontier rows carry the work metric the schedule is about
         let f = r.find("roaditalyosm", "Frontier").unwrap();
@@ -562,6 +657,53 @@ mod tests {
             msgs.iter().any(|m| m.contains("Frontier") && m.contains("no longer converges")),
             "{msgs:?}"
         );
+    }
+
+    /// Regression: a non-finite `rel` used to satisfy every budget
+    /// vacuously (inf > inf is false). Both a corrupt baseline and a
+    /// timing-less current row must now trip the gate loudly.
+    #[test]
+    fn non_finite_rel_trips_the_gate_instead_of_passing() {
+        let r = tiny_report();
+        let poison = |report: &mut BenchReport| {
+            let row = report
+                .rows
+                .iter_mut()
+                .find(|x| x.variant == "Barrier" && x.converged)
+                .expect("a converged Barrier row");
+            row.rel = f64::INFINITY;
+        };
+        let mut bad_base = r.clone();
+        poison(&mut bad_base);
+        let msgs = compare(&r, &bad_base, 0.25);
+        assert!(
+            msgs.iter().any(|m| m.contains("Barrier") && m.contains("baseline is corrupt")),
+            "{msgs:?}"
+        );
+        let mut bad_cur = r.clone();
+        poison(&mut bad_cur);
+        let msgs = compare(&bad_cur, &r, 0.25);
+        assert!(
+            msgs.iter().any(|m| m.contains("Barrier") && m.contains("not finite")),
+            "{msgs:?}"
+        );
+    }
+
+    /// Every converged row of a real run must carry a finite, non-negative
+    /// rel — the normalization hard-errors rather than emitting inf/NaN.
+    #[test]
+    fn converged_rows_always_have_finite_rel() {
+        let r = tiny_report();
+        for row in r.rows.iter().filter(|row| row.converged) {
+            assert!(
+                row.rel.is_finite() && row.rel >= 0.0,
+                "{}/{}: rel {}",
+                row.dataset,
+                row.variant,
+                row.rel
+            );
+            assert!(row.secs.is_finite(), "{}/{}", row.dataset, row.variant);
+        }
     }
 
     #[test]

@@ -207,6 +207,37 @@ impl std::fmt::Display for Variant {
     }
 }
 
+/// Which update-bin layout the PCPM kernels run on (CLI: `--pcpm-layout`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PcpmLayout {
+    /// One value slot per `(source vertex, destination partition)` group —
+    /// the Lakhotia-style compressed stream
+    /// ([`crate::graph::CompressedBins::new`]). Default.
+    Compressed,
+    /// One value slot per edge — the pre-compression layout, kept as the
+    /// ablation baseline ([`crate::graph::CompressedBins::new_per_edge`]).
+    Slots,
+}
+
+impl std::fmt::Display for PcpmLayout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PcpmLayout::Compressed => f.write_str("compressed"),
+            PcpmLayout::Slots => f.write_str("slots"),
+        }
+    }
+}
+
+impl PcpmLayout {
+    pub fn parse(s: &str) -> Result<PcpmLayout> {
+        match s.to_ascii_lowercase().as_str() {
+            "compressed" | "stream" => Ok(PcpmLayout::Compressed),
+            "slots" | "per-edge" | "uncompressed" => Ok(PcpmLayout::Slots),
+            other => bail!("--pcpm-layout must be compressed|slots, got '{other}'"),
+        }
+    }
+}
+
 /// Run configuration.
 #[derive(Debug, Clone)]
 pub struct PrConfig {
@@ -236,6 +267,16 @@ pub struct PrConfig {
     /// `std::hint::black_box`) so scheduling effects dominate on hosts with
     /// fewer cores than the paper's 56; numerics are unaffected. 0 = off.
     pub work_amplify: u32,
+    /// PCPM source-partition batch: the graph is cut into
+    /// `threads × pcpm_batch` partitions and each worker scatters its
+    /// `pcpm_batch` partitions before switching to gather, so the gather
+    /// accumulator covers a partition small enough to stay cache-resident
+    /// (Lakhotia et al. §4). `1` (default) reproduces one-partition-per-
+    /// thread. Only `Variant::Pcpm` reads it. CLI: `--pcpm-batch`.
+    pub pcpm_batch: usize,
+    /// Update-bin layout for the PCPM kernels (compressed value stream vs
+    /// the per-edge baseline). CLI: `--pcpm-layout`.
+    pub pcpm_layout: PcpmLayout,
     /// Fault-injection schedule (sleeps / failures) for Figs 8–9.
     pub faults: FaultPlan,
     /// Watchdog: abort the run (DNF) if it exceeds this wall-clock bound.
@@ -254,6 +295,8 @@ impl Default for PrConfig {
             perforation_factor: 1e-5,
             delta_threshold: 0.0,
             work_amplify: 0,
+            pcpm_batch: 1,
+            pcpm_layout: PcpmLayout::Compressed,
             faults: FaultPlan::none(),
             dnf_timeout: None,
         }
@@ -278,6 +321,13 @@ impl PrConfig {
         if !self.delta_threshold.is_finite() || self.delta_threshold < 0.0 {
             bail!("delta-threshold must be a finite non-negative number");
         }
+        if self.pcpm_batch == 0 {
+            bail!("pcpm-batch must be at least 1");
+        }
+        // The threads × pcpm_batch ≤ 1024 bin-grid bound is enforced where
+        // the grid is actually allocated (`engine::pcpm::kernel`) — every
+        // other variant ignores the knob, and rejecting it globally would
+        // contradict the CLI's "ignored for {variant}" note.
         Ok(())
     }
 
@@ -444,6 +494,27 @@ mod tests {
         assert!(PrConfig { threads: 0, ..Default::default() }.validate().is_err());
         assert!(PrConfig { threads: 65, ..Default::default() }.validate().is_err());
         assert!(PrConfig { threshold: 0.0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn pcpm_knobs_validate_and_parse() {
+        assert_eq!(PrConfig::default().pcpm_batch, 1);
+        assert_eq!(PrConfig::default().pcpm_layout, PcpmLayout::Compressed);
+        assert!(PrConfig { pcpm_batch: 0, ..Default::default() }.validate().is_err());
+        assert!(PrConfig { pcpm_batch: 8, ..Default::default() }.validate().is_ok());
+        // the bin-grid bound is a pcpm-kernel concern, not a global one
+        // (see engine::pcpm tests); validate() must accept this for the
+        // variants that ignore the knob
+        assert!(
+            PrConfig { threads: 64, pcpm_batch: 17, ..Default::default() }
+                .validate()
+                .is_ok()
+        );
+        assert_eq!(PcpmLayout::parse("compressed").unwrap(), PcpmLayout::Compressed);
+        assert_eq!(PcpmLayout::parse("slots").unwrap(), PcpmLayout::Slots);
+        assert_eq!(PcpmLayout::parse("per-edge").unwrap(), PcpmLayout::Slots);
+        assert!(PcpmLayout::parse("zip").is_err());
+        assert_eq!(PcpmLayout::Compressed.to_string(), "compressed");
     }
 
     #[test]

@@ -55,17 +55,19 @@ impl DirtyFlags {
     /// Mark vertex `v` dirty. Returns `true` if this call set the bit (it
     /// was clear), `false` if it was already set.
     ///
-    /// Test-and-test-and-set: hub vertices get re-marked by many pushers
-    /// every sweep, and skipping the exclusive-ownership RMW when the bit
-    /// is already visible keeps those words from ping-ponging. The plain
-    /// load may race with a concurrent drain; that only costs one extra
-    /// `fetch_or`, never a lost mark.
+    /// Always the `fetch_or` — no test-and-test-and-set fast path. The
+    /// obvious TTAS optimization (relaxed load, early-return when the bit
+    /// reads as set) is *unsound* here: the load may observe a stale "set"
+    /// from before a concurrent `drain_range` claimed the word, so the
+    /// early return would skip a mark whose bit is in fact clear — and the
+    /// drain that cleared it may have gathered the vertex *before* this
+    /// publisher stored its new rank, leaving the update unpropagated
+    /// forever (a correctness loss, not a delay). The RMW always operates
+    /// on the latest value in the modification order, so a mark landing
+    /// after a claim simply survives into the next sweep.
     #[inline]
     pub fn set(&self, v: VertexId) -> bool {
         let (w, bit) = (v as usize / 64, 1u64 << (v as usize % 64));
-        if self.words[w].load(Ordering::Relaxed) & bit != 0 {
-            return false;
-        }
         self.words[w].fetch_or(bit, Ordering::AcqRel) & bit == 0
     }
 
@@ -213,5 +215,59 @@ mod tests {
             );
         }
         assert_eq!(d.count_set(), 0);
+    }
+
+    /// Regression stress for the mark-vs-drain race: `set` must never be
+    /// skipped because of a stale observation of the word (the removed TTAS
+    /// fast path could early-return against a bit a concurrent
+    /// `drain_range` had already claimed). A publisher bumps a value and
+    /// then marks; the consumer drains and snapshots the value. After the
+    /// publisher finishes, the final mark must still be pending (or already
+    /// consumed at the final value) — i.e. the last published value is
+    /// always observed.
+    #[test]
+    fn final_mark_survives_concurrent_drains() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        const ROUNDS: u64 = 20_000;
+        let d = Arc::new(DirtyFlags::new_clear(64));
+        let published = Arc::new(AtomicU64::new(0));
+        let observed = Arc::new(AtomicU64::new(0));
+        std::thread::scope(|s| {
+            {
+                let (d, published) = (Arc::clone(&d), Arc::clone(&published));
+                s.spawn(move || {
+                    for i in 1..=ROUNDS {
+                        published.store(i, Ordering::Release);
+                        d.set(7);
+                    }
+                });
+            }
+            {
+                let (d, published, observed) =
+                    (Arc::clone(&d), Arc::clone(&published), Arc::clone(&observed));
+                s.spawn(move || {
+                    // Deadline-bounded so a reintroduced lost-mark bug
+                    // fails with a message instead of wedging the test
+                    // runner (normal completion is milliseconds).
+                    let deadline =
+                        std::time::Instant::now() + std::time::Duration::from_secs(30);
+                    while observed.load(Ordering::Relaxed) < ROUNDS {
+                        assert!(
+                            std::time::Instant::now() < deadline,
+                            "mark-vs-drain race lost the final mark: observed {} of {ROUNDS}",
+                            observed.load(Ordering::Relaxed)
+                        );
+                        d.drain_range(0..64, |v| {
+                            assert_eq!(v, 7);
+                            observed.store(published.load(Ordering::Acquire), Ordering::Relaxed);
+                        });
+                        std::thread::yield_now();
+                    }
+                });
+            }
+        });
+        // the consumer loop only exits once a drain observed the final
+        // published value — a lost final mark trips its deadline assert
+        assert_eq!(observed.load(Ordering::Relaxed), ROUNDS);
     }
 }

@@ -5,7 +5,7 @@
 //! `XlaBlock`-excluded dispatch error path.
 
 use pagerank_nb::graph::{rmat, synthetic, Csr, GraphBuilder};
-use pagerank_nb::pagerank::{self, seq, PrConfig, Variant};
+use pagerank_nb::pagerank::{self, seq, PcpmLayout, PrConfig, Variant};
 use pagerank_nb::testkit::{check, Config, EdgeList};
 
 fn build(n: usize, edges: &[(u32, u32)]) -> Csr {
@@ -141,6 +141,76 @@ fn frontier_matches_barrier_with_fewer_vertex_updates() {
             nosync.vertex_updates
         );
     }
+}
+
+/// The compressed-bin acceptance criterion: on the web replica, both PCPM
+/// kernels running the compressed (dest-index, value) stream land within
+/// 1e-6 L1 of the Barrier schedule, and the compressed layout reports
+/// *identical* work telemetry (vertex updates, iterations) to the
+/// uncompressed per-edge layout — compression changes memory traffic, not
+/// the schedule.
+#[test]
+fn compressed_pcpm_matches_barrier_with_identical_work() {
+    let g = synthetic::web_replica(2_000, 6, 42);
+    let cfg = PrConfig { threads: 4, threshold: 1e-10, ..PrConfig::default() };
+    let barrier = pagerank::run(&g, Variant::Barrier, &cfg).unwrap();
+    assert!(barrier.converged);
+    let mut compressed_pcpm = None;
+    for v in [Variant::Pcpm, Variant::FrontierPcpm] {
+        let r = pagerank::run(&g, v, &cfg).unwrap();
+        assert!(r.converged, "{v} (compressed) did not converge");
+        let l1 = r.l1_norm(&barrier.ranks);
+        assert!(l1 < 1e-6, "{v} (compressed): L1 vs barrier {l1}");
+        if v == Variant::Pcpm {
+            compressed_pcpm = Some(r);
+        }
+    }
+    let slots_cfg = PrConfig { pcpm_layout: PcpmLayout::Slots, ..cfg.clone() };
+    let compressed = compressed_pcpm.expect("loop ran Variant::Pcpm");
+    let slots = pagerank::run(&g, Variant::Pcpm, &slots_cfg).unwrap();
+    assert!(compressed.converged && slots.converged);
+    assert_eq!(compressed.iterations, slots.iterations);
+    assert_eq!(
+        compressed.vertex_updates, slots.vertex_updates,
+        "bin layout must not change the vertex-update count"
+    );
+    assert_eq!(compressed.ranks, slots.ranks, "layouts must be bit-identical");
+}
+
+/// Property: on arbitrary random graphs, every PCPM configuration —
+/// layouts × batch sizes — is bit-identical to the default and converges
+/// with the Barrier iteration count (the synchronous-Jacobi contract).
+#[test]
+fn prop_pcpm_layouts_and_batches_agree_on_random_graphs() {
+    check(
+        Config::default().cases(10),
+        EdgeList { max_n: 40, max_m: 200 },
+        |(n, edges)| {
+            let g = build(*n, edges);
+            let base = PrConfig { threads: 3, threshold: 1e-11, ..PrConfig::default() };
+            let reference = pagerank::run(&g, Variant::Pcpm, &base).unwrap();
+            for (layout, batch) in [
+                (PcpmLayout::Slots, 1),
+                (PcpmLayout::Compressed, 2),
+                (PcpmLayout::Slots, 3),
+            ] {
+                let cfg =
+                    PrConfig { pcpm_layout: layout, pcpm_batch: batch, ..base.clone() };
+                let r = pagerank::run(&g, Variant::Pcpm, &cfg).unwrap();
+                if r.ranks != reference.ranks
+                    || r.iterations != reference.iterations
+                    || r.converged != reference.converged
+                {
+                    eprintln!(
+                        "layout={layout} batch={batch}: iter {} vs {}, converged {} vs {}",
+                        r.iterations, reference.iterations, r.converged, reference.converged
+                    );
+                    return false;
+                }
+            }
+            true
+        },
+    );
 }
 
 /// The XlaBlock-excluded dispatch path: the engine registry rejects it with

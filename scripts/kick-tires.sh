@@ -34,15 +34,25 @@ for algo in sequential barrier barrier-identical barrier-edge barrier-opt \
     "$BIN" run --graph "$GRAPH" --algo "$algo" --threads "$THREADS" --top 3
 done
 
-echo "· pcpm (via --mode)"
+echo "· pcpm (via --mode; compressed bin stream is the default)"
 "$BIN" run --graph "$GRAPH" --mode pcpm --threads "$THREADS" --top 3
+
+echo "· pcpm (batched scatter: 2 source partitions per worker)"
+"$BIN" run --graph "$GRAPH" --mode pcpm --pcpm-batch 2 --threads "$THREADS" --top 3
+
+echo "· pcpm (per-edge slots baseline via --pcpm-layout)"
+"$BIN" run --graph "$GRAPH" --mode pcpm --pcpm-layout slots --threads "$THREADS" --top 3
 
 echo "· frontier (via --mode, explicit delta threshold)"
 "$BIN" run --graph "$GRAPH" --mode frontier --threads "$THREADS" \
     --delta-threshold 1e-11 --top 3
 
-echo "· frontier-pcpm (via --mode)"
+echo "· frontier-pcpm (via --mode; compressed delta scatter)"
 "$BIN" run --graph "$GRAPH" --mode frontier-pcpm --threads "$THREADS" --top 3
+
+echo "· frontier-pcpm (per-edge slots baseline)"
+"$BIN" run --graph "$GRAPH" --mode frontier-pcpm --pcpm-layout slots \
+    --threads "$THREADS" --top 3
 
 echo "── cross-validation against the sequential oracle ──"
 "$BIN" validate --graph "$GRAPH" --threads "$THREADS"
