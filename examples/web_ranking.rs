@@ -1,19 +1,31 @@
-//! End-to-end driver: the full system on a realistic workload.
+//! End-to-end driver: the full system on a realistic, *evolving* workload.
 //!
-//! Builds the webStanford-class replica, runs **every** variant of the
-//! paper across the synchronization spectrum, and reports the paper's
-//! headline metrics (speedup over sequential, iterations, L1-norm) — a
-//! miniature of Figs 1, 5 and 7 in one binary. This is the run recorded in
-//! EXPERIMENTS.md §End-to-end.
+//! Three acts on a webStanford-class replica (Table 1: 281,903 vertices /
+//! 2,312,497 edges at full scale):
+//!
+//! 1. **Cold ranking** — every variant of the paper across the
+//!    synchronization spectrum, with the headline metrics (speedup over
+//!    sequential, iterations, L1-norm): a miniature of Figs 1, 5 and 7.
+//!    This is the run recorded in EXPERIMENTS.md §End-to-end.
+//! 2. **Evolve-query-reconverge** — the graph mutates in random edge
+//!    batches; after each batch the frontier kernel reconverges
+//!    *incrementally* from the previous ranks and publishes an epoch
+//!    snapshot, while reader threads keep answering `rank`/`top_k`
+//!    queries against the last published epoch throughout.
+//! 3. **Incremental vs cold** — the final epoch's cost in `vertex_updates`
+//!    against a cold Barrier recompute of the same mutated graph.
 //!
 //! ```bash
 //! cargo run --release --example web_ranking [divisor] [threads]
 //! ```
 
 use pagerank_nb::coordinator::host::HostInfo;
-use pagerank_nb::graph::synthetic;
+use pagerank_nb::graph::{synthetic, GraphDelta};
 use pagerank_nb::pagerank::{self, PrConfig, Variant};
+use pagerank_nb::serving::ServingEngine;
 use pagerank_nb::util::report::Table;
+use pagerank_nb::util::{fmt, rng::Xoshiro256pp};
+use std::sync::atomic::{AtomicBool, Ordering};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -24,8 +36,6 @@ fn main() -> anyhow::Result<()> {
         .and_then(|s| s.parse().ok())
         .unwrap_or_else(|| host.default_threads());
 
-    // webStanford-class replica (Table 1: 281,903 vertices / 2,312,497
-    // edges at full scale).
     let graph = synthetic::web_replica(281_903 / divisor, 8, 42);
     eprintln!(
         "webStanford replica at 1/{divisor}: {} vertices, {} edges · {} threads",
@@ -39,6 +49,8 @@ fn main() -> anyhow::Result<()> {
         dnf_timeout: Some(std::time::Duration::from_secs(120)),
         ..PrConfig::default()
     };
+
+    // ── Act 1: cold ranking, every program ─────────────────────────────
     let seq = pagerank::run(&graph, Variant::Sequential, &cfg)?;
     let seq_secs = seq.elapsed.as_secs_f64();
 
@@ -68,5 +80,75 @@ fn main() -> anyhow::Result<()> {
     }
     table.note(host.describe());
     println!("{}", table.to_markdown());
+
+    // ── Act 2: the graph evolves while queries keep flowing ────────────
+    let epochs = 4u64;
+    let batch = (graph.num_edges() / 100).clamp(4, 256);
+    eprintln!(
+        "\nserving: {epochs} mutation epochs of +{batch}/-{} edges each, \
+         2 readers querying throughout",
+        batch / 2
+    );
+    let mut engine = ServingEngine::bootstrap(graph, Variant::Frontier, cfg.clone())?;
+    let server = engine.server();
+    let done = AtomicBool::new(false);
+    let outcome: anyhow::Result<u64> = std::thread::scope(|s| {
+        for r in 0..2u64 {
+            let server = engine.server();
+            let done = &done;
+            s.spawn(move || {
+                let mut rng = Xoshiro256pp::seed_from_u64(7 + r);
+                while !done.load(Ordering::Acquire) {
+                    let snap = server.snapshot();
+                    assert!(snap.verify(), "reader observed a torn snapshot");
+                    if !snap.is_empty() {
+                        server.rank(rng.next_below(snap.len() as u64) as u32);
+                    }
+                    server.top_k(3);
+                    std::thread::yield_now();
+                }
+            });
+        }
+        let run = (|| -> anyhow::Result<u64> {
+            let mut last_updates = 0;
+            for e in 0..epochs {
+                let delta = GraphDelta::random(engine.graph(), batch, batch / 2, 100 + e);
+                let stats = engine.apply(&delta)?;
+                println!(
+                    "epoch {}: {} touched · {} iters · {} vertex updates · {}{}",
+                    stats.epoch,
+                    stats.touched,
+                    stats.iterations,
+                    fmt::count(stats.vertex_updates),
+                    fmt::duration(stats.elapsed_secs),
+                    if stats.converged { "" } else { " [NOT converged]" }
+                );
+                last_updates = stats.vertex_updates;
+            }
+            Ok(last_updates)
+        })();
+        done.store(true, Ordering::Release);
+        run
+    });
+    let last_updates = outcome?;
+    println!(
+        "served {} queries across {} epochs",
+        fmt::count(server.queries_served()),
+        engine.epoch()
+    );
+
+    // ── Act 3: what did incrementality buy? ────────────────────────────
+    let cold = pagerank::run(engine.graph(), Variant::Barrier, &cfg)?;
+    let snap = server.snapshot();
+    let l1 = pagerank_nb::pagerank::convergence::l1_norm(snap.ranks(), &cold.ranks);
+    println!(
+        "final epoch: {} incremental vertex updates vs {} cold (Barrier, \
+         {} iters × {} vertices) · L1 vs cold recompute {}",
+        fmt::count(last_updates),
+        fmt::count(cold.vertex_updates),
+        cold.iterations,
+        fmt::count(engine.graph().num_vertices() as u64),
+        fmt::sci(l1)
+    );
     Ok(())
 }

@@ -7,6 +7,7 @@ use std::collections::HashMap;
 #[derive(Debug, Default, Clone)]
 pub struct ArgMap {
     flags: HashMap<String, String>,
+    /// Arguments that were not `--key` flags, in order.
     pub positional: Vec<String>,
 }
 
@@ -39,18 +40,22 @@ impl ArgMap {
         Ok(Self { flags, positional })
     }
 
+    /// Was `--key` present (with or without a value)?
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
+    /// The value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// The value of `--key`, or an error naming the flag.
     pub fn require(&self, key: &str) -> Result<&str> {
         self.get(key).with_context(|| format!("missing required --{key}"))
     }
 
+    /// Parse `--key`'s value, falling back to `default` when absent.
     pub fn get_parsed<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
     where
         T::Err: std::fmt::Display,

@@ -321,6 +321,93 @@ pub fn cmd_bench_ci(args: &ArgMap) -> Result<()> {
     Ok(())
 }
 
+/// `serve`: the evolve-query-reconverge scenario. Bootstrap a rank server
+/// with a cold frontier solve, then per epoch apply a random edge batch,
+/// reconverge incrementally from the previous ranks, and publish a fresh
+/// snapshot — while reader threads hammer `rank`/`top_k` the whole time.
+pub fn cmd_serve(args: &ArgMap) -> Result<()> {
+    use crate::graph::GraphDelta;
+    use crate::serving::ServingEngine;
+    use crate::util::rng::Xoshiro256pp;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    let seed = args.get_parsed("seed", 42u64)?;
+    let g = load_graph(args.require("graph")?, seed)?;
+    let variant = match args.get("mode") {
+        None => Variant::Frontier,
+        Some(m) => Variant::parse(m)?,
+    };
+    let cfg = config_from_args(args)?;
+    let epochs = args.get_parsed("epochs", 4u64)?;
+    let batch = args.get_parsed("batch", 32usize)?;
+    let readers = args.get_parsed("readers", 2usize)?;
+    let k = args.get_parsed("top", 3usize)?;
+    println!(
+        "serving '{}': {} vertices, {} edges · {} · {} threads · {} reader(s)",
+        g.name,
+        fmt::count(g.num_vertices() as u64),
+        fmt::count(g.num_edges() as u64),
+        variant,
+        cfg.threads,
+        readers
+    );
+    let mut engine = ServingEngine::bootstrap(g, variant, cfg)?;
+    println!("epoch 1 (bootstrap): cold solve published");
+    let server = engine.server();
+    let done = AtomicBool::new(false);
+    let outcome: Result<()> = std::thread::scope(|s| {
+        for r in 0..readers {
+            let server = engine.server();
+            let done = &done;
+            s.spawn(move || {
+                let mut rng = Xoshiro256pp::seed_from_u64(seed ^ (r as u64 + 1));
+                while !done.load(Ordering::Acquire) {
+                    let snap = server.snapshot();
+                    assert!(snap.verify(), "reader observed a torn snapshot");
+                    if !snap.is_empty() {
+                        server.rank(rng.next_below(snap.len() as u64) as u32);
+                    }
+                    server.top_k(k);
+                    std::thread::yield_now();
+                }
+            });
+        }
+        let run = (|| -> Result<()> {
+            for e in 0..epochs {
+                let delta =
+                    GraphDelta::random(engine.graph(), batch, batch / 2, seed + e + 1);
+                let stats = engine.apply(&delta)?;
+                println!(
+                    "epoch {}: +{}/-{} edges · {} touched · {} iters · {} vertex updates \
+                     · {} · {} edges now{}",
+                    stats.epoch,
+                    delta.inserts().len(),
+                    delta.deletes().len(),
+                    stats.touched,
+                    stats.iterations,
+                    fmt::count(stats.vertex_updates),
+                    fmt::duration(stats.elapsed_secs),
+                    fmt::count(stats.edges as u64),
+                    if stats.converged { "" } else { " [NOT converged]" }
+                );
+            }
+            Ok(())
+        })();
+        done.store(true, Ordering::Release);
+        run
+    });
+    outcome?;
+    println!(
+        "served {} queries across {} epochs; final top-{k}:",
+        fmt::count(server.queries_served()),
+        engine.epoch()
+    );
+    for (rank, (u, score)) in server.top_k(k).into_iter().enumerate() {
+        println!("  #{:<2} vertex {:<10} pr = {}", rank + 1, u, fmt::sci(score));
+    }
+    Ok(())
+}
+
 /// `gen`: materialize replica datasets to disk (binary + edge-list).
 pub fn cmd_gen(args: &ArgMap) -> Result<()> {
     let out = PathBuf::from(args.require("out")?);

@@ -2,12 +2,16 @@
 //!
 //! ```text
 //! pagerank-nb run      --graph <src> --algo <variant> [--threads N] …
+//! pagerank-nb serve    --graph <src> [--epochs N] [--batch N] [--readers N]
 //! pagerank-nb bench    <exp-id|all> [--out DIR]
 //! pagerank-nb bench-ci [--out FILE] [--baseline FILE] [--max-regress F] [--seed-baseline]
 //! pagerank-nb gen      (--all | --dataset NAME) --out DIR
 //! pagerank-nb info     --graph <src>
 //! pagerank-nb validate --graph <src> [--threads N]
 //! ```
+//!
+//! The full flag reference, with an example per subcommand, is in
+//! `docs/cli.md`.
 //!
 //! Graph sources (`--graph`): a `.bin` binary cache, a SNAP edge-list text
 //! file, or a generator spec — `web:N:DEG`, `social:N:DEG`, `road:N`,
@@ -29,6 +33,7 @@ pub fn dispatch(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "run" => commands::cmd_run(&ArgMap::parse(rest)?),
+        "serve" => commands::cmd_serve(&ArgMap::parse(rest)?),
         "bench" => commands::cmd_bench(rest),
         "bench-ci" => commands::cmd_bench_ci(&ArgMap::parse(rest)?),
         "gen" => commands::cmd_gen(&ArgMap::parse(rest)?),
@@ -56,6 +61,10 @@ USAGE:
                        [--partition vertex|edge] [--top K] [--damping D]
                        [--delta-threshold X]
                        [--pcpm-batch B] [--pcpm-layout compressed|slots]
+  pagerank-nb serve    --graph <src> [--mode frontier|frontier-pcpm]
+                       [--epochs N] [--batch N] [--readers N] [--top K]
+                       (evolve-query-reconverge loop: random edge batches,
+                        incremental reconvergence, epoch-snapshotted queries)
   pagerank-nb bench    <table1|fig1..fig9|xla|ablation|all> [--out DIR]
                        [--scale DIVISOR] [--threads N] [--samples N]
   pagerank-nb bench-ci [--out FILE] [--baseline FILE] [--max-regress F]
@@ -76,6 +85,8 @@ VARIANTS:
         tune --pcpm-batch / --pcpm-layout; also via --mode pcpm)
   frontier | frontier-pcpm (delta-scheduled gather; tune --delta-threshold,
         and --pcpm-layout for frontier-pcpm)
-  xla-block (needs `make artifacts`)"
+  xla-block (needs `make artifacts`)
+
+Full flag reference with examples: docs/cli.md"
     );
 }

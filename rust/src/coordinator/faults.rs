@@ -74,10 +74,12 @@ impl FaultPlan {
         plan
     }
 
+    /// No sleeps and no failures scheduled?
     pub fn is_empty(&self) -> bool {
         self.sleeps.is_empty() && self.failures.is_empty()
     }
 
+    /// Is at least one crash scheduled?
     pub fn has_failures(&self) -> bool {
         !self.failures.is_empty()
     }

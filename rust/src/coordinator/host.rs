@@ -6,12 +6,16 @@
 /// Host description embedded in report notes.
 #[derive(Debug, Clone)]
 pub struct HostInfo {
+    /// Hardware threads reported by the OS.
     pub available_parallelism: usize,
+    /// Operating system name (`std::env::consts::OS`).
     pub os: String,
+    /// CPU architecture (`std::env::consts::ARCH`).
     pub arch: String,
 }
 
 impl HostInfo {
+    /// Probe the current host.
     pub fn detect() -> Self {
         Self {
             available_parallelism: std::thread::available_parallelism()
@@ -41,6 +45,7 @@ impl HostInfo {
         self.available_parallelism.clamp(1, 64)
     }
 
+    /// One-line host summary for report notes.
     pub fn describe(&self) -> String {
         format!(
             "host: {} {}, {} hardware threads (paper: 56-core Xeon E5-2660 v4)",

@@ -18,6 +18,7 @@ pub struct RunMetrics {
 }
 
 impl RunMetrics {
+    /// Zeroed counters for `threads` workers; the clock starts now.
     pub fn new(threads: usize) -> Self {
         Self {
             iterations: (0..threads).map(|_| AtomicU64::new(0)).collect(),
@@ -28,11 +29,13 @@ impl RunMetrics {
         }
     }
 
+    /// Count one completed sweep for `thread`.
     #[inline]
     pub fn bump_iteration(&self, thread: usize) {
         self.iterations[thread].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count `count` edges processed by `thread`.
     #[inline]
     pub fn add_edges(&self, thread: usize, count: u64) {
         self.edges_processed[thread].fetch_add(count, Ordering::Relaxed);
@@ -60,26 +63,32 @@ impl RunMetrics {
         self.vertices_gathered[thread].load(Ordering::Relaxed)
     }
 
+    /// Total vertex updates across all threads.
     pub fn total_gathered(&self) -> u64 {
         self.vertices_gathered.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
+    /// Per-thread sweep counts.
     pub fn iterations_per_thread(&self) -> Vec<u64> {
         self.iterations.iter().map(|a| a.load(Ordering::Relaxed)).collect()
     }
 
+    /// Maximum sweep count over threads (thread-level iteration count).
     pub fn max_iterations(&self) -> u64 {
         self.iterations_per_thread().into_iter().max().unwrap_or(0)
     }
 
+    /// Total edges processed across all threads.
     pub fn total_edges(&self) -> u64 {
         self.edges_processed.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
+    /// Total perforation-frozen vertices across all threads.
     pub fn total_skipped(&self) -> u64 {
         self.vertices_skipped.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
+    /// Seconds since the metrics were created.
     pub fn elapsed_secs(&self) -> f64 {
         self.started.elapsed().as_secs_f64()
     }

@@ -42,10 +42,12 @@
 use crate::engine::{inv_out_degrees, Kernel, SyncMode, WorkerCtx};
 use crate::graph::{CompressedBins, Csr, Partitions, VertexId};
 use crate::pagerank::{amplify_work, PcpmLayout, PrConfig};
-use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
+use crate::sync::atomics::{atomic_vec, atomic_vec_from, snapshot, AtomicF64};
 use crate::sync::dirty::DirtyFlags;
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
+/// Pull-model frontier kernel: a dirty vertex re-reads its in-neighbours'
+/// ranks directly. See the module docs for the schedule.
 pub struct FrontierKernel<'g> {
     g: &'g Csr,
     parts: Partitions,
@@ -62,21 +64,41 @@ pub struct FrontierKernel<'g> {
     work_amplify: u32,
 }
 
-/// Registry builder for [`Variant::Frontier`](crate::pagerank::Variant).
+/// Registry builder for [`Variant::Frontier`](crate::pagerank::Variant):
+/// cold start — uniform ranks, every vertex dirty.
 pub fn kernel<'g>(
     g: &'g Csr,
     cfg: &PrConfig,
     parts: &Partitions,
 ) -> Result<Box<dyn Kernel + 'g>> {
     let n = g.num_vertices();
-    let init = 1.0 / n as f64;
+    let init = vec![1.0 / n as f64; n];
+    warm_kernel(g, cfg, parts, &init, DirtyFlags::new_set(n))
+}
+
+/// Warm-start builder for the incremental path
+/// ([`crate::engine::incremental`]): ranks resume from `warm` and only the
+/// vertices set in `dirty` are re-gathered. `last_pushed` is seeded from
+/// `warm` too — an undisturbed vertex has, by construction, already
+/// propagated its warm value, so it must not re-push until its rank
+/// actually moves past the delta threshold.
+pub fn warm_kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    parts: &Partitions,
+    warm: &[f64],
+    dirty: DirtyFlags,
+) -> Result<Box<dyn Kernel + 'g>> {
+    let n = g.num_vertices();
+    ensure!(warm.len() == n, "warm rank vector length {} != n {}", warm.len(), n);
+    ensure!(dirty.len() == n, "dirty bitmap length {} != n {}", dirty.len(), n);
     Ok(Box::new(FrontierKernel {
         g,
         parts: parts.clone(),
         inv_out: inv_out_degrees(g),
-        pr: atomic_vec(n, init),
-        last_pushed: atomic_vec(n, init),
-        dirty: DirtyFlags::new_set(n),
+        pr: atomic_vec_from(warm),
+        last_pushed: atomic_vec_from(warm),
+        dirty,
         delta: cfg.resolved_delta_threshold(),
         base: (1.0 - cfg.damping) / n as f64,
         d: cfg.damping,
@@ -133,6 +155,9 @@ impl Kernel for FrontierKernel<'_> {
     }
 }
 
+/// PCPM-propagation frontier kernel: changed vertices scatter their
+/// contribution into the compressed value stream; dirty vertices gather
+/// from it. See the module docs for the schedule.
 pub struct FrontierPcpmKernel<'g> {
     g: &'g Csr,
     parts: Partitions,
@@ -155,25 +180,43 @@ pub struct FrontierPcpmKernel<'g> {
 }
 
 /// Registry builder for
-/// [`Variant::FrontierPcpm`](crate::pagerank::Variant::FrontierPcpm).
+/// [`Variant::FrontierPcpm`](crate::pagerank::Variant::FrontierPcpm):
+/// cold start — uniform ranks, every vertex dirty.
 pub fn pcpm_kernel<'g>(
     g: &'g Csr,
     cfg: &PrConfig,
     parts: &Partitions,
 ) -> Result<Box<dyn Kernel + 'g>> {
     let n = g.num_vertices();
-    let init = 1.0 / n as f64;
+    let init = vec![1.0 / n as f64; n];
+    warm_pcpm_kernel(g, cfg, parts, &init, DirtyFlags::new_set(n))
+}
+
+/// Warm-start builder for the PCPM frontier kernel. The
+/// [`CompressedBins`] scatter plan is rebuilt against the (possibly
+/// mutated) CSR, and **every** value slot is re-seeded with its source's
+/// warm contribution `warm[u] / outdeg(u)` — vertices outside the seeded
+/// frontier never re-scatter, so the whole grid must already be consistent
+/// with the warm ranks before the first sweep.
+pub fn warm_pcpm_kernel<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    parts: &Partitions,
+    warm: &[f64],
+    dirty: DirtyFlags,
+) -> Result<Box<dyn Kernel + 'g>> {
+    let n = g.num_vertices();
+    ensure!(warm.len() == n, "warm rank vector length {} != n {}", warm.len(), n);
+    ensure!(dirty.len() == n, "dirty bitmap length {} != n {}", dirty.len(), n);
     let inv_out = inv_out_degrees(g);
     let bins = match cfg.pcpm_layout {
         PcpmLayout::Compressed => CompressedBins::new(g, parts),
         PcpmLayout::Slots => CompressedBins::new_per_edge(g, parts),
     };
     let in_slots = bins.in_value_slots(g, parts);
-    // Seed every value slot with its source's initial contribution (every
-    // vertex starts dirty, so the first sweeps read a fully-populated grid).
     let values = atomic_vec(bins.num_values(), 0.0);
     for u in 0..n as VertexId {
-        let contribution = init * inv_out[u as usize];
+        let contribution = warm[u as usize] * inv_out[u as usize];
         for &slot in bins.push_slots(u) {
             values[slot].store(contribution);
         }
@@ -183,11 +226,11 @@ pub fn pcpm_kernel<'g>(
         parts: parts.clone(),
         in_slots,
         inv_out,
-        pr: atomic_vec(n, init),
+        pr: atomic_vec_from(warm),
         values,
         bins,
-        last_pushed: atomic_vec(n, init),
-        dirty: DirtyFlags::new_set(n),
+        last_pushed: atomic_vec_from(warm),
+        dirty,
         delta: cfg.resolved_delta_threshold(),
         base: (1.0 - cfg.damping) / n as f64,
         d: cfg.damping,

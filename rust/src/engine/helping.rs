@@ -66,6 +66,7 @@ pub struct HelpingState<'g> {
 }
 
 impl<'g> HelpingState<'g> {
+    /// Build the protocol state (the clock starts before preprocessing).
     pub fn new(g: &'g Csr, cfg: &PrConfig, parts: &Partitions) -> Self {
         // Clock starts before the O(n+m) preprocessing below so the
         // algorithmic-completion time includes it, like every other

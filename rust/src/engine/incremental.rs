@@ -1,0 +1,175 @@
+//! Incremental PageRank over graph mutations.
+//!
+//! Asynchronous iteration converges to the same fixed point from *any*
+//! starting vector (Kollias et al., arXiv:cs/0606047), so after an edge
+//! batch mutates the graph there is no need to recompute from the uniform
+//! vector: resume from the previous ranks and re-gather only the vertices
+//! the mutation could have disturbed. The frontier kernels
+//! ([`crate::engine::frontier`]) already schedule exactly that way — this
+//! module supplies the warm-started entry points that connect them to
+//! [`crate::graph::GraphDelta`]:
+//!
+//! 1. [`seed_frontier`] turns the touched-vertex set of an applied delta
+//!    into a [`DirtyFlags`] seed: each touched vertex (its in-list, degree,
+//!    or both may have changed, so its rank must be re-gathered) plus its
+//!    out-neighbourhood (a source's degree change rescales the
+//!    `pr(v)/outdeg(v)` contribution every out-neighbour reads).
+//! 2. [`reconverge`] runs a frontier kernel warm-started from the previous
+//!    ranks with that seed, through the ordinary NonBlocking driver —
+//!    termination, confirmation sweeps, and DNF handling are unchanged.
+//! 3. [`mutate_and_reconverge`] is the one-call bundle the serving layer
+//!    and CLI use: apply the delta, seed, reconverge.
+//!
+//! The returned [`PrResult`] reports `vertex_updates` for the delta
+//! convergence only, so the incremental saving is directly measurable
+//! against a cold run (the property suite asserts it is strictly cheaper;
+//! `bench-ci` tracks it as ablation rows).
+
+use crate::engine::{driver, frontier};
+use crate::graph::{Csr, GraphDelta, Partitions, VertexId};
+use crate::pagerank::{PrConfig, PrResult, Variant};
+use crate::sync::dirty::DirtyFlags;
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// Build the dirty-bitmap seed for an incremental reconvergence: every
+/// vertex in `touched` plus its out-neighbours. `touched` holds the
+/// endpoints of all mutated edges (see
+/// [`AppliedDelta::touched`](crate::graph::AppliedDelta)); the
+/// out-neighbour closure covers the contribution rescale when a source's
+/// out-degree changed.
+pub fn seed_frontier(g: &Csr, touched: &[VertexId]) -> DirtyFlags {
+    let dirty = DirtyFlags::new_clear(g.num_vertices());
+    for &u in touched {
+        dirty.set(u);
+        for &w in g.out_neighbors(u) {
+            dirty.set(w);
+        }
+    }
+    dirty
+}
+
+/// Reconverge `g` from the `warm` rank vector after a mutation that
+/// disturbed `touched`, using a frontier-scheduled kernel. Only
+/// [`Variant::Frontier`] and [`Variant::FrontierPcpm`] support warm starts
+/// (the full-sweep kernels would re-gather everything anyway); other
+/// variants are an error. The reported wall time covers seeding, kernel
+/// construction (including the PCPM scatter-plan rebuild), and the solve.
+pub fn reconverge(
+    g: &Csr,
+    variant: Variant,
+    cfg: &PrConfig,
+    warm: &[f64],
+    touched: &[VertexId],
+) -> Result<PrResult> {
+    cfg.validate()?;
+    if g.num_vertices() == 0 {
+        return Ok(PrResult::empty(variant, cfg.threads));
+    }
+    let parts = Partitions::new(g, cfg.threads, cfg.partition);
+    let start = Instant::now();
+    let dirty = seed_frontier(g, touched);
+    let kernel = match variant {
+        Variant::Frontier => frontier::warm_kernel(g, cfg, &parts, warm, dirty)?,
+        Variant::FrontierPcpm => frontier::warm_pcpm_kernel(g, cfg, &parts, warm, dirty)?,
+        other => bail!("{other} does not support incremental reconvergence; \
+                        use frontier or frontier-pcpm"),
+    };
+    driver::execute(variant, cfg, kernel.as_ref(), start)
+}
+
+/// Outcome of [`mutate_and_reconverge`]: the mutated graph and the
+/// reconverged ranks.
+#[derive(Debug)]
+pub struct IncrementalRun {
+    /// The graph after the delta was applied.
+    pub graph: Csr,
+    /// The reconverged solve (ranks, iterations, `vertex_updates`, …).
+    pub result: PrResult,
+    /// Number of touched vertices the frontier was seeded from.
+    pub touched: usize,
+}
+
+/// Apply `delta` to `base` and reconverge from the `warm` ranks in one
+/// call — the serving layer's epoch step.
+pub fn mutate_and_reconverge(
+    base: &Csr,
+    delta: &GraphDelta,
+    variant: Variant,
+    cfg: &PrConfig,
+    warm: &[f64],
+) -> Result<IncrementalRun> {
+    let applied = base.apply_delta(delta)?;
+    let result = reconverge(&applied.graph, variant, cfg, warm, &applied.touched)?;
+    Ok(IncrementalRun { graph: applied.graph, result, touched: applied.touched.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic;
+    use crate::pagerank;
+
+    fn cfg() -> PrConfig {
+        PrConfig { threads: 3, threshold: 1e-12, ..PrConfig::default() }
+    }
+
+    #[test]
+    fn seed_covers_touched_and_out_neighbourhoods() {
+        let g = synthetic::cycle(10); // u → u+1
+        let dirty = seed_frontier(&g, &[3, 7]);
+        for v in 0..10u32 {
+            assert_eq!(
+                dirty.is_set(v),
+                matches!(v, 3 | 4 | 7 | 8),
+                "vertex {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_seed_converges_immediately_from_fixed_point() {
+        let g = synthetic::web_replica(300, 5, 17);
+        let c = cfg();
+        let cold = pagerank::run(&g, Variant::Frontier, &c).unwrap();
+        // No mutation, no touched set: the warm ranks are already the fixed
+        // point and the frontier is empty — only confirmation sweeps run.
+        let warm = reconverge(&g, Variant::Frontier, &c, &cold.ranks, &[]).unwrap();
+        assert!(warm.converged);
+        assert!(warm.l1_norm(&cold.ranks) < 1e-12);
+        assert_eq!(warm.vertex_updates, 0, "nothing was dirty");
+    }
+
+    #[test]
+    fn non_frontier_variant_is_rejected() {
+        let g = synthetic::cycle(6);
+        let warm = vec![1.0 / 6.0; 6];
+        let err = reconverge(&g, Variant::Barrier, &cfg(), &warm, &[0]);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("frontier"));
+    }
+
+    #[test]
+    fn empty_graph_short_circuits() {
+        let g = crate::graph::GraphBuilder::new(0).build("nil");
+        let r = reconverge(&g, Variant::Frontier, &cfg(), &[], &[]).unwrap();
+        assert!(r.converged);
+        assert!(r.ranks.is_empty());
+    }
+
+    #[test]
+    fn mutate_and_reconverge_tracks_cold_recompute() {
+        let base = synthetic::web_replica(400, 5, 29);
+        let c = cfg();
+        let cold_base = pagerank::run(&base, Variant::Frontier, &c).unwrap();
+        let delta = GraphDelta::random(&base, 6, 3, 99);
+        for v in [Variant::Frontier, Variant::FrontierPcpm] {
+            let inc = mutate_and_reconverge(&base, &delta, v, &c, &cold_base.ranks).unwrap();
+            assert!(inc.result.converged, "{v}");
+            assert!(inc.touched > 0, "{v}");
+            let oracle = pagerank::run(&inc.graph, Variant::Barrier, &c).unwrap();
+            let l1 = inc.result.l1_norm(&oracle.ranks);
+            assert!(l1 < 1e-6, "{v}: l1 {l1}");
+        }
+    }
+}

@@ -29,6 +29,7 @@
 pub mod driver;
 pub mod frontier;
 pub mod helping;
+pub mod incremental;
 pub mod pcpm;
 
 use crate::coordinator::metrics::RunMetrics;
@@ -120,7 +121,9 @@ pub type KernelBuilder =
 
 /// One row of the dispatch table.
 pub struct KernelEntry {
+    /// The variant this row serves.
     pub variant: Variant,
+    /// Cold-start kernel constructor for the variant.
     pub build: KernelBuilder,
 }
 

@@ -44,6 +44,7 @@ use crate::pagerank::{amplify_work, PcpmLayout, PrConfig};
 use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
 use anyhow::{bail, Result};
 
+/// Partition-centric scatter-gather kernel on the compressed bin streams.
 pub struct PcpmKernel<'g> {
     g: &'g Csr,
     /// Fine partitions: `threads × batch` contiguous ranges; worker `t`

@@ -17,6 +17,7 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
+    /// A builder for a graph with `n` vertices and no edges yet.
     pub fn new(n: usize) -> Self {
         assert!(n <= VertexId::MAX as usize, "vertex count exceeds id width");
         Self { n, src: Vec::new(), dst: Vec::new(), dedup: false }
@@ -29,6 +30,7 @@ impl GraphBuilder {
         self
     }
 
+    /// Add one directed edge `u -> v`.
     pub fn edge(&mut self, u: VertexId, v: VertexId) -> &mut Self {
         debug_assert!((u as usize) < self.n && (v as usize) < self.n);
         self.src.push(u);
@@ -36,6 +38,7 @@ impl GraphBuilder {
         self
     }
 
+    /// Add a batch of directed edges.
     pub fn edges(mut self, list: &[(VertexId, VertexId)]) -> Self {
         self.src.reserve(list.len());
         self.dst.reserve(list.len());
@@ -45,6 +48,7 @@ impl GraphBuilder {
         self
     }
 
+    /// Edges added so far.
     pub fn edge_count(&self) -> usize {
         self.src.len()
     }

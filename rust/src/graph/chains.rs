@@ -31,6 +31,7 @@ pub struct Chain {
 /// All maximal chains of a graph.
 #[derive(Debug, Clone)]
 pub struct ChainSet {
+    /// Every maximal chain found.
     pub chains: Vec<Chain>,
     /// `true` for vertices that are interior links of some chain.
     pub is_link: Vec<bool>,
@@ -81,6 +82,7 @@ impl ChainSet {
         self.chains.iter().map(|c| c.links.len()).sum()
     }
 
+    /// Fraction of vertices eliminated by chain collapse.
     pub fn savings_ratio(&self, g: &Csr) -> f64 {
         self.eliminated_vertices() as f64 / g.num_vertices().max(1) as f64
     }

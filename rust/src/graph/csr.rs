@@ -21,10 +21,12 @@ pub struct Csr {
     /// Out-adjacency. `out_edges[out_offsets[u]..out_offsets[u+1]]` are the
     /// targets of `u`'s out-links.
     pub out_offsets: Vec<usize>,
+    /// Flattened out-adjacency targets (indexed through `out_offsets`).
     pub out_edges: Vec<VertexId>,
     /// In-adjacency (the transpose). `in_edges[in_offsets[u]..in_offsets[u+1]]`
     /// are the sources pointing at `u`.
     pub in_offsets: Vec<usize>,
+    /// Flattened in-adjacency sources (indexed through `in_offsets`).
     pub in_edges: Vec<VertexId>,
     /// `offset_list[e]`, for `e` indexing `out_edges`, is the position in
     /// `in_edges` (equivalently: in the contribution list) that edge writes
@@ -48,11 +50,13 @@ impl Csr {
         self.out_edges.len()
     }
 
+    /// Number of out-edges of `u`.
     #[inline]
     pub fn out_degree(&self, u: VertexId) -> usize {
         self.out_offsets[u as usize + 1] - self.out_offsets[u as usize]
     }
 
+    /// Number of in-edges of `u`.
     #[inline]
     pub fn in_degree(&self, u: VertexId) -> usize {
         self.in_offsets[u as usize + 1] - self.in_offsets[u as usize]

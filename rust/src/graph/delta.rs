@@ -1,0 +1,429 @@
+//! Edge-batch mutations over the immutable [`Csr`] — the graph side of the
+//! incremental PageRank path.
+//!
+//! A [`GraphDelta`] collects edge insertions and deletions; applying it
+//! yields a *new* CSR (the base graph is never modified, so in-flight
+//! readers and epoch snapshots stay valid) plus the set of **touched
+//! vertices** — every endpoint of a mutated edge. [`crate::engine::incremental`]
+//! seeds the frontier dirty bitmap with the touched vertices and their
+//! out-neighbourhoods, so the `Frontier`/`Frontier-PCPM` kernels converge
+//! only the delta instead of recomputing from scratch (asynchronous
+//! iteration restarts from any warm point — Kollias et al.,
+//! arXiv:cs/0606047).
+//!
+//! ## Rebuild strategy
+//!
+//! `apply_delta` splices the forward adjacency: the runs of *untouched*
+//! sources are block-copied verbatim (one `extend_from_slice` per maximal
+//! run), and only the touched sources' runs are rebuilt — deletions
+//! filtered out in place, insertions appended in batch order, preserving
+//! the builder's stable source-grouped edge order (the bit-exactness
+//! contract [`crate::graph::CompressedBins`] relies on). The transpose and
+//! the push→pull `offset_list` shift globally when any in-run changes
+//! length, so they are rebuilt with the same O(n + m) counting-sort pass
+//! as [`crate::graph::GraphBuilder`]. `CompressedBins` scatter plans are
+//! *not* patched here: they are rebuilt per run by the kernel constructor
+//! against the new CSR, and the warm-start path re-seeds the whole value
+//! stream from the previous ranks so the first sweeps still touch only the
+//! seeded frontier (see `engine::frontier`).
+//!
+//! ## Semantics
+//!
+//! * Insertions append one edge occurrence each; parallel edges are
+//!   allowed, exactly as in [`crate::graph::GraphBuilder`].
+//! * Deletions are multiset removals: each `delete(u, v)` removes **one**
+//!   occurrence of `(u, v)`, and deleting an edge the graph (minus earlier
+//!   deletes in the same batch) does not contain is an error.
+//! * The vertex count is fixed: endpoints must be `< num_vertices()`.
+//! * Degree bookkeeping (and therefore the dangling set,
+//!   [`Csr::dangling_count`]) follows from the rebuilt offsets — deleting a
+//!   vertex's last out-edge makes it dangling, inserting from a dangling
+//!   vertex un-dangles it.
+
+use crate::graph::{Csr, VertexId};
+use crate::util::rng::Xoshiro256pp;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A batch of edge insertions and deletions to apply to a [`Csr`].
+#[derive(Debug, Clone, Default)]
+pub struct GraphDelta {
+    inserts: Vec<(VertexId, VertexId)>,
+    deletes: Vec<(VertexId, VertexId)>,
+}
+
+impl GraphDelta {
+    /// An empty batch.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue an edge insertion `u → v`.
+    pub fn insert(&mut self, u: VertexId, v: VertexId) -> &mut Self {
+        self.inserts.push((u, v));
+        self
+    }
+
+    /// Queue the removal of one occurrence of the edge `u → v`.
+    pub fn delete(&mut self, u: VertexId, v: VertexId) -> &mut Self {
+        self.deletes.push((u, v));
+        self
+    }
+
+    /// Queued insertions, in batch order.
+    pub fn inserts(&self) -> &[(VertexId, VertexId)] {
+        &self.inserts
+    }
+
+    /// Queued deletions, in batch order.
+    pub fn deletes(&self) -> &[(VertexId, VertexId)] {
+        &self.deletes
+    }
+
+    /// Total number of queued mutations.
+    pub fn len(&self) -> usize {
+        self.inserts.len() + self.deletes.len()
+    }
+
+    /// Is the batch empty?
+    pub fn is_empty(&self) -> bool {
+        self.inserts.is_empty() && self.deletes.is_empty()
+    }
+
+    /// A deterministic random mutation batch against `g`: `inserts` fresh
+    /// edges between uniform non-equal endpoints plus up to `deletes`
+    /// removals of *distinct existing* edges (clamped to the edge count, so
+    /// the multiset-deletion contract of [`Csr::apply_delta`] always
+    /// holds). Used by the `serve` scenario driver and the bench-ci
+    /// incremental ablation rows.
+    pub fn random(g: &Csr, inserts: usize, deletes: usize, seed: u64) -> GraphDelta {
+        let n = g.num_vertices();
+        let m = g.num_edges();
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut delta = GraphDelta::new();
+        if n >= 2 {
+            for _ in 0..inserts {
+                let u = rng.next_below(n as u64) as VertexId;
+                let mut v = rng.next_below(n as u64) as VertexId;
+                if v == u {
+                    v = (v + 1) % n as VertexId;
+                }
+                delta.insert(u, v);
+            }
+        }
+        for e in rng.sample_indices(m, deletes.min(m)) {
+            // Map the flat edge index back to (source, target): the source
+            // is the last vertex whose offset run starts at or before `e`.
+            let u = g.out_offsets.partition_point(|&off| off <= e) - 1;
+            delta.delete(u as VertexId, g.out_edges[e]);
+        }
+        delta
+    }
+}
+
+/// The outcome of [`Csr::apply_delta`]: the mutated graph plus the sorted,
+/// deduplicated set of vertices whose adjacency changed (every endpoint of
+/// an inserted or deleted edge).
+#[derive(Debug, Clone)]
+pub struct AppliedDelta {
+    /// The new graph; the base CSR is untouched.
+    pub graph: Csr,
+    /// Endpoints of every mutated edge, ascending and deduplicated — the
+    /// frontier seed for [`crate::engine::incremental::reconverge`].
+    pub touched: Vec<VertexId>,
+}
+
+impl Csr {
+    /// Apply an edge batch, producing a new graph and the touched-vertex
+    /// set. See the [module docs](crate::graph::delta) for semantics and
+    /// the rebuild strategy; errors on out-of-range endpoints or deletion
+    /// of a missing edge, leaving nothing partially applied.
+    pub fn apply_delta(&self, delta: &GraphDelta) -> Result<AppliedDelta> {
+        let n = self.num_vertices();
+        for &(u, v) in delta.inserts().iter().chain(delta.deletes()) {
+            if u as usize >= n || v as usize >= n {
+                bail!(
+                    "delta edge ({u}, {v}) out of range for {n}-vertex graph '{}'",
+                    self.name
+                );
+            }
+        }
+        // Remaining multiset of deletions, decremented as matches are found.
+        let mut pending_del: BTreeMap<(VertexId, VertexId), usize> = BTreeMap::new();
+        for &(u, v) in delta.deletes() {
+            *pending_del.entry((u, v)).or_insert(0) += 1;
+        }
+        // Insertions grouped by source, preserving batch order within each.
+        let mut ins_by_src: BTreeMap<VertexId, Vec<VertexId>> = BTreeMap::new();
+        for &(u, v) in delta.inserts() {
+            ins_by_src.entry(u).or_default().push(v);
+        }
+        let touched_src: std::collections::BTreeSet<VertexId> = delta
+            .inserts()
+            .iter()
+            .chain(delta.deletes())
+            .map(|&(u, _)| u)
+            .collect();
+
+        // Forward CSR: splice the touched runs, block-copy the rest.
+        let new_m = (self.num_edges() + delta.inserts().len())
+            .checked_sub(delta.deletes().len())
+            .unwrap_or(0);
+        let mut out_offsets = Vec::with_capacity(n + 1);
+        out_offsets.push(0usize);
+        let mut out_edges: Vec<VertexId> = Vec::with_capacity(new_m);
+        let mut u = 0 as VertexId;
+        while (u as usize) < n {
+            if touched_src.contains(&u) {
+                for &v in self.out_neighbors(u) {
+                    if let Some(c) = pending_del.get_mut(&(u, v)) {
+                        if *c > 0 {
+                            *c -= 1;
+                            continue; // this occurrence is deleted
+                        }
+                    }
+                    out_edges.push(v);
+                }
+                if let Some(ins) = ins_by_src.get(&u) {
+                    out_edges.extend_from_slice(ins);
+                }
+                out_offsets.push(out_edges.len());
+                u += 1;
+            } else {
+                // Maximal untouched span [u, span_end): one block copy.
+                let mut span_end = u + 1;
+                while (span_end as usize) < n && !touched_src.contains(&span_end) {
+                    span_end += 1;
+                }
+                out_edges.extend_from_slice(
+                    &self.out_edges
+                        [self.out_offsets[u as usize]..self.out_offsets[span_end as usize]],
+                );
+                let base = out_offsets[u as usize] as i64
+                    - self.out_offsets[u as usize] as i64;
+                for w in u..span_end {
+                    out_offsets.push((self.out_offsets[w as usize + 1] as i64 + base) as usize);
+                }
+                u = span_end;
+            }
+        }
+        if let Some(((du, dv), _)) = pending_del.iter().find(|(_, &c)| c > 0) {
+            bail!(
+                "delta deletes edge ({du}, {dv}) which graph '{}' does not contain \
+                 (or not that many times)",
+                self.name
+            );
+        }
+        debug_assert_eq!(out_edges.len(), new_m);
+
+        // Transpose + offset_list: the same counting-sort pass as the
+        // builder — in-offsets shift globally whenever any in-run changes,
+        // so a targeted patch would still be O(n + m).
+        let m = out_edges.len();
+        let mut in_offsets = vec![0usize; n + 1];
+        for &v in &out_edges {
+            in_offsets[v as usize + 1] += 1;
+        }
+        for i in 0..n {
+            in_offsets[i + 1] += in_offsets[i];
+        }
+        let mut in_edges = vec![0 as VertexId; m];
+        let mut offset_list = vec![0usize; m];
+        {
+            let mut cursor = in_offsets[..n].to_vec();
+            for s in 0..n {
+                for e in out_offsets[s]..out_offsets[s + 1] {
+                    let v = out_edges[e] as usize;
+                    in_edges[cursor[v]] = s as VertexId;
+                    offset_list[e] = cursor[v];
+                    cursor[v] += 1;
+                }
+            }
+        }
+
+        let mut touched: Vec<VertexId> = delta
+            .inserts()
+            .iter()
+            .chain(delta.deletes())
+            .flat_map(|&(a, b)| [a, b])
+            .collect();
+        touched.sort_unstable();
+        touched.dedup();
+
+        Ok(AppliedDelta {
+            graph: Csr::from_parts(
+                n,
+                out_offsets,
+                out_edges,
+                in_offsets,
+                in_edges,
+                offset_list,
+                self.name.clone(),
+            ),
+            touched,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{synthetic, GraphBuilder};
+
+    /// Reference result: rebuild from scratch with the surviving edges in
+    /// source-grouped order plus the insertions appended per source — the
+    /// exact order `apply_delta` promises, so the CSRs must be identical.
+    fn rebuilt_reference(base: &Csr, delta: &GraphDelta) -> Csr {
+        let n = base.num_vertices();
+        let mut pending: BTreeMap<(VertexId, VertexId), usize> = BTreeMap::new();
+        for &(u, v) in delta.deletes() {
+            *pending.entry((u, v)).or_insert(0) += 1;
+        }
+        let mut b = GraphBuilder::new(n);
+        for u in 0..n as VertexId {
+            for &v in base.out_neighbors(u) {
+                if let Some(c) = pending.get_mut(&(u, v)) {
+                    if *c > 0 {
+                        *c -= 1;
+                        continue;
+                    }
+                }
+                b.edge(u, v);
+            }
+            for &(s, t) in delta.inserts().iter().filter(|&&(s, _)| s == u) {
+                b.edge(s, t);
+            }
+        }
+        b.build(&base.name)
+    }
+
+    #[test]
+    fn insert_and_delete_roundtrip_matches_rebuild() {
+        let base = synthetic::web_replica(300, 5, 11);
+        let mut delta = GraphDelta::new();
+        delta.insert(0, 7).insert(7, 0).insert(299, 1);
+        // delete three existing edges
+        for &u in &[3 as VertexId, 50, 120] {
+            if base.out_degree(u) > 0 {
+                delta.delete(u, base.out_neighbors(u)[0]);
+            }
+        }
+        let applied = base.apply_delta(&delta).unwrap();
+        assert_eq!(applied.graph.validate(), Ok(()));
+        assert_eq!(applied.graph, rebuilt_reference(&base, &delta));
+        assert_eq!(
+            applied.graph.num_edges(),
+            base.num_edges() + delta.inserts().len() - delta.deletes().len()
+        );
+        // touched = endpoints, sorted + deduped
+        assert!(applied.touched.windows(2).all(|w| w[0] < w[1]));
+        assert!(applied.touched.contains(&0) && applied.touched.contains(&7));
+    }
+
+    #[test]
+    fn untouched_adjacency_is_preserved_verbatim() {
+        let base = synthetic::web_replica(200, 4, 3);
+        let mut delta = GraphDelta::new();
+        delta.insert(5, 6);
+        let applied = base.apply_delta(&delta).unwrap();
+        for u in 0..200 as VertexId {
+            if u != 5 {
+                assert_eq!(
+                    applied.graph.out_neighbors(u),
+                    base.out_neighbors(u),
+                    "vertex {u}"
+                );
+            }
+        }
+        assert_eq!(applied.graph.out_degree(5), base.out_degree(5) + 1);
+        assert_eq!(*applied.graph.out_neighbors(5).last().unwrap(), 6);
+    }
+
+    #[test]
+    fn multiset_deletion_removes_one_occurrence_per_delete() {
+        let base = GraphBuilder::new(3).edges(&[(0, 1), (0, 1), (0, 2)]).build("multi");
+        let mut one = GraphDelta::new();
+        one.delete(0, 1);
+        let g1 = base.apply_delta(&one).unwrap().graph;
+        assert_eq!(g1.out_neighbors(0), &[1, 2]);
+        let mut two = GraphDelta::new();
+        two.delete(0, 1).delete(0, 1);
+        let g2 = base.apply_delta(&two).unwrap().graph;
+        assert_eq!(g2.out_neighbors(0), &[2]);
+        let mut three = GraphDelta::new();
+        three.delete(0, 1).delete(0, 1).delete(0, 1);
+        assert!(base.apply_delta(&three).is_err(), "only two occurrences exist");
+    }
+
+    #[test]
+    fn deleting_missing_edge_or_out_of_range_errors() {
+        let base = synthetic::cycle(10);
+        let mut missing = GraphDelta::new();
+        missing.delete(0, 5); // cycle only has 0 → 1
+        assert!(base.apply_delta(&missing).is_err());
+        let mut oob = GraphDelta::new();
+        oob.insert(0, 10);
+        assert!(base.apply_delta(&oob).is_err());
+        let mut oob2 = GraphDelta::new();
+        oob2.delete(10, 0);
+        assert!(base.apply_delta(&oob2).is_err());
+    }
+
+    #[test]
+    fn delete_to_dangling_and_back() {
+        let base = synthetic::chain(3); // 0→1→2, vertex 2 dangles
+        assert_eq!(base.dangling_count(), 1);
+        let mut cut = GraphDelta::new();
+        cut.delete(1, 2);
+        let g = base.apply_delta(&cut).unwrap().graph;
+        assert_eq!(g.dangling_count(), 2, "vertex 1 lost its only out-edge");
+        assert_eq!(g.out_degree(1), 0);
+        let mut heal = GraphDelta::new();
+        heal.insert(2, 0);
+        let g2 = base.apply_delta(&heal).unwrap().graph;
+        assert_eq!(g2.dangling_count(), 0, "vertex 2 un-dangled");
+    }
+
+    #[test]
+    fn empty_delta_is_identity() {
+        let base = synthetic::web_replica(150, 4, 9);
+        let applied = base.apply_delta(&GraphDelta::new()).unwrap();
+        assert_eq!(applied.graph, base);
+        assert!(applied.touched.is_empty());
+    }
+
+    #[test]
+    fn insert_into_edgeless_graph() {
+        let base = GraphBuilder::new(4).build("blank");
+        let mut delta = GraphDelta::new();
+        delta.insert(0, 1).insert(1, 2).insert(2, 3);
+        let applied = base.apply_delta(&delta).unwrap();
+        assert_eq!(applied.graph.validate(), Ok(()));
+        assert_eq!(applied.graph.num_edges(), 3);
+        assert_eq!(applied.graph.out_neighbors(1), &[2]);
+        assert_eq!(applied.touched, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn random_batches_always_apply_cleanly() {
+        for seed in 0..8u64 {
+            let base = synthetic::web_replica(120, 4, seed + 1);
+            let delta = GraphDelta::random(&base, 10, 6, seed);
+            assert!(!delta.is_empty());
+            assert_eq!(delta.len(), delta.inserts().len() + delta.deletes().len());
+            let applied = base.apply_delta(&delta).unwrap();
+            assert_eq!(applied.graph.validate(), Ok(()), "seed {seed}");
+            assert_eq!(applied.graph, rebuilt_reference(&base, &delta), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn random_on_tiny_graphs_is_safe() {
+        let one = GraphBuilder::new(1).build("one");
+        let d = GraphDelta::random(&one, 5, 5, 1);
+        assert!(d.inserts().is_empty(), "no non-loop edge exists on 1 vertex");
+        assert!(one.apply_delta(&d).is_ok());
+        let zero = GraphBuilder::new(0).build("zero");
+        assert!(zero.apply_delta(&GraphDelta::random(&zero, 3, 3, 1)).is_ok());
+    }
+}

@@ -58,6 +58,7 @@ impl IdenticalClasses {
         Self { class_of, representatives, members }
     }
 
+    /// Number of identical-vertex classes.
     pub fn num_classes(&self) -> usize {
         self.representatives.len()
     }

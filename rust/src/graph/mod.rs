@@ -6,6 +6,7 @@
 pub mod builder;
 pub mod chains;
 pub mod csr;
+pub mod delta;
 pub mod identical;
 pub mod io;
 pub mod partition;
@@ -16,6 +17,7 @@ pub mod synthetic;
 
 pub use builder::GraphBuilder;
 pub use csr::Csr;
+pub use delta::{AppliedDelta, GraphDelta};
 pub use partition::{CompressedBins, PartitionPolicy, Partitions};
 
 /// Vertex id type. `u32` halves the memory traffic of the gather loop versus

@@ -15,7 +15,9 @@ use crate::graph::{Csr, VertexId};
 /// How to split the vertex set.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PartitionPolicy {
+    /// Equal vertex counts per partition.
     VertexBalanced,
+    /// Roughly equal out-edge counts per partition.
     EdgeBalanced,
 }
 
@@ -32,6 +34,7 @@ impl std::fmt::Display for PartitionPolicy {
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Partitions {
     bounds: Vec<usize>, // len p+1, bounds[0]=0, bounds[p]=n
+    /// The policy these bounds were computed under.
     pub policy: PartitionPolicy,
 }
 
@@ -99,6 +102,7 @@ impl Partitions {
         Self { bounds, policy }
     }
 
+    /// Number of partitions `p`.
     pub fn count(&self) -> usize {
         self.bounds.len() - 1
     }
@@ -287,6 +291,7 @@ impl CompressedBins {
         }
     }
 
+    /// Partition count per axis of the bin grid.
     pub fn num_partitions(&self) -> usize {
         self.parts
     }

@@ -6,20 +6,28 @@ use crate::graph::{Csr, VertexId};
 /// Degree-distribution and connectivity summary of a graph.
 #[derive(Debug, Clone)]
 pub struct GraphStats {
+    /// Vertex count.
     pub vertices: usize,
+    /// Directed edge count.
     pub edges: usize,
+    /// Vertices with no out-edges.
     pub dangling: usize,
+    /// Largest in-degree.
     pub max_in_degree: usize,
+    /// Largest out-degree.
     pub max_out_degree: usize,
+    /// Mean out-degree.
     pub mean_degree: f64,
     /// Gini coefficient of the in-degree distribution (0 = uniform,
     /// → 1 = extreme hub concentration). Web replicas should be ≫ road
     /// replicas.
     pub in_degree_gini: f64,
+    /// Estimated CSR memory footprint in bytes.
     pub memory_bytes: u64,
 }
 
 impl GraphStats {
+    /// Compute the stats in one pass over the CSR.
     pub fn compute(g: &Csr) -> Self {
         let n = g.num_vertices();
         let mut in_degs: Vec<usize> = (0..n as VertexId).map(|u| g.in_degree(u)).collect();

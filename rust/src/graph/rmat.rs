@@ -18,7 +18,9 @@ use crate::util::rng::Xoshiro256pp;
 pub struct RmatParams {
     /// Quadrant probabilities; must be positive and sum to 1.
     pub a: f64,
+    /// Top-right quadrant probability.
     pub b: f64,
+    /// Bottom-left quadrant probability.
     pub c: f64,
     /// Per-level multiplicative noise on the quadrant probabilities
     /// (0 = none), as used by Graph500 to avoid exact self-similarity.
@@ -36,10 +38,12 @@ impl Default for RmatParams {
 }
 
 impl RmatParams {
+    /// The implied fourth-quadrant probability `1 - a - b - c`.
     pub fn d(&self) -> f64 {
         1.0 - self.a - self.b - self.c
     }
 
+    /// Check that the probabilities and noise are in range.
     pub fn validate(&self) -> Result<(), String> {
         let d = self.d();
         if self.a <= 0.0 || self.b <= 0.0 || self.c <= 0.0 || d <= 0.0 {

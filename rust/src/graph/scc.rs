@@ -91,6 +91,7 @@ impl SccDecomposition {
         Self { comp_of, members }
     }
 
+    /// Number of strongly-connected components.
     pub fn num_components(&self) -> usize {
         self.members.len()
     }

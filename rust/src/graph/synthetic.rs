@@ -180,9 +180,13 @@ fn scale_for(target_vertices: usize) -> u32 {
 /// Dataset category, mirroring Table 1's sections.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Category {
+    /// Web graphs (skewed in-degree).
     Web,
+    /// Social networks (heavier degree tail).
     Social,
+    /// Road networks (high diameter, near-uniform degree).
     Road,
+    /// Synthetic R-MAT graphs (the d-series).
     Synthetic,
 }
 
@@ -200,9 +204,13 @@ impl std::fmt::Display for Category {
 
 /// One Table-1 row: the paper's dataset and the replica that stands in.
 pub struct DatasetSpec {
+    /// Dataset name as printed in Table 1.
     pub name: &'static str,
+    /// Table-1 section this dataset belongs to.
     pub category: Category,
+    /// Vertex count reported by the paper.
     pub paper_vertices: u64,
+    /// Edge count reported by the paper.
     pub paper_edges: u64,
     /// Build the replica at `1/divisor` of the paper's size.
     pub build: fn(divisor: usize, seed: u64) -> Csr,

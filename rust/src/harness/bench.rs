@@ -18,11 +18,14 @@ use std::time::Instant;
 /// One named measurement.
 #[derive(Debug, Clone)]
 pub struct Measurement {
+    /// Measurement label.
     pub name: String,
+    /// Timing summary over the samples.
     pub summary: Summary,
 }
 
 impl Measurement {
+    /// Median seconds per run.
     pub fn secs(&self) -> f64 {
         self.summary.median
     }
@@ -31,7 +34,9 @@ impl Measurement {
 /// Timing runner.
 #[derive(Debug, Clone)]
 pub struct BenchRunner {
+    /// Timed samples per measurement.
     pub samples: usize,
+    /// Untimed warmup runs.
     pub warmup: usize,
 }
 
@@ -45,6 +50,7 @@ impl Default for BenchRunner {
 }
 
 impl BenchRunner {
+    /// Runner with explicit sample/warmup counts (samples floors at 1).
     pub fn new(samples: usize, warmup: usize) -> Self {
         Self { samples: samples.max(1), warmup }
     }

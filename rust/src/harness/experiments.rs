@@ -20,10 +20,15 @@ use std::time::Duration;
 
 /// Shared experiment context.
 pub struct Ctx {
+    /// Host description (embedded in report notes).
     pub host: HostInfo,
+    /// Dataset divisor vs Table-1 sizes.
     pub divisor: usize,
+    /// Worker thread count.
     pub threads: usize,
+    /// Timing runner.
     pub runner: BenchRunner,
+    /// Dataset seed.
     pub seed: u64,
 }
 

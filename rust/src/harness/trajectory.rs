@@ -2,7 +2,10 @@
 //!
 //! `pagerank-nb bench-ci` runs every registered engine variant — plus the
 //! PCPM layout/batching ablation rows (`PCPM-slots`, `Frontier-PCPM-slots`,
-//! `PCPM-batch4`) — on the scaled-down CI datasets, writes a
+//! `PCPM-batch4`) and the incremental-reconvergence rows (`Frontier-incr`,
+//! `Frontier-PCPM-incr`: warm-started convergence of a random mutation
+//! batch, see [`crate::engine::incremental`]) — on the scaled-down CI
+//! datasets, writes a
 //! `BENCH_ci.json` report (per-variant wall time, normalized time,
 //! iteration count, vertex updates), and —
 //! given a committed baseline — fails when a variant regresses beyond the
@@ -27,29 +30,41 @@ use std::time::Duration;
 /// One (dataset, variant) measurement.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchRow {
+    /// CI replica name.
     pub dataset: String,
+    /// Variant (or ablation-row) label.
     pub variant: String,
     /// Median wall-clock seconds over the sample runs.
     pub secs: f64,
     /// `secs / sequential secs` on the same dataset in the same run — the
     /// host-neutral number the gate compares.
     pub rel: f64,
+    /// Iterations until termination (max over threads).
     pub iterations: u64,
+    /// Total vertex gathers across threads (`0` = kernel not instrumented).
     pub vertex_updates: u64,
+    /// Did the run converge?
     pub converged: bool,
 }
 
 /// A full `BENCH_ci.json` document.
 #[derive(Debug, Clone)]
 pub struct BenchReport {
+    /// Report schema version ([`SCHEMA_VERSION`]).
     pub schema: u64,
+    /// Dataset divisor the replicas were built at.
     pub scale: usize,
+    /// Worker thread count.
     pub threads: usize,
+    /// Timed samples per measurement.
     pub samples: usize,
+    /// Host description string.
     pub host: String,
+    /// One row per `(dataset, variant)` measurement.
     pub rows: Vec<BenchRow>,
 }
 
+/// Current `BENCH_ci.json` schema version.
 pub const SCHEMA_VERSION: u64 = 1;
 
 /// Floor for the Sequential median `rel` normalizes against: below one
@@ -58,10 +73,12 @@ pub const SCHEMA_VERSION: u64 = 1;
 pub const MIN_SEQ_SECS: f64 = 1e-6;
 
 impl BenchReport {
+    /// The row for `(dataset, variant)`, if measured.
     pub fn find(&self, dataset: &str, variant: &str) -> Option<&BenchRow> {
         self.rows.iter().find(|r| r.dataset == dataset && r.variant == variant)
     }
 
+    /// Serialize to the `BENCH_ci.json` format.
     pub fn to_json(&self) -> String {
         let mut s = String::new();
         s.push_str("{\n");
@@ -89,6 +106,7 @@ impl BenchReport {
         s
     }
 
+    /// Parse a report written by [`BenchReport::to_json`].
     pub fn from_json(text: &str) -> Result<BenchReport> {
         let v = Json::parse(text)?;
         let obj = v.as_object().context("BENCH json root must be an object")?;
@@ -257,6 +275,40 @@ pub fn run_ci_bench(
             let (secs, probe) = measure(*v, vcfg);
             record(label, secs, &probe);
         }
+        // Incremental ablation rows: mutate the graph with a small random
+        // edge batch, then measure the frontier kernels reconverging the
+        // delta from the already-converged ranks. `vertex_updates` here is
+        // the incremental work metric the property suite holds strictly
+        // below a cold recompute; `rel` tracks reconvergence wall time
+        // against the same dataset's cold Sequential anchor.
+        {
+            use crate::graph::GraphDelta;
+            let batch = (g.num_edges() / 200).clamp(2, 512);
+            let delta = GraphDelta::random(&g, batch, batch / 2, seed ^ 0xD17A);
+            let applied = g.apply_delta(&delta).expect("random delta applies");
+            let warm = &seq_probe.ranks;
+            let incr = [
+                (Variant::Frontier, "Frontier-incr"),
+                (Variant::FrontierPcpm, "Frontier-PCPM-incr"),
+            ];
+            for (v, label) in incr {
+                let mut any_dnf = false;
+                let (m, probe) = runner.measure_with(label, || {
+                    let r = crate::engine::incremental::reconverge(
+                        &applied.graph,
+                        v,
+                        &cfg,
+                        warm,
+                        &applied.touched,
+                    )
+                    .expect("incremental reconverge");
+                    any_dnf |= r.dnf;
+                    (r.elapsed.as_secs_f64(), r)
+                });
+                let secs = if any_dnf { f64::INFINITY } else { m.summary.median };
+                record(label, secs, &probe);
+            }
+        }
     }
     Ok(BenchReport {
         schema: SCHEMA_VERSION,
@@ -363,15 +415,22 @@ pub fn comparable(current: &BenchReport, baseline: &BenchReport) -> bool {
 /// Minimal JSON value — just enough to read our own reports back.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number.
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Array(Vec<Json>),
+    /// An object, keys sorted.
     Object(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json> {
         let bytes = text.as_bytes();
         let mut pos = 0usize;
@@ -383,6 +442,7 @@ impl Json {
         Ok(v)
     }
 
+    /// The object's map, if this is an object.
     pub fn as_object(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Object(m) => Some(m),
@@ -390,6 +450,7 @@ impl Json {
         }
     }
 
+    /// The number, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -397,6 +458,7 @@ impl Json {
         }
     }
 
+    /// The string, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -404,6 +466,7 @@ impl Json {
         }
     }
 
+    /// The boolean, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -589,17 +652,34 @@ mod tests {
     fn report_covers_every_mode_on_every_dataset() {
         let r = tiny_report();
         // every engine mode plus the three layout/batching ablation rows
-        assert_eq!(r.rows.len(), 2 * (Variant::ALL_MODES.len() + 3));
+        // and the two incremental-reconvergence rows
+        assert_eq!(r.rows.len(), 2 * (Variant::ALL_MODES.len() + 5));
         for v in Variant::ALL_MODES {
             for ds in ["webStanford", "roaditalyosm"] {
                 let row = r.find(ds, v.name()).unwrap_or_else(|| panic!("{ds}/{v}"));
                 assert!(row.rel >= 0.0);
             }
         }
-        for label in ["PCPM-slots", "Frontier-PCPM-slots", "PCPM-batch4"] {
+        for label in [
+            "PCPM-slots",
+            "Frontier-PCPM-slots",
+            "PCPM-batch4",
+            "Frontier-incr",
+            "Frontier-PCPM-incr",
+        ] {
             for ds in ["webStanford", "roaditalyosm"] {
                 let row = r.find(ds, label).unwrap_or_else(|| panic!("{ds}/{label}"));
                 assert!(row.rel >= 0.0, "{ds}/{label}");
+            }
+        }
+        // incremental rows reconverge a non-empty seeded frontier, so they
+        // do real (instrumented) work and settle — the strict
+        // fewer-than-cold property is covered by the incremental suite
+        for ds in ["webStanford", "roaditalyosm"] {
+            for label in ["Frontier-incr", "Frontier-PCPM-incr"] {
+                let row = r.find(ds, label).unwrap();
+                assert!(row.converged, "{ds}/{label}");
+                assert!(row.vertex_updates >= 1, "{ds}/{label}");
             }
         }
         // the layout only changes the value-stream width, never the

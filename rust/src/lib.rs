@@ -34,8 +34,12 @@
 //! println!("converged in {} iterations", result.iterations);
 //! ```
 //!
-//! See `examples/` for end-to-end drivers and `rust/benches/` for the
-//! figure-by-figure reproduction harness.
+//! See `examples/` for end-to-end drivers, `rust/benches/` for the
+//! figure-by-figure reproduction harness, and `docs/architecture.md` for a
+//! guided tour of the engine internals (kernel dispatch, PCPM bins, the
+//! frontier/dirty-bitmap data flow, and the incremental/serving layer).
+
+#![warn(missing_docs)]
 
 pub mod cli;
 pub mod coordinator;
@@ -44,6 +48,7 @@ pub mod graph;
 pub mod harness;
 pub mod pagerank;
 pub mod runtime;
+pub mod serving;
 pub mod sync;
 pub mod testkit;
 pub mod util;

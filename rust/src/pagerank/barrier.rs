@@ -19,6 +19,7 @@ use crate::pagerank::{amplify_work, PrConfig};
 use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
 use anyhow::Result;
 
+/// Algorithm 1: barrier-synchronized vertex-centric pull kernel.
 pub struct BarrierKernel<'g> {
     g: &'g Csr,
     parts: Partitions,

@@ -19,6 +19,7 @@ use crate::pagerank::{amplify_work, PrConfig};
 use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
 use anyhow::Result;
 
+/// Algorithm 2: edge-centric push/pull with barrier-separated phases.
 pub struct BarrierEdgeKernel<'g> {
     g: &'g Csr,
     parts: Partitions,

@@ -34,11 +34,13 @@ impl ErrorBoard {
         }
     }
 
+    /// Store `thread`'s local max delta (release).
     #[inline]
     pub fn publish(&self, thread: usize, err: f64) {
         self.slots[thread].store_release(err);
     }
 
+    /// Load `thread`'s last published error (acquire).
     #[inline]
     pub fn read(&self, thread: usize) -> f64 {
         self.slots[thread].load_acquire()
@@ -55,10 +57,12 @@ impl ErrorBoard {
         m
     }
 
+    /// Number of slots (= threads).
     pub fn len(&self) -> usize {
         self.slots.len()
     }
 
+    /// True when there are no slots.
     pub fn is_empty(&self) -> bool {
         self.slots.is_empty()
     }

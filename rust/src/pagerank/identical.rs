@@ -46,6 +46,7 @@ pub(crate) fn split_classes(
     (0..threads).map(|i| bounds[i]..bounds[i + 1]).collect()
 }
 
+/// STIC-D identical-vertex kernel: one gather per class representative.
 pub struct IdenticalKernel<'g> {
     g: &'g Csr,
     blocking: bool,

@@ -49,16 +49,27 @@ use std::time::Duration;
 /// Which algorithm to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Variant {
+    /// Single-threaded oracle (the Eq. 1 fixed point).
     Sequential,
+    /// Algorithm 1: barrier-synchronized vertex-centric pull.
     Barrier,
+    /// Algorithm 1 + STIC-D identical-vertex elimination.
     BarrierIdentical,
+    /// Algorithm 2: barrier-synchronized edge-centric push/pull.
     BarrierEdge,
+    /// Algorithm 5, blocking: loop-perforation approximation.
     BarrierOpt,
+    /// Algorithm 6: wait-free CAS-helping.
     WaitFree,
+    /// Algorithm 3: barrier-free vertex-centric pull.
     NoSync,
+    /// Algorithm 3 + identical-vertex elimination.
     NoSyncIdentical,
+    /// Algorithm 4: barrier-free edge-centric push (may not converge, sect. 4.4).
     NoSyncEdge,
+    /// Algorithm 5, non-blocking: loop perforation.
     NoSyncOpt,
+    /// Algorithm 5 + identical-vertex elimination.
     NoSyncOptIdentical,
     /// Partition-centric scatter-gather (Lakhotia et al.) — ours, on top of
     /// the unified engine; not one of the paper's programs.
@@ -71,6 +82,7 @@ pub enum Variant {
     /// scatter their contribution through the partition bins instead of
     /// readers pulling the full rank array. Ours.
     FrontierPcpm,
+    /// Dense/ELL PageRank steps compiled via XLA (needs `make artifacts`).
     XlaBlock,
 }
 
@@ -158,6 +170,7 @@ impl Variant {
         )
     }
 
+    /// Canonical display name, as used in the paper's figures.
     pub fn name(self) -> &'static str {
         match self {
             Variant::Sequential => "Sequential",
@@ -178,6 +191,7 @@ impl Variant {
         }
     }
 
+    /// Parse a CLI variant name (case/underscore tolerant).
     pub fn parse(s: &str) -> Result<Variant> {
         let norm = s.to_ascii_lowercase().replace(['_', ' '], "-");
         Ok(match norm.as_str() {
@@ -229,6 +243,7 @@ impl std::fmt::Display for PcpmLayout {
 }
 
 impl PcpmLayout {
+    /// Parse a `--pcpm-layout` value.
     pub fn parse(s: &str) -> Result<PcpmLayout> {
         match s.to_ascii_lowercase().as_str() {
             "compressed" | "stream" => Ok(PcpmLayout::Compressed),
@@ -252,6 +267,7 @@ pub struct PrConfig {
     pub max_iterations: u64,
     /// Worker thread count `p`.
     pub threads: usize,
+    /// How to split the vertex set across workers.
     pub partition: PartitionPolicy,
     /// Loop-perforation cutoff factor: a vertex whose delta is non-zero and
     /// below `threshold * perforation_factor` is frozen (Alg 5 uses
@@ -304,6 +320,7 @@ impl Default for PrConfig {
 }
 
 impl PrConfig {
+    /// Check ranges; every entry point calls this before running.
     pub fn validate(&self) -> Result<()> {
         if !(0.0..1.0).contains(&self.damping) {
             bail!("damping must be in [0, 1)");
@@ -348,13 +365,17 @@ impl PrConfig {
 /// Outcome of a PageRank run.
 #[derive(Debug, Clone)]
 pub struct PrResult {
+    /// Which algorithm produced this result.
     pub variant: Variant,
+    /// Final rank vector (sums to roughly 1).
     pub ranks: Vec<f64>,
     /// Iterations until termination. For thread-level convergence this is
     /// the *maximum* over threads; per-thread counts are in
     /// `per_thread_iterations`.
     pub iterations: u64,
+    /// Sweep count per worker thread.
     pub per_thread_iterations: Vec<u64>,
+    /// Wall-clock time including kernel construction.
     pub elapsed: Duration,
     /// False when the iteration cap or the DNF watchdog fired.
     pub converged: bool,
@@ -393,19 +414,11 @@ impl PrResult {
 
     /// Indices of the top-k ranked vertices, descending. NaN ranks (possible
     /// in a non-converged No-Sync-Edge run) sort below every real number
-    /// instead of panicking (`total_cmp`).
+    /// instead of panicking — the ordering is
+    /// [`crate::serving::rank_descending`], shared with the snapshot
+    /// serving layer.
     pub fn top_k(&self, k: usize) -> Vec<(u32, f64)> {
-        let mut idx: Vec<u32> = (0..self.ranks.len() as u32).collect();
-        idx.sort_by(|&a, &b| {
-            let (ra, rb) = (self.ranks[a as usize], self.ranks[b as usize]);
-            // order NaN last regardless of sign-bit quirks of total_cmp
-            match (ra.is_nan(), rb.is_nan()) {
-                (true, true) => a.cmp(&b),
-                (true, false) => std::cmp::Ordering::Greater,
-                (false, true) => std::cmp::Ordering::Less,
-                (false, false) => rb.total_cmp(&ra).then(a.cmp(&b)),
-            }
-        });
+        let mut idx = crate::serving::rank_descending(&self.ranks);
         idx.truncate(k);
         idx.into_iter().map(|u| (u, self.ranks[u as usize])).collect()
     }

@@ -23,6 +23,7 @@ use crate::pagerank::{amplify_work, PrConfig};
 use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
 use anyhow::Result;
 
+/// Algorithm 3: vertex-centric pull with no barriers.
 pub struct NoSyncKernel<'g> {
     g: &'g Csr,
     parts: Partitions,

@@ -20,6 +20,7 @@ use crate::pagerank::{amplify_work, PrConfig};
 use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
 use anyhow::Result;
 
+/// Algorithm 4: edge-centric push with no barriers (may not converge, end of sect. 4.4).
 pub struct NoSyncEdgeKernel<'g> {
     g: &'g Csr,
     parts: Partitions,

@@ -14,6 +14,7 @@ use crate::graph::{Csr, Partitions};
 use crate::pagerank::PrConfig;
 use anyhow::Result;
 
+/// Algorithm 6: wait-free CAS-helping kernel (state in [`HelpingState`]).
 pub struct WaitFreeKernel<'g> {
     state: HelpingState<'g>,
 }

@@ -24,7 +24,9 @@ pub const F32_THRESHOLD_FLOOR: f64 = 1e-6;
 /// The padded ELL image of a graph, matching an artifact bucket.
 #[derive(Debug, Clone)]
 pub struct EllLayout {
+    /// ELL neighbour indices, row-major `n_bucket x k_bucket`.
     pub indices: Vec<i32>,
+    /// Per-slot contribution weights matching `indices`.
     pub weights: Vec<f32>,
     /// bucket rows (≥ graph vertices)
     pub n_bucket: usize,

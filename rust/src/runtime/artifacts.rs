@@ -27,7 +27,9 @@ pub enum ArtifactKind {
 /// A discovered artifact and its shape bucket.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArtifactSpec {
+    /// The computation this artifact implements.
     pub kind: ArtifactKind,
+    /// Location of the HLO text file.
     pub path: PathBuf,
     /// Max vertices.
     pub n: usize,

@@ -24,6 +24,7 @@ impl Engine {
         Ok(Self { client, cache: Mutex::new(HashMap::new()) })
     }
 
+    /// PJRT platform name (e.g. `cpu`).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -62,6 +63,7 @@ impl Engine {
 /// One compiled PageRank-step executable.
 pub struct LoadedStep {
     exe: xla::PjRtLoadedExecutable,
+    /// The artifact this executable was compiled from.
     pub spec: ArtifactSpec,
 }
 

@@ -1,0 +1,421 @@
+//! Epoch-snapshotted rank serving: concurrent `rank(v)` / `top_k(k)`
+//! queries while a background recompute runs.
+//!
+//! The non-blocking engine exists so ranks can keep converging while the
+//! world changes under them; this module is the read side of that story.
+//! Scores are published as immutable [`RankSnapshot`]s behind an
+//! `ArcSwap`-style atomic pointer (an `RwLock<Arc<_>>` here — the offline
+//! build carries no `arc-swap` crate, and the read path only clones an
+//! `Arc` under a momentary read lock, never blocking on a recompute):
+//!
+//! * a **reader** grabs the current `Arc<RankSnapshot>` and queries it for
+//!   as long as it likes — the snapshot is immutable, so a concurrent
+//!   publish can never tear it or shift its scores mid-read;
+//! * a **writer** (the epoch step in [`ServingEngine::apply`]) mutates the
+//!   graph, reconverges incrementally from the previous ranks
+//!   ([`crate::engine::incremental`]), builds the next snapshot *fully*
+//!   off to the side, and only then swaps the pointer.
+//!
+//! Every snapshot carries a self-checksum ([`RankSnapshot::verify`]) over
+//! its epoch, scores, and precomputed descending order, so stress tests
+//! can prove readers only ever observe fully-published snapshots.
+
+use crate::graph::{Csr, GraphDelta, VertexId};
+use crate::pagerank::{self, PrConfig, PrResult, Variant};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Vertex ids ordered by descending rank. NaN scores (possible in a
+/// non-converged No-Sync-Edge run) sort after every real number; ties
+/// break by ascending vertex id. [`PrResult::top_k`] and the snapshot's
+/// precomputed order both use this.
+pub fn rank_descending(ranks: &[f64]) -> Vec<VertexId> {
+    let mut idx: Vec<VertexId> = (0..ranks.len() as VertexId).collect();
+    idx.sort_by(|&a, &b| {
+        let (ra, rb) = (ranks[a as usize], ranks[b as usize]);
+        // order NaN last regardless of sign-bit quirks of total_cmp
+        match (ra.is_nan(), rb.is_nan()) {
+            (true, true) => a.cmp(&b),
+            (true, false) => std::cmp::Ordering::Greater,
+            (false, true) => std::cmp::Ordering::Less,
+            (false, false) => rb.total_cmp(&ra).then(a.cmp(&b)),
+        }
+    });
+    idx
+}
+
+/// An immutable, fully-materialized score publication. Built entirely
+/// before it becomes visible to any reader; once a reader holds the
+/// `Arc`, nothing about it can change.
+#[derive(Debug)]
+pub struct RankSnapshot {
+    epoch: u64,
+    ranks: Vec<f64>,
+    /// Vertex ids by descending rank, so `top_k` is an O(k) slice.
+    order: Vec<VertexId>,
+    checksum: u64,
+}
+
+/// FNV-1a over the epoch, every rank's bit pattern, and the order array —
+/// deterministic, so [`RankSnapshot::verify`] can recompute it exactly.
+fn snapshot_checksum(epoch: u64, ranks: &[f64], order: &[VertexId]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ epoch;
+    for &r in ranks {
+        h = (h ^ r.to_bits()).wrapping_mul(PRIME);
+    }
+    for &v in order {
+        h = (h ^ v as u64).wrapping_mul(PRIME);
+    }
+    h
+}
+
+impl RankSnapshot {
+    fn build(epoch: u64, ranks: Vec<f64>) -> Self {
+        let order = rank_descending(&ranks);
+        let checksum = snapshot_checksum(epoch, &ranks, &order);
+        Self { epoch, ranks, order, checksum }
+    }
+
+    /// The publication epoch (0 for the pre-bootstrap empty snapshot).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Score of vertex `v`, or `None` when `v` is out of range.
+    pub fn rank(&self, v: VertexId) -> Option<f64> {
+        self.ranks.get(v as usize).copied()
+    }
+
+    /// The full score array of this epoch.
+    pub fn ranks(&self) -> &[f64] {
+        &self.ranks
+    }
+
+    /// The `k` best-ranked vertices, descending (O(k) — the order is
+    /// precomputed at publish time).
+    pub fn top_k(&self, k: usize) -> Vec<(VertexId, f64)> {
+        self.order
+            .iter()
+            .take(k)
+            .map(|&v| (v, self.ranks[v as usize]))
+            .collect()
+    }
+
+    /// Number of vertices covered.
+    pub fn len(&self) -> usize {
+        self.ranks.len()
+    }
+
+    /// Is this the empty (zero-vertex) snapshot?
+    pub fn is_empty(&self) -> bool {
+        self.ranks.is_empty()
+    }
+
+    /// Recompute the checksum and compare: `true` iff the snapshot is
+    /// internally consistent. A torn or partially-published snapshot
+    /// cannot pass; the concurrency stress tests assert this on every
+    /// read.
+    pub fn verify(&self) -> bool {
+        snapshot_checksum(self.epoch, &self.ranks, &self.order) == self.checksum
+    }
+}
+
+/// The atomic publication point: readers clone the current
+/// [`RankSnapshot`] `Arc`; writers install fully-built snapshots at
+/// convergence epochs. Cheap to share (`Arc<RankServer>`) between the
+/// serving loop and any number of query threads.
+#[derive(Debug)]
+pub struct RankServer {
+    current: RwLock<Arc<RankSnapshot>>,
+    epoch: AtomicU64,
+    queries: AtomicU64,
+}
+
+impl Default for RankServer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RankServer {
+    /// A server holding the empty epoch-0 snapshot.
+    pub fn new() -> Self {
+        Self {
+            current: RwLock::new(Arc::new(RankSnapshot::build(0, Vec::new()))),
+            epoch: AtomicU64::new(0),
+            queries: AtomicU64::new(0),
+        }
+    }
+
+    /// Publish a new score array, returning its epoch. The snapshot —
+    /// scores, descending order, checksum — is built entirely before the
+    /// pointer swap, and the swap itself is guarded to be monotonic: if a
+    /// slower concurrent publisher drew an earlier epoch, its stale
+    /// snapshot is discarded rather than rolling the service back.
+    pub fn publish(&self, ranks: Vec<f64>) -> u64 {
+        let epoch = self.epoch.fetch_add(1, Ordering::AcqRel) + 1;
+        let snapshot = Arc::new(RankSnapshot::build(epoch, ranks));
+        let mut cur = self.current.write().expect("rank server lock poisoned");
+        if snapshot.epoch > cur.epoch {
+            *cur = snapshot;
+        }
+        epoch
+    }
+
+    /// The current snapshot. Readers hold it as long as they like; a
+    /// concurrent publish simply swaps the pointer for *future* readers.
+    pub fn snapshot(&self) -> Arc<RankSnapshot> {
+        Arc::clone(&self.current.read().expect("rank server lock poisoned"))
+    }
+
+    /// Epoch of the most recently published snapshot.
+    pub fn epoch(&self) -> u64 {
+        self.snapshot().epoch
+    }
+
+    /// Point query against the current snapshot.
+    pub fn rank(&self, v: VertexId) -> Option<f64> {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.snapshot().rank(v)
+    }
+
+    /// Top-k query against the current snapshot.
+    pub fn top_k(&self, k: usize) -> Vec<(VertexId, f64)> {
+        self.queries.fetch_add(1, Ordering::Relaxed);
+        self.snapshot().top_k(k)
+    }
+
+    /// Total `rank`/`top_k` queries answered since construction.
+    pub fn queries_served(&self) -> u64 {
+        self.queries.load(Ordering::Relaxed)
+    }
+}
+
+/// Telemetry for one [`ServingEngine::apply`] epoch step.
+#[derive(Debug, Clone)]
+pub struct EpochStats {
+    /// Epoch the reconverged scores were published as.
+    pub epoch: u64,
+    /// Touched vertices the frontier was seeded from.
+    pub touched: usize,
+    /// Solver iterations of the incremental reconvergence.
+    pub iterations: u64,
+    /// Vertex updates the reconvergence cost (the incremental saving
+    /// metric — compare against a cold run's `iterations × n`).
+    pub vertex_updates: u64,
+    /// Did the reconvergence hit the threshold (vs the iteration cap)?
+    pub converged: bool,
+    /// Wall time of the mutation + reconvergence, in seconds.
+    pub elapsed_secs: f64,
+    /// Edge count of the mutated graph.
+    pub edges: usize,
+}
+
+/// The evolve-query-reconverge loop: owns the current graph and warm
+/// ranks, publishes every converged epoch through its [`RankServer`].
+///
+/// ```text
+///   bootstrap: cold frontier solve  ──► publish epoch 1
+///   apply(δ):  mutate CSR ──► seed frontier ──► warm reconverge
+///              ──► publish epoch e+1          (readers query throughout)
+/// ```
+pub struct ServingEngine {
+    graph: Csr,
+    variant: Variant,
+    cfg: PrConfig,
+    server: Arc<RankServer>,
+    warm: Vec<f64>,
+}
+
+impl ServingEngine {
+    /// Cold-start a serving engine: run `variant` to convergence on
+    /// `graph` and publish the result as epoch 1. Only the frontier
+    /// variants can reconverge incrementally, so anything else is
+    /// rejected here rather than on the first `apply`.
+    pub fn bootstrap(graph: Csr, variant: Variant, cfg: PrConfig) -> Result<ServingEngine> {
+        if !matches!(variant, Variant::Frontier | Variant::FrontierPcpm) {
+            bail!("serving requires an incremental variant (frontier or frontier-pcpm), got {variant}");
+        }
+        cfg.validate()?;
+        let cold = pagerank::run(&graph, variant, &cfg)?;
+        let server = Arc::new(RankServer::new());
+        server.publish(cold.ranks.clone());
+        Ok(ServingEngine { graph, variant, cfg, server, warm: cold.ranks })
+    }
+
+    /// Handle to the query side; clone it into reader threads.
+    pub fn server(&self) -> Arc<RankServer> {
+        Arc::clone(&self.server)
+    }
+
+    /// The graph as of the most recent epoch.
+    pub fn graph(&self) -> &Csr {
+        &self.graph
+    }
+
+    /// The most recently published epoch.
+    pub fn epoch(&self) -> u64 {
+        self.server.epoch()
+    }
+
+    /// One epoch step: apply `delta`, reconverge incrementally from the
+    /// previous ranks, publish the new scores. Readers keep querying the
+    /// previous snapshot until the publish lands; a capped (unconverged)
+    /// reconvergence still publishes its best-known scores, flagged in
+    /// the returned stats.
+    pub fn apply(&mut self, delta: &GraphDelta) -> Result<EpochStats> {
+        let run = crate::engine::incremental::mutate_and_reconverge(
+            &self.graph,
+            delta,
+            self.variant,
+            &self.cfg,
+            &self.warm,
+        )?;
+        let PrResult { ranks, iterations, converged, vertex_updates, elapsed, .. } = run.result;
+        let epoch = self.server.publish(ranks.clone());
+        self.graph = run.graph;
+        self.warm = ranks;
+        Ok(EpochStats {
+            epoch,
+            touched: run.touched,
+            iterations,
+            vertex_updates,
+            converged,
+            elapsed_secs: elapsed.as_secs_f64(),
+            edges: self.graph.num_edges(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::synthetic;
+
+    fn cfg() -> PrConfig {
+        PrConfig { threads: 2, threshold: 1e-12, ..PrConfig::default() }
+    }
+
+    #[test]
+    fn rank_descending_orders_with_nan_last() {
+        assert_eq!(rank_descending(&[0.3, f64::NAN, 0.5, 0.2]), vec![2, 0, 3, 1]);
+        assert_eq!(rank_descending(&[]), Vec::<VertexId>::new());
+        // ties break by vertex id
+        assert_eq!(rank_descending(&[0.5, 0.5, 0.9]), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn server_publish_and_query() {
+        let s = RankServer::new();
+        assert_eq!(s.epoch(), 0);
+        assert!(s.snapshot().is_empty());
+        let e = s.publish(vec![0.1, 0.7, 0.2]);
+        assert_eq!(e, 1);
+        assert_eq!(s.epoch(), 1);
+        assert_eq!(s.rank(1), Some(0.7));
+        assert_eq!(s.rank(9), None);
+        assert_eq!(s.top_k(2), vec![(1, 0.7), (2, 0.2)]);
+        assert_eq!(s.queries_served(), 3);
+        assert!(s.snapshot().verify());
+    }
+
+    #[test]
+    fn held_snapshot_survives_later_publishes() {
+        let s = RankServer::new();
+        s.publish(vec![1.0, 2.0]);
+        let held = s.snapshot();
+        s.publish(vec![9.0, 8.0]);
+        // the old snapshot is frozen; the server moved on
+        assert_eq!(held.epoch(), 1);
+        assert_eq!(held.rank(0), Some(1.0));
+        assert!(held.verify());
+        assert_eq!(s.epoch(), 2);
+        assert_eq!(s.rank(0), Some(9.0));
+    }
+
+    #[test]
+    fn monotonic_guard_discards_stale_publish() {
+        // Simulate a slow publisher that drew its epoch first but installs
+        // last: the guard must keep the newer snapshot.
+        let s = RankServer::new();
+        let stale_epoch = s.epoch.fetch_add(1, Ordering::AcqRel) + 1;
+        let fresh = s.publish(vec![5.0]);
+        assert!(fresh > stale_epoch);
+        let stale = Arc::new(RankSnapshot::build(stale_epoch, vec![1.0]));
+        {
+            let mut cur = s.current.write().unwrap();
+            if stale.epoch > cur.epoch {
+                *cur = stale;
+            }
+        }
+        assert_eq!(s.rank(0), Some(5.0), "stale snapshot must not roll back");
+    }
+
+    #[test]
+    fn engine_bootstrap_rejects_non_incremental_variants() {
+        let g = synthetic::cycle(8);
+        let err = ServingEngine::bootstrap(g, Variant::Barrier, cfg());
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("frontier"));
+    }
+
+    #[test]
+    fn engine_epoch_steps_track_oracle() {
+        let g = synthetic::web_replica(300, 5, 41);
+        let mut engine = ServingEngine::bootstrap(g, Variant::Frontier, cfg()).unwrap();
+        assert_eq!(engine.epoch(), 1);
+        let server = engine.server();
+        for step in 0..3u64 {
+            let delta = GraphDelta::random(engine.graph(), 5, 2, 100 + step);
+            let stats = engine.apply(&delta).unwrap();
+            assert_eq!(stats.epoch, 2 + step);
+            assert!(stats.converged);
+            assert!(stats.touched > 0);
+            let oracle =
+                pagerank::run(engine.graph(), Variant::Barrier, &cfg()).unwrap();
+            let snap = server.snapshot();
+            assert!(snap.verify());
+            let l1 = crate::pagerank::convergence::l1_norm(snap.ranks(), &oracle.ranks);
+            assert!(l1 < 1e-6, "epoch {}: l1 {l1}", stats.epoch);
+        }
+        assert_eq!(engine.epoch(), 4);
+    }
+
+    #[test]
+    fn concurrent_readers_see_only_verified_snapshots() {
+        let g = synthetic::web_replica(250, 5, 13);
+        let mut engine = ServingEngine::bootstrap(g, Variant::Frontier, cfg()).unwrap();
+        let server = engine.server();
+        let done = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let server = Arc::clone(&server);
+                let done = &done;
+                s.spawn(move || {
+                    let mut last_epoch = 0;
+                    while !done.load(Ordering::Acquire) {
+                        let snap = server.snapshot();
+                        assert!(snap.verify(), "torn snapshot observed");
+                        assert!(
+                            snap.epoch() >= last_epoch,
+                            "epoch went backwards: {} < {last_epoch}",
+                            snap.epoch()
+                        );
+                        last_epoch = snap.epoch();
+                        server.rank(0);
+                        server.top_k(3);
+                    }
+                });
+            }
+            for step in 0..4u64 {
+                let delta = GraphDelta::random(engine.graph(), 8, 4, 500 + step);
+                engine.apply(&delta).unwrap();
+            }
+            done.store(true, Ordering::Release);
+        });
+        assert!(server.queries_served() > 0);
+        assert_eq!(server.epoch(), 5);
+    }
+}

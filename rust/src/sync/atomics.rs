@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 pub struct AtomicF64(AtomicU64);
 
 impl AtomicF64 {
+    /// A cell holding `x`.
     #[inline]
     pub fn new(x: f64) -> Self {
         Self(AtomicU64::new(x.to_bits()))
@@ -92,6 +93,13 @@ impl crate::sync::RankCell for AtomicF64 {
 /// Allocate a shared rank vector initialized to `x`.
 pub fn atomic_vec(n: usize, x: f64) -> Vec<AtomicF64> {
     (0..n).map(|_| AtomicF64::new(x)).collect()
+}
+
+/// Allocate a shared rank vector seeded from an existing score array —
+/// the warm-start path of the incremental kernels
+/// ([`crate::engine::incremental`]).
+pub fn atomic_vec_from(vals: &[f64]) -> Vec<AtomicF64> {
+    vals.iter().map(|&x| AtomicF64::new(x)).collect()
 }
 
 /// Snapshot a shared rank vector into a plain `Vec<f64>`.

@@ -25,6 +25,7 @@ pub enum BarrierWait {
 }
 
 impl BarrierWait {
+    /// Was this an abort?
     pub fn is_aborted(self) -> bool {
         matches!(self, BarrierWait::Aborted)
     }
@@ -44,6 +45,7 @@ pub struct SenseBarrier {
 }
 
 impl SenseBarrier {
+    /// A barrier for `parties` participants.
     pub fn new(parties: usize) -> Self {
         assert!(parties > 0, "barrier needs at least one party");
         Self {
@@ -55,6 +57,7 @@ impl SenseBarrier {
         }
     }
 
+    /// Number of participants.
     pub fn parties(&self) -> usize {
         self.parties
     }
@@ -69,6 +72,7 @@ impl SenseBarrier {
         self.aborted.store(true, Ordering::Release);
     }
 
+    /// Has the barrier been aborted?
     pub fn is_aborted(&self) -> bool {
         self.aborted.load(Ordering::Acquire)
     }

@@ -38,6 +38,7 @@ pub struct VersionedCell {
 }
 
 impl VersionedCell {
+    /// A stable cell at iteration 0 holding `value`.
     pub fn new(value: f64) -> Self {
         Self {
             version: AtomicU64::new(0),
@@ -124,6 +125,7 @@ impl crate::sync::RankCell for VersionedCell {
 pub struct PackedProgress(AtomicU64);
 
 impl PackedProgress {
+    /// Initial progress word at `(iter, node)`.
     pub fn new(iter: u32, node: u32) -> Self {
         Self(AtomicU64::new(Self::pack(iter, node)))
     }
@@ -138,6 +140,7 @@ impl PackedProgress {
         ((word >> 32) as u32, word as u32)
     }
 
+    /// Current `(iteration, node)` claim (acquire).
     pub fn load(&self) -> (u32, u32) {
         Self::unpack(self.0.load(Ordering::Acquire))
     }

@@ -44,10 +44,12 @@ impl DirtyFlags {
         Self { words, len }
     }
 
+    /// Bitmap capacity in vertices.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when the bitmap covers zero vertices.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

@@ -21,8 +21,11 @@ use crate::util::rng::Xoshiro256pp;
 /// Runner configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
+    /// Generated cases per property.
     pub cases: usize,
+    /// RNG seed (override with `PAGERANK_NB_PT_SEED`).
     pub seed: u64,
+    /// Cap on shrinking iterations.
     pub max_shrink_steps: usize,
 }
 
@@ -38,11 +41,13 @@ impl Default for Config {
 }
 
 impl Config {
+    /// Set the case count.
     pub fn cases(mut self, n: usize) -> Self {
         self.cases = n;
         self
     }
 
+    /// Set the seed.
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
         self
@@ -51,7 +56,9 @@ impl Config {
 
 /// A seeded generator of values plus a shrinking strategy.
 pub trait Gen {
+    /// The generated value type.
     type Value: std::fmt::Debug;
+    /// Produce one value from the seeded RNG.
     fn generate(&self, rng: &mut Xoshiro256pp) -> Self::Value;
     /// Candidate smaller inputs, most aggressive first. Default: no shrink.
     fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
@@ -109,6 +116,7 @@ pub struct IntRange {
 }
 
 impl IntRange {
+    /// The inclusive range `[lo, hi]`.
     pub fn new(lo: i64, hi: i64) -> Self {
         assert!(lo <= hi);
         Self { lo, hi }
@@ -163,7 +171,9 @@ where
 /// Random directed edge list over `0..max_n` vertices, shrinking by
 /// dropping edges. The workhorse for graph-invariant properties.
 pub struct EdgeList {
+    /// Maximum vertex count.
     pub max_n: usize,
+    /// Maximum edge count.
     pub max_m: usize,
 }
 

@@ -11,14 +11,18 @@ use std::path::Path;
 /// A single cell value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Cell {
+    /// Text.
     Str(String),
+    /// Integer, rendered without decimals.
     Int(i64),
+    /// Float, rendered fixed or scientific by magnitude.
     Float(f64),
     /// "did not finish" — used when a blocking variant hangs under failures.
     Dnf,
 }
 
 impl Cell {
+    /// Human-readable rendering (used by the markdown and CSV emitters).
     pub fn render(&self) -> String {
         match self {
             Cell::Str(s) => s.clone(),
@@ -110,14 +114,18 @@ pub(crate) fn json_escape(s: &str) -> String {
 /// A rectangular report table (one per figure/table reproduction).
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Table title (rendered as a heading).
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Row-major cells; every row matches `headers` in width.
     pub rows: Vec<Vec<Cell>>,
     /// Free-form notes rendered under the table (assumptions, host info).
     pub notes: Vec<String>,
 }
 
 impl Table {
+    /// Empty table with the given title and headers.
     pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
         Self {
             title: title.into(),
@@ -127,6 +135,7 @@ impl Table {
         }
     }
 
+    /// Append a row; panics if its width differs from the headers.
     pub fn push_row(&mut self, cells: Vec<Cell>) {
         assert_eq!(
             cells.len(),
@@ -139,6 +148,7 @@ impl Table {
         self.rows.push(cells);
     }
 
+    /// Append a free-form note.
     pub fn note(&mut self, s: impl Into<String>) {
         self.notes.push(s.into());
     }

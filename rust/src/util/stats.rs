@@ -4,11 +4,17 @@
 /// Summary of a sample set (times in seconds, or any positive metric).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Middle sample (mean of the middle two when even).
     pub median: f64,
+    /// Sample standard deviation.
     pub stddev: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
     /// Median absolute deviation — robust spread estimate.
     pub mad: f64,

@@ -1,0 +1,220 @@
+//! Integration suite for the incremental path and the epoch-snapshotted
+//! serving layer (ISSUE 6 acceptance criteria):
+//!
+//! * **Property**: edge-batch insert/delete followed by incremental
+//!   reconvergence matches a cold Barrier recompute of the mutated graph
+//!   within `1e-6` L1 — with strictly fewer `vertex_updates`.
+//! * **Edge cases**: delete-to-dangling, insert into an edgeless graph,
+//!   mutation during an in-flight epoch snapshot read.
+//! * **Stress**: concurrent `rank`/`top_k` readers observe only
+//!   fully-published, internally-consistent epoch snapshots.
+
+use pagerank_nb::cli;
+use pagerank_nb::engine::incremental::{self, mutate_and_reconverge};
+use pagerank_nb::graph::{synthetic, GraphBuilder, GraphDelta};
+use pagerank_nb::pagerank::{self, convergence, PrConfig, Variant};
+use pagerank_nb::serving::ServingEngine;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+const INCREMENTAL: [Variant; 2] = [Variant::Frontier, Variant::FrontierPcpm];
+
+fn cfg(threads: usize) -> PrConfig {
+    PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }
+}
+
+/// The headline property, across several seeds and batch mixes: after a
+/// mutation batch, warm reconvergence lands within 1e-6 L1 of a cold
+/// Barrier run on the mutated graph while doing strictly less work. The
+/// cold run's `vertex_updates` is `iterations × n` (every Blocking sweep
+/// gathers every vertex), so "strictly fewer" has a wide, stable margin.
+#[test]
+fn incremental_matches_cold_barrier_with_strictly_fewer_updates() {
+    let c = cfg(4);
+    for (seed, inserts, deletes) in
+        [(3u64, 12usize, 6usize), (17, 40, 0), (29, 0, 25), (51, 8, 8)]
+    {
+        let base = synthetic::web_replica(1_200, 6, seed);
+        let warm = pagerank::run(&base, Variant::Frontier, &c).expect("cold frontier");
+        let delta = GraphDelta::random(&base, inserts, deletes, seed ^ 0xBEEF);
+        assert!(!delta.is_empty());
+        let cold = {
+            let applied = base.apply_delta(&delta).expect("delta applies");
+            pagerank::run(&applied.graph, Variant::Barrier, &c).expect("cold barrier")
+        };
+        assert!(cold.converged);
+        assert!(cold.vertex_updates > 0, "Barrier instruments its gather");
+        for v in INCREMENTAL {
+            let inc = mutate_and_reconverge(&base, &delta, v, &c, &warm.ranks)
+                .unwrap_or_else(|e| panic!("{v} seed {seed}: {e}"));
+            assert!(inc.result.converged, "{v} seed {seed}");
+            let l1 = inc.result.l1_norm(&cold.ranks);
+            assert!(l1 < 1e-6, "{v} seed {seed}: l1 {l1}");
+            assert!(
+                inc.result.vertex_updates < cold.vertex_updates,
+                "{v} seed {seed}: incremental {} >= cold {}",
+                inc.result.vertex_updates,
+                cold.vertex_updates
+            );
+        }
+    }
+}
+
+/// Deleting a vertex's only out-edge makes it dangling; the incremental
+/// path must pick up the degree flip (its former target loses mass, the
+/// uniform base term redistributes) and still match the cold oracle.
+#[test]
+fn delete_to_dangling_reconverges_correctly() {
+    let c = cfg(3);
+    let base = synthetic::web_replica(500, 5, 7);
+    // find a vertex with exactly one out-edge
+    let u = (0..500u32)
+        .find(|&u| base.out_degree(u) == 1)
+        .expect("web replica has degree-1 vertices");
+    let target = base.out_neighbors(u)[0];
+    let warm = pagerank::run(&base, Variant::Frontier, &c).unwrap();
+    let mut delta = GraphDelta::new();
+    delta.delete(u, target);
+    for v in INCREMENTAL {
+        let inc = mutate_and_reconverge(&base, &delta, v, &c, &warm.ranks).unwrap();
+        assert_eq!(
+            inc.graph.dangling_count(),
+            base.dangling_count() + 1,
+            "{v}: vertex {u} should now dangle"
+        );
+        let cold = pagerank::run(&inc.graph, Variant::Barrier, &c).unwrap();
+        let l1 = inc.result.l1_norm(&cold.ranks);
+        assert!(l1 < 1e-6, "{v}: l1 {l1}");
+    }
+}
+
+/// Inserting into a graph with no edges at all: every vertex starts
+/// dangling at the uniform rank, and the first inserts must wake exactly
+/// the touched neighbourhoods.
+#[test]
+fn insert_into_edgeless_graph_reconverges() {
+    let c = cfg(2);
+    let base = GraphBuilder::new(40).build("blank");
+    let warm = pagerank::run(&base, Variant::Frontier, &c).unwrap();
+    let mut delta = GraphDelta::new();
+    delta.insert(0, 1).insert(1, 2).insert(2, 0).insert(3, 0);
+    for v in INCREMENTAL {
+        let inc = mutate_and_reconverge(&base, &delta, v, &c, &warm.ranks).unwrap();
+        assert!(inc.result.converged, "{v}");
+        let cold = pagerank::run(&inc.graph, Variant::Barrier, &c).unwrap();
+        let l1 = inc.result.l1_norm(&cold.ranks);
+        assert!(l1 < 1e-6, "{v}: l1 {l1}");
+        // untouched vertices keep a rank consistent with the oracle too
+        let linf = convergence::linf_norm(&inc.result.ranks, &cold.ranks);
+        assert!(linf < 1e-6, "{v}: linf {linf}");
+    }
+}
+
+/// A mutation epoch must never disturb a snapshot a reader is holding:
+/// the old `Arc` stays frozen at its epoch and scores while the server
+/// moves on.
+#[test]
+fn mutation_during_in_flight_snapshot_read() {
+    let g = synthetic::web_replica(300, 5, 11);
+    let mut engine = ServingEngine::bootstrap(g, Variant::Frontier, cfg(2)).unwrap();
+    let server = engine.server();
+    let held = server.snapshot();
+    assert_eq!(held.epoch(), 1);
+    let held_ranks = held.ranks().to_vec();
+    let held_top = held.top_k(5);
+
+    let delta = GraphDelta::random(engine.graph(), 20, 10, 77);
+    let stats = engine.apply(&delta).unwrap();
+    assert_eq!(stats.epoch, 2, "publish bumps the epoch by one");
+    assert_eq!(server.epoch(), 2);
+
+    // the in-flight snapshot is bit-identical to what it was pre-mutation
+    assert_eq!(held.epoch(), 1);
+    assert_eq!(held.ranks(), held_ranks.as_slice());
+    assert_eq!(held.top_k(5), held_top);
+    assert!(held.verify(), "held snapshot must stay internally consistent");
+    // while new readers see the reconverged scores
+    assert!(server.snapshot().verify());
+}
+
+/// Readers hammering the server while a writer applies a stream of deltas
+/// must only ever observe fully-published snapshots: checksums verify,
+/// epochs never run backwards, and `top_k` is internally consistent with
+/// `rank` on the same snapshot.
+#[test]
+fn concurrent_readers_only_see_published_epochs() {
+    let g = synthetic::web_replica(400, 5, 19);
+    let mut engine = ServingEngine::bootstrap(g, Variant::Frontier, cfg(2)).unwrap();
+    let server = engine.server();
+    let done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let server = Arc::clone(&server);
+            let done = &done;
+            s.spawn(move || {
+                let mut last_epoch = 0u64;
+                while !done.load(Ordering::Acquire) {
+                    let snap = server.snapshot();
+                    assert!(snap.verify(), "torn snapshot observed");
+                    let e = snap.epoch();
+                    assert!(e >= last_epoch, "epoch ran backwards: {e} < {last_epoch}");
+                    last_epoch = e;
+                    let top = snap.top_k(3);
+                    for &(v, score) in &top {
+                        assert_eq!(
+                            snap.rank(v),
+                            Some(score),
+                            "top_k and rank disagree inside one snapshot"
+                        );
+                    }
+                    std::thread::yield_now();
+                }
+            });
+        }
+        for step in 0..5u64 {
+            let delta = GraphDelta::random(engine.graph(), 10, 5, 1_000 + step);
+            let stats = engine.apply(&delta).unwrap();
+            assert_eq!(stats.epoch, 2 + step);
+        }
+        done.store(true, Ordering::Release);
+    });
+    assert_eq!(server.epoch(), 6);
+    assert!(server.queries_served() > 0);
+}
+
+/// `seed_frontier` is what makes the reconvergence *sound*: it must cover
+/// the touched vertices and their out-neighbourhoods. (Correctness of the
+/// covering set is exercised end-to-end above; this pins the contract.)
+#[test]
+fn seed_frontier_covers_out_neighbourhoods() {
+    let g = synthetic::star(8); // hub 0 ↔ leaves 1..8
+    let dirty = incremental::seed_frontier(&g, &[0]);
+    for v in 0..8u32 {
+        assert!(dirty.is_set(v), "hub seed must cover every leaf (vertex {v})");
+    }
+    let leaf_only = incremental::seed_frontier(&g, &[3]);
+    assert!(leaf_only.is_set(3));
+    assert!(leaf_only.is_set(0), "leaf 3 points at the hub");
+    assert!(!leaf_only.is_set(4), "unrelated leaf must stay clean");
+}
+
+/// The CLI `serve` subcommand runs the whole evolve-query-reconverge loop
+/// end-to-end (same code path as `main`).
+#[test]
+fn cli_serve_smoke() {
+    let argv: Vec<String> = [
+        "serve", "--graph", "web:400:5", "--epochs", "2", "--batch", "8", "--readers", "1",
+        "--threads", "2", "--top", "3", "--seed", "5",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    cli::dispatch(&argv).expect("serve should succeed");
+    // non-incremental modes are rejected with a clear error
+    let bad: Vec<String> = ["serve", "--graph", "cycle:20", "--mode", "barrier"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let err = cli::dispatch(&bad).unwrap_err();
+    assert!(err.to_string().contains("frontier"), "{err}");
+}

@@ -54,6 +54,10 @@ echo "· frontier-pcpm (per-edge slots baseline)"
 "$BIN" run --graph "$GRAPH" --mode frontier-pcpm --pcpm-layout slots \
     --threads "$THREADS" --top 3
 
+echo "· serve (evolve-query-reconverge: incremental epochs + live queries)"
+"$BIN" serve --graph "$GRAPH" --epochs 2 --batch 16 --readers 2 \
+    --threads "$THREADS" --top 3
+
 echo "── cross-validation against the sequential oracle ──"
 "$BIN" validate --graph "$GRAPH" --threads "$THREADS"
 
@@ -61,4 +65,5 @@ echo "── ablation smoke (partition-policy and scheduling rows) ──"
 PAGERANK_NB_SCALE="${ABLATION_SCALE:-20000}" "$BIN" bench ablation \
     --threads 2 --samples 1 --out "${ABLATION_OUT:-reports/kick-tires}"
 
+echo "Full flag reference with an example per subcommand: docs/cli.md"
 echo "Kick tires passed."
