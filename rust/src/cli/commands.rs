@@ -29,6 +29,45 @@ pub fn load_graph(src: &str, seed: u64) -> Result<Csr> {
     }
 }
 
+/// Where a run's CSR arrays live: the heap, or a read-only memory map of
+/// the v2 binary cache (the out-of-core storage path; `--storage mmap`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Storage {
+    Memory,
+    Mmap,
+}
+
+fn storage_from_args(args: &ArgMap) -> Result<Storage> {
+    match args.get("storage").unwrap_or("memory") {
+        "memory" | "mem" => Ok(Storage::Memory),
+        "mmap" => Ok(Storage::Mmap),
+        other => bail!("--storage must be memory|mmap, got '{other}'"),
+    }
+}
+
+/// Resolve `--graph` honoring `--storage`. Under mmap a `.bin` source is
+/// mapped in place (zero copy, nothing resident up front); any other source
+/// — edge list or generator spec — is built owned, spilled to a v2 cache
+/// under the temp dir, dropped, and re-mapped, so the run itself always
+/// executes against the map.
+fn load_graph_stored(src: &str, seed: u64, storage: Storage) -> Result<Csr> {
+    if storage == Storage::Memory {
+        return load_graph(src, seed);
+    }
+    let path = Path::new(src);
+    if path.extension().and_then(|e| e.to_str()) == Some("bin") && path.exists() {
+        return io::map_binary(path);
+    }
+    let owned = load_graph(src, seed)?;
+    let dir = std::env::temp_dir().join("pagerank_nb_mmap");
+    std::fs::create_dir_all(&dir)
+        .with_context(|| format!("creating spill dir {}", dir.display()))?;
+    let spill = dir.join(format!("{}-{}.bin", owned.name, std::process::id()));
+    io::save_binary(&owned, &spill)?;
+    drop(owned); // the heap copy is gone before the map is first touched
+    io::map_binary(&spill)
+}
+
 fn gen_from_spec(spec: &str, seed: u64) -> Result<Csr> {
     let parts: Vec<&str> = spec.split(':').collect();
     let p = |i: usize| -> Result<usize> {
@@ -99,18 +138,23 @@ fn variant_from_args(args: &ArgMap) -> Result<Variant> {
     }
 }
 
-/// `run`: one algorithm on one graph; prints timing + top ranks.
+/// `run`: one algorithm on one graph; prints timing + top ranks. With
+/// `--shards`/`--mem-budget` the run goes through the out-of-core shard
+/// coordinator ([`crate::engine::ooc`]) instead of the thread engine.
 pub fn cmd_run(args: &ArgMap) -> Result<()> {
     let seed = args.get_parsed("seed", 42u64)?;
-    let g = load_graph(args.require("graph")?, seed)?;
+    let storage = storage_from_args(args)?;
+    let g = load_graph_stored(args.require("graph")?, seed, storage)?;
     let variant = variant_from_args(args)?;
     let cfg = config_from_args(args)?;
+    let out_of_core = args.has("shards") || args.has("mem-budget");
     if cfg.pcpm_batch > 1 && variant != Variant::Pcpm {
         eprintln!(
             "note: --pcpm-batch only affects --mode pcpm; ignored for {variant}"
         );
     }
     if cfg.pcpm_layout != PcpmLayout::Compressed
+        && !out_of_core
         && !matches!(variant, Variant::Pcpm | Variant::FrontierPcpm)
     {
         eprintln!(
@@ -118,14 +162,39 @@ pub fn cmd_run(args: &ArgMap) -> Result<()> {
         );
     }
     println!(
-        "graph '{}': {} vertices, {} edges · {} · {} threads",
+        "graph '{}': {} vertices, {} edges{} · {} · {} threads",
         g.name,
         fmt::count(g.num_vertices() as u64),
         fmt::count(g.num_edges() as u64),
+        if g.is_mapped() { " · mmap-backed" } else { "" },
         variant,
         cfg.threads
     );
-    let r = if variant == Variant::XlaBlock {
+    let r = if out_of_core {
+        let shards = if args.has("shards") {
+            let s = args.get_parsed("shards", 1usize)?;
+            if s == 0 {
+                bail!("--shards must be at least 1");
+            }
+            s
+        } else {
+            let budget_mib: u64 = args.get_parsed("mem-budget", 0u64)?;
+            if budget_mib == 0 {
+                bail!("--mem-budget must be a positive number of MiB");
+            }
+            crate::engine::ooc::shards_for_budget(&g, budget_mib << 20)
+        };
+        if args.has("mode") || args.has("algo") {
+            eprintln!(
+                "note: out-of-core runs replay through Frontier-PCPM; --mode/--algo ignored"
+            );
+        }
+        println!(
+            "out-of-core: {shards} shard(s), storage {}",
+            if g.is_mapped() { "mmap" } else { "memory" }
+        );
+        crate::engine::ooc::run_sharded(&g, &cfg, shards)?
+    } else if variant == Variant::XlaBlock {
         let engine = crate::runtime::Engine::cpu()?;
         pagerank::run_with_engine(&g, variant, &cfg, &engine)?
     } else {
@@ -133,7 +202,7 @@ pub fn cmd_run(args: &ArgMap) -> Result<()> {
     };
     println!(
         "{}: {} in {} ({} iterations{}){}",
-        variant,
+        r.variant,
         if r.converged { "converged" } else { "NOT converged" },
         fmt::duration(r.elapsed.as_secs_f64()),
         r.iterations,
@@ -579,6 +648,36 @@ mod tests {
         let bad =
             ArgMap::parse(&["--pcpm-layout".into(), "zip".into()]).unwrap();
         assert!(config_from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn storage_flag_parses() {
+        let none = ArgMap::parse(&[]).unwrap();
+        assert_eq!(storage_from_args(&none).unwrap(), Storage::Memory);
+        let mm = ArgMap::parse(&["--storage".into(), "mmap".into()]).unwrap();
+        assert_eq!(storage_from_args(&mm).unwrap(), Storage::Mmap);
+        let mem = ArgMap::parse(&["--storage".into(), "mem".into()]).unwrap();
+        assert_eq!(storage_from_args(&mem).unwrap(), Storage::Memory);
+        let bad = ArgMap::parse(&["--storage".into(), "tape".into()]).unwrap();
+        assert!(storage_from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn mmap_storage_spills_and_maps_any_source() {
+        // generator spec: no .bin on disk, so the loader must spill + remap
+        let mapped = load_graph_stored("web:300:4", 7, Storage::Mmap).unwrap();
+        assert!(mapped.is_mapped());
+        let owned = load_graph_stored("web:300:4", 7, Storage::Memory).unwrap();
+        assert!(!owned.is_mapped());
+        assert_eq!(mapped, owned, "storage must not change the graph");
+        // an existing .bin is mapped in place
+        let dir = std::env::temp_dir().join("pagerank_nb_cli_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("stored.bin");
+        io::save_binary(&owned, &p).unwrap();
+        let direct = load_graph_stored(p.to_str().unwrap(), 0, Storage::Mmap).unwrap();
+        assert!(direct.is_mapped());
+        assert_eq!(direct, owned);
     }
 
     #[test]

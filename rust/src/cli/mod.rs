@@ -1,7 +1,8 @@
 //! Command-line interface (hand-rolled: the offline image has no `clap`).
 //!
 //! ```text
-//! pagerank-nb run      --graph <src> --algo <variant> [--threads N] …
+//! pagerank-nb run      --graph <src> --algo <variant> [--threads N]
+//!                      [--storage mmap] [--shards S | --mem-budget MiB] …
 //! pagerank-nb serve    --graph <src> [--epochs N] [--batch N] [--readers N]
 //! pagerank-nb bench    <exp-id|all> [--out DIR]
 //! pagerank-nb bench-ci [--out FILE] [--baseline FILE] [--max-regress F] [--seed-baseline]
@@ -61,6 +62,10 @@ USAGE:
                        [--partition vertex|edge] [--top K] [--damping D]
                        [--delta-threshold X]
                        [--pcpm-batch B] [--pcpm-layout compressed|slots]
+                       [--storage memory|mmap] [--shards S | --mem-budget MiB]
+                       (--storage mmap runs against the v2 binary cache
+                        zero-copy; --shards / --mem-budget sweep the graph
+                        out-of-core, one shard resident at a time)
   pagerank-nb serve    --graph <src> [--mode frontier|frontier-pcpm]
                        [--epochs N] [--batch N] [--readers N] [--top K]
                        (evolve-query-reconverge loop: random edge batches,

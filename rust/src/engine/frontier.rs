@@ -45,6 +45,7 @@ use crate::pagerank::{amplify_work, PcpmLayout, PrConfig};
 use crate::sync::atomics::{atomic_vec, atomic_vec_from, snapshot, AtomicF64};
 use crate::sync::dirty::DirtyFlags;
 use anyhow::{ensure, Result};
+use std::sync::Arc;
 
 /// Pull-model frontier kernel: a dirty vertex re-reads its in-neighbours'
 /// ranks directly. See the module docs for the schedule.
@@ -57,7 +58,9 @@ pub struct FrontierKernel<'g> {
     /// push test compares against this (not the previous gather) so that
     /// many sub-delta moves accumulate into a push instead of drifting.
     last_pushed: Vec<AtomicF64>,
-    dirty: DirtyFlags,
+    /// Shared so an external scheduler (the out-of-core coordinator) can
+    /// probe the frontier without owning the kernel.
+    dirty: Arc<DirtyFlags>,
     delta: f64,
     base: f64,
     d: f64,
@@ -98,7 +101,7 @@ pub fn warm_kernel<'g>(
         inv_out: inv_out_degrees(g),
         pr: atomic_vec_from(warm),
         last_pushed: atomic_vec_from(warm),
-        dirty,
+        dirty: Arc::new(dirty),
         delta: cfg.resolved_delta_threshold(),
         base: (1.0 - cfg.damping) / n as f64,
         d: cfg.damping,
@@ -172,7 +175,10 @@ pub struct FrontierPcpmKernel<'g> {
     /// slot per value group (per edge under the `slots` baseline layout).
     values: Vec<AtomicF64>,
     last_pushed: Vec<AtomicF64>,
-    dirty: DirtyFlags,
+    /// Shared with the out-of-core coordinator (see
+    /// [`warm_pcpm_kernel_shared`]), which probes shard ranges to skip
+    /// clean shards.
+    dirty: Arc<DirtyFlags>,
     delta: f64,
     base: f64,
     d: f64,
@@ -204,6 +210,22 @@ pub fn warm_pcpm_kernel<'g>(
     parts: &Partitions,
     warm: &[f64],
     dirty: DirtyFlags,
+) -> Result<Box<dyn Kernel + 'g>> {
+    warm_pcpm_kernel_shared(g, cfg, parts, warm, Arc::new(dirty))
+}
+
+/// Like [`warm_pcpm_kernel`], but the dirty bitmap arrives pre-wrapped in an
+/// [`Arc`] and the caller keeps a clone. This is the out-of-core
+/// coordinator's hook ([`crate::engine::ooc`]): it probes the shared bitmap
+/// with [`DirtyFlags::any_in_range`] to decide which shard to sweep next and
+/// when the run has drained, while the kernel drains and re-marks through
+/// the very same bits.
+pub fn warm_pcpm_kernel_shared<'g>(
+    g: &'g Csr,
+    cfg: &PrConfig,
+    parts: &Partitions,
+    warm: &[f64],
+    dirty: Arc<DirtyFlags>,
 ) -> Result<Box<dyn Kernel + 'g>> {
     let n = g.num_vertices();
     ensure!(warm.len() == n, "warm rank vector length {} != n {}", warm.len(), n);

@@ -30,6 +30,7 @@ pub mod driver;
 pub mod frontier;
 pub mod helping;
 pub mod incremental;
+pub mod ooc;
 pub mod pcpm;
 
 use crate::coordinator::metrics::RunMetrics;

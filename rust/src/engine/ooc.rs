@@ -1,0 +1,234 @@
+//! Out-of-core execution: shard-rotating PageRank over an mmap-backed CSR.
+//!
+//! The in-memory engine assumes the whole graph (and the PCPM value stream)
+//! is resident. For graphs near or past physical RAM that assumption turns
+//! every sweep into a page-fault storm with no locality: `p` workers touch
+//! `p` disjoint vertex ranges *concurrently*, so the page cache thrashes
+//! across the whole file. This module trades that for a classic
+//! semi-external schedule in the spirit of GraphChi's shards (Kyrola et al.,
+//! OSDI'12) built from pieces the engine already has:
+//!
+//! * **storage** — the CSR arrays stay on disk in the v2 binary cache and
+//!   are borrowed zero-copy through [`crate::graph::io::map_binary`]; the
+//!   OS pages a shard's slice of the arrays in as the sweep streams it and
+//!   can evict cold shards under pressure (`MAP_PRIVATE` read-only, so
+//!   nothing is ever written back);
+//! * **compute** — vertices are split into `S` contiguous shards by the
+//!   standard [`Partitions`] policies, and the coordinator rotates through
+//!   them *one at a time* on the calling thread, replaying each shard
+//!   through the [`FrontierPcpm`](crate::pagerank::Variant::FrontierPcpm)
+//!   kernel's gather: contributions are read from the compressed
+//!   [`CompressedBins`](crate::graph::CompressedBins) value stream (dense,
+//!   grouped by destination partition — sequential page-ins), and changed
+//!   vertices push back through the same stream;
+//! * **scheduling** — the kernel's dirty bitmap is shared with the
+//!   coordinator ([`warm_pcpm_kernel_shared`]), whose non-destructive
+//!   [`DirtyFlags::any_in_range`] probe skips shards with no pending work
+//!   entirely — they are never paged in. The run terminates when a full
+//!   rotation leaves the bitmap empty.
+//!
+//! Because exactly one shard is active at a time, the resident working set
+//! is one shard's arrays plus the O(n) rank/value vectors, not the whole
+//! edge set — that is what `--mem-budget` sizes the shard count against
+//! ([`shards_for_budget`]). The schedule is sequential over shards, so the
+//! result is deterministic for a fixed shard count and matches the paper's
+//! fixed point to the same delta-bounded accuracy as the frontier family
+//! (the equivalence test pins L1 ≤ 1e-6 against Barrier).
+
+use crate::coordinator::metrics::RunMetrics;
+use crate::engine::frontier::warm_pcpm_kernel_shared;
+use crate::engine::WorkerCtx;
+use crate::graph::{Csr, Partitions};
+use crate::pagerank::{PrConfig, PrResult, Variant};
+use crate::sync::dirty::DirtyFlags;
+use anyhow::{ensure, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Derive a shard count from a memory budget: enough shards that one
+/// shard's slice of the CSR arrays fits the budget. The O(n) resident state
+/// (ranks, last-pushed, value stream) is not shardable — it stays in RAM
+/// regardless — so the budget only has to cover the edge-heavy arrays,
+/// which is exactly what sharding divides. Clamped to `[1, n]`.
+pub fn shards_for_budget(g: &Csr, mem_budget_bytes: u64) -> usize {
+    let n = g.num_vertices();
+    if n == 0 || mem_budget_bytes == 0 {
+        return 1;
+    }
+    let per_shard_target = mem_budget_bytes.max(1);
+    let shards = g.memory_bytes().div_ceil(per_shard_target).max(1);
+    usize::try_from(shards).unwrap_or(n).min(n)
+}
+
+/// Run PageRank out-of-core: `shards` vertex ranges swept one at a time on
+/// the calling thread through the frontier-PCPM kernel, clean shards
+/// skipped via the shared dirty bitmap. Works on any [`Csr`] but is built
+/// for mapped ones ([`Csr::is_mapped`]) — an owned graph gains nothing from
+/// the rotation except the skip telemetry.
+///
+/// `cfg.threads` is ignored (the coordinator is single-threaded by design —
+/// one shard resident at a time *is* the memory bound); `cfg.max_iterations`
+/// caps full rotations.
+pub fn run_sharded(g: &Csr, cfg: &PrConfig, shards: usize) -> Result<PrResult> {
+    cfg.validate()?;
+    ensure!(shards >= 1, "need at least one shard");
+    let n = g.num_vertices();
+    if n == 0 {
+        return Ok(PrResult::empty(Variant::FrontierPcpm, shards));
+    }
+    let shards = shards.min(n);
+    let parts = Partitions::new(g, shards, cfg.partition);
+    let dirty = Arc::new(DirtyFlags::new_set(n));
+    let warm = vec![1.0 / n as f64; n];
+    // Clock starts before kernel construction (bin layout, value seeding)
+    // to match the in-memory engine's accounting.
+    let start = Instant::now();
+    let kernel = warm_pcpm_kernel_shared(g, cfg, &parts, &warm, Arc::clone(&dirty))?;
+    let metrics = RunMetrics::new(shards);
+    let mut converged = false;
+    let mut skipped_shards = 0u64;
+    for _rotation in 0..cfg.max_iterations {
+        for shard in 0..shards {
+            if !dirty.any_in_range(parts.range(shard)) {
+                // nothing pending: the shard's pages are never touched
+                skipped_shards += 1;
+                continue;
+            }
+            kernel.gather(&WorkerCtx { tid: shard, metrics: &metrics });
+            metrics.bump_iteration(shard);
+        }
+        // Single-threaded schedule: after a rotation no sweep is in flight,
+        // so an empty bitmap is definitive — every vertex has absorbed
+        // every push, and nothing moved enough to push again. No
+        // confirmation sweeps needed (those exist to close the concurrent
+        // mark-vs-drain window in the multi-worker driver).
+        if dirty.count_set() == 0 {
+            converged = true;
+            break;
+        }
+    }
+    metrics.add_skipped(0, skipped_shards);
+    Ok(PrResult {
+        variant: Variant::FrontierPcpm,
+        ranks: kernel.ranks(),
+        iterations: metrics.max_iterations(),
+        per_thread_iterations: metrics.iterations_per_thread(),
+        elapsed: start.elapsed(),
+        converged,
+        barrier_wait_secs: 0.0,
+        vertex_updates: metrics.total_gathered(),
+        dnf: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{io, synthetic, GraphBuilder};
+    use crate::pagerank::seq;
+
+    fn cfg() -> PrConfig {
+        PrConfig { threshold: 1e-12, ..PrConfig::default() }
+    }
+
+    #[test]
+    fn sharded_matches_sequential_across_shard_counts() {
+        let c = cfg();
+        for g in [
+            synthetic::cycle(60),
+            synthetic::chain(120),
+            synthetic::star(60),
+            synthetic::web_replica(800, 6, 11),
+        ] {
+            let (sr, _, _) = seq::solve(&g, &c);
+            for shards in [1usize, 3, 8] {
+                let r = run_sharded(&g, &c, shards).unwrap();
+                assert!(r.converged, "{} shards={shards}", g.name);
+                let l1 = r.l1_norm(&sr);
+                assert!(l1 < 1e-7, "{} shards={shards}: l1 {l1}", g.name);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_run_on_mapped_graph_matches_owned() {
+        let g = synthetic::web_replica(600, 5, 29);
+        let dir = std::env::temp_dir().join("pagerank_nb_ooc_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("ooc-{}.bin", std::process::id()));
+        io::save_binary(&g, &p).unwrap();
+        let mapped = io::map_binary(&p).unwrap();
+        assert!(mapped.is_mapped());
+        let c = cfg();
+        let owned_r = run_sharded(&g, &c, 4).unwrap();
+        let mapped_r = run_sharded(&mapped, &c, 4).unwrap();
+        assert!(mapped_r.converged);
+        // identical schedule on identical graphs: bitwise-equal ranks
+        assert_eq!(owned_r.ranks, mapped_r.ranks);
+        assert_eq!(owned_r.iterations, mapped_r.iterations);
+    }
+
+    #[test]
+    fn empty_graph_and_degenerate_shard_counts() {
+        let g = GraphBuilder::new(0).build("nil");
+        let r = run_sharded(&g, &cfg(), 7).unwrap();
+        assert!(r.converged);
+        assert!(r.ranks.is_empty());
+        assert!(run_sharded(&g, &cfg(), 0).is_err(), "zero shards rejected");
+        // more shards than vertices: clamped, still correct
+        let g = synthetic::cycle(3);
+        let r = run_sharded(&g, &cfg(), 64).unwrap();
+        assert!(r.converged);
+        let (sr, _, _) = seq::solve(&g, &cfg());
+        assert!(r.l1_norm(&sr) < 1e-9);
+    }
+
+    #[test]
+    fn clean_shards_are_skipped() {
+        // A reversed chain confined to vertices 0..31 (edges i+1 → i, so
+        // rank mass crawls down one hop per rotation — many rotations) plus
+        // isolated vertices 31..400. After the first rotation only shard 0
+        // ever has dirty vertices; the other seven must be probe-skipped,
+        // not swept.
+        let edges: Vec<(u32, u32)> = (0..30u32).map(|i| (i + 1, i)).collect();
+        let g = GraphBuilder::new(400).edges(&edges).build("rev-chain");
+        let c = cfg();
+        let r = run_sharded(&g, &c, 8).unwrap();
+        assert!(r.converged);
+        let rotations = r.iterations;
+        assert!(rotations > 3, "fixture must need several rotations, got {rotations}");
+        for (shard, &sweeps) in r.per_thread_iterations.iter().enumerate().skip(1) {
+            assert!(
+                sweeps <= 1,
+                "shard {shard} swept {sweeps} times — clean shards must be skipped"
+            );
+        }
+        let (sr, _, _) = seq::solve(&g, &c);
+        assert!(r.l1_norm(&sr) < 1e-7);
+    }
+
+    #[test]
+    fn budget_derivation_is_monotone_and_clamped() {
+        let g = synthetic::web_replica(2000, 6, 17);
+        let bytes = g.memory_bytes();
+        assert_eq!(shards_for_budget(&g, bytes), 1, "whole graph fits");
+        assert_eq!(shards_for_budget(&g, bytes * 2), 1);
+        let half = shards_for_budget(&g, bytes / 2);
+        let quarter = shards_for_budget(&g, bytes / 4);
+        assert!(half >= 2, "half budget must shard: {half}");
+        assert!(quarter >= half, "smaller budget, more shards");
+        assert_eq!(shards_for_budget(&g, 0), 1, "zero budget is clamped");
+        assert!(shards_for_budget(&g, 1) <= g.num_vertices(), "clamped to n");
+        let empty = GraphBuilder::new(0).build("nil");
+        assert_eq!(shards_for_budget(&empty, 1024), 1);
+    }
+
+    #[test]
+    fn rotation_cap_reports_unconverged() {
+        let g = synthetic::web_replica(400, 6, 8);
+        let c = PrConfig { max_iterations: 2, ..cfg() };
+        let r = run_sharded(&g, &c, 4).unwrap();
+        assert!(!r.converged);
+        assert!(r.iterations <= 2);
+    }
+}

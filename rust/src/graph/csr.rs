@@ -11,8 +11,140 @@
 //! out-degree array, and — for the edge-centric contribution-list variants —
 //! the *offset list* mapping each out-edge of `u` to the slot in the
 //! destination's in-list (`offsetList` in Algorithm 2 line 11).
+//!
+//! Each of the five arrays lives in a [`GraphStore`]: either an owned `Vec`
+//! (the builder / loader path) or a span borrowed zero-copy from a shared
+//! page-aligned memory map of the v2 binary cache
+//! ([`crate::graph::io::map_binary`]). `GraphStore` derefs to `[T]`, so
+//! every kernel reads the graph identically regardless of where the bytes
+//! actually reside — RAM or the page cache.
 
 use crate::graph::VertexId;
+use mmap_lite::Mmap;
+use std::ops::Deref;
+use std::sync::Arc;
+
+/// Backing storage for one CSR array: an owned `Vec<T>` or a typed span of
+/// a shared read-only memory map. Derefs to `[T]` — indexing, slicing, and
+/// iteration work exactly as on a `Vec`, so consumers never branch on the
+/// storage kind.
+///
+/// Mapped spans are constructed only by the v2 binary loader
+/// ([`crate::graph::io::map_binary`]), which checks bounds and alignment
+/// before handing the span out; cloning a mapped store clones the `Arc` on
+/// the underlying map, not the bytes.
+pub struct GraphStore<T: Copy + 'static> {
+    repr: Repr<T>,
+}
+
+enum Repr<T> {
+    Owned(Vec<T>),
+    Mapped {
+        map: Arc<Mmap>,
+        /// Byte offset of the span inside the map (64-byte aligned by the
+        /// v2 format, so always aligned for `T`).
+        offset: usize,
+        /// Span length in elements of `T`.
+        len: usize,
+    },
+}
+
+impl<T: Copy + 'static> GraphStore<T> {
+    /// Wrap heap-owned storage.
+    pub fn owned(values: Vec<T>) -> Self {
+        Self { repr: Repr::Owned(values) }
+    }
+
+    /// Borrow `len` elements of `T` starting at byte `offset` of `map`.
+    ///
+    /// Checked construction: the span must lie inside the map and `offset`
+    /// must be aligned for `T` (the map base is page-aligned, so the byte
+    /// offset alone decides alignment). Only instantiated at `T = usize` /
+    /// `T = u32` — plain old data valid for any bit pattern — which is what
+    /// makes the reinterpreting [`Deref`] sound.
+    pub(crate) fn mapped(map: Arc<Mmap>, offset: usize, len: usize) -> Result<Self, String> {
+        let bytes = len
+            .checked_mul(std::mem::size_of::<T>())
+            .ok_or_else(|| "mapped span length overflows".to_string())?;
+        let end = offset
+            .checked_add(bytes)
+            .ok_or_else(|| "mapped span end overflows".to_string())?;
+        if end > map.len() {
+            return Err(format!(
+                "mapped span {offset}..{end} exceeds map length {}",
+                map.len()
+            ));
+        }
+        if offset % std::mem::align_of::<T>() != 0 {
+            return Err(format!(
+                "mapped span offset {offset} not aligned to {}",
+                std::mem::align_of::<T>()
+            ));
+        }
+        Ok(Self { repr: Repr::Mapped { map, offset, len } })
+    }
+
+    /// True when the bytes live in a memory map rather than on the heap.
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.repr, Repr::Mapped { .. })
+    }
+
+    /// The elements as a slice (same as dereferencing).
+    pub fn as_slice(&self) -> &[T] {
+        self
+    }
+}
+
+impl<T: Copy + 'static> Deref for GraphStore<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        match &self.repr {
+            Repr::Owned(v) => v,
+            // SAFETY: `mapped` checked that `offset` is aligned for `T` and
+            // that `len` elements fit inside the map, the map is immutable
+            // and lives as long as `self` (Arc), and `T` is restricted to
+            // plain-old-data types valid for any bit pattern.
+            Repr::Mapped { map, offset, len } => unsafe {
+                std::slice::from_raw_parts(
+                    map.as_slice().as_ptr().add(*offset).cast::<T>(),
+                    *len,
+                )
+            },
+        }
+    }
+}
+
+impl<T: Copy + 'static> From<Vec<T>> for GraphStore<T> {
+    fn from(values: Vec<T>) -> Self {
+        Self::owned(values)
+    }
+}
+
+impl<T: Copy + 'static> Clone for GraphStore<T> {
+    fn clone(&self) -> Self {
+        match &self.repr {
+            Repr::Owned(v) => Self { repr: Repr::Owned(v.clone()) },
+            Repr::Mapped { map, offset, len } => Self {
+                repr: Repr::Mapped { map: Arc::clone(map), offset: *offset, len: *len },
+            },
+        }
+    }
+}
+
+impl<T: Copy + PartialEq + 'static> PartialEq for GraphStore<T> {
+    /// Storage kinds compare as equal when their *elements* are equal — an
+    /// mmap-backed graph equals its owned round-trip twin.
+    fn eq(&self, other: &Self) -> bool {
+        **self == **other
+    }
+}
+
+impl<T: Copy + std::fmt::Debug + 'static> std::fmt::Debug for GraphStore<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        std::fmt::Debug::fmt(&**self, f)
+    }
+}
 
 /// Immutable CSR graph (directed).
 #[derive(Debug, Clone, PartialEq)]
@@ -20,19 +152,19 @@ pub struct Csr {
     n: usize,
     /// Out-adjacency. `out_edges[out_offsets[u]..out_offsets[u+1]]` are the
     /// targets of `u`'s out-links.
-    pub out_offsets: Vec<usize>,
+    pub out_offsets: GraphStore<usize>,
     /// Flattened out-adjacency targets (indexed through `out_offsets`).
-    pub out_edges: Vec<VertexId>,
+    pub out_edges: GraphStore<VertexId>,
     /// In-adjacency (the transpose). `in_edges[in_offsets[u]..in_offsets[u+1]]`
     /// are the sources pointing at `u`.
-    pub in_offsets: Vec<usize>,
+    pub in_offsets: GraphStore<usize>,
     /// Flattened in-adjacency sources (indexed through `in_offsets`).
-    pub in_edges: Vec<VertexId>,
+    pub in_edges: GraphStore<VertexId>,
     /// `offset_list[e]`, for `e` indexing `out_edges`, is the position in
     /// `in_edges` (equivalently: in the contribution list) that edge writes
     /// to. This is what lets the push phase of Barrier-Edge store each
     /// contribution where the pull phase of the destination will read it.
-    pub offset_list: Vec<usize>,
+    pub offset_list: GraphStore<usize>,
     /// Human-readable dataset name (propagated into reports).
     pub name: String,
 }
@@ -150,6 +282,12 @@ impl Csr {
         Ok(())
     }
 
+    /// True when the adjacency arrays are borrowed from a memory map (the
+    /// out-of-core storage path) rather than heap-owned.
+    pub fn is_mapped(&self) -> bool {
+        self.out_offsets.is_mapped()
+    }
+
     /// Construct from raw parts (used by the builder; validates in debug).
     pub(crate) fn from_parts(
         n: usize,
@@ -160,9 +298,34 @@ impl Csr {
         offset_list: Vec<usize>,
         name: String,
     ) -> Self {
-        let g = Self { n, out_offsets, out_edges, in_offsets, in_edges, offset_list, name };
+        let g = Self::from_stores(
+            n,
+            out_offsets.into(),
+            out_edges.into(),
+            in_offsets.into(),
+            in_edges.into(),
+            offset_list.into(),
+            name,
+        );
         debug_assert_eq!(g.validate(), Ok(()));
         g
+    }
+
+    /// Construct from pre-built stores (the mmap loader path). Unlike
+    /// [`Csr::from_parts`] this does **not** validate even in debug — the
+    /// caller is handing over untrusted on-disk data and must run
+    /// [`Csr::validate`] itself before releasing the graph to kernels
+    /// (which index it with `get_unchecked` on the strength of that check).
+    pub(crate) fn from_stores(
+        n: usize,
+        out_offsets: GraphStore<usize>,
+        out_edges: GraphStore<VertexId>,
+        in_offsets: GraphStore<usize>,
+        in_edges: GraphStore<VertexId>,
+        offset_list: GraphStore<usize>,
+        name: String,
+    ) -> Self {
+        Self { n, out_offsets, out_edges, in_offsets, in_edges, offset_list, name }
     }
 }
 
@@ -226,5 +389,51 @@ mod tests {
     #[test]
     fn memory_bytes_positive() {
         assert!(tiny().memory_bytes() > 0);
+    }
+
+    mod graph_store {
+        use crate::graph::csr::GraphStore;
+        use mmap_lite::Mmap;
+        use std::sync::Arc;
+
+        /// A map whose bytes are `values` re-encoded natively — so the
+        /// typed view must read back exactly `values` on any endianness.
+        fn map_of(values: &[u32]) -> Arc<Mmap> {
+            let dir = std::env::temp_dir().join("pagerank_nb_store_tests");
+            std::fs::create_dir_all(&dir).unwrap();
+            let p = dir.join(format!("store-{}-{:?}.bin", std::process::id(), values.len()));
+            let bytes: Vec<u8> = values.iter().flat_map(|v| v.to_ne_bytes()).collect();
+            std::fs::write(&p, bytes).unwrap();
+            Arc::new(Mmap::map(&std::fs::File::open(&p).unwrap()).unwrap())
+        }
+
+        #[test]
+        fn mapped_view_equals_owned() {
+            let values = vec![7u32, 0, 42, u32::MAX, 5];
+            let map = map_of(&values);
+            let mapped = GraphStore::<u32>::mapped(Arc::clone(&map), 0, values.len()).unwrap();
+            let owned = GraphStore::owned(values.clone());
+            assert!(mapped.is_mapped());
+            assert!(!owned.is_mapped());
+            assert_eq!(mapped, owned, "storage kinds compare as elements");
+            assert_eq!(&mapped[1..3], &values[1..3]);
+            assert_eq!(mapped.as_slice(), &values[..]);
+            // cloning a mapped store shares the map, not the bytes
+            let twin = mapped.clone();
+            assert_eq!(twin, mapped);
+            assert!(twin.is_mapped());
+        }
+
+        #[test]
+        fn mapped_rejects_out_of_bounds_and_misaligned() {
+            let map = map_of(&[1u32, 2, 3]);
+            assert!(GraphStore::<u32>::mapped(Arc::clone(&map), 0, 4).is_err(), "past end");
+            assert!(GraphStore::<u32>::mapped(Arc::clone(&map), 2, 2).is_err(), "misaligned");
+            assert!(
+                GraphStore::<u32>::mapped(Arc::clone(&map), 0, usize::MAX).is_err(),
+                "length overflow"
+            );
+            assert!(GraphStore::<u32>::mapped(map, 4, 2).is_ok(), "aligned in-bounds span");
+        }
     }
 }

@@ -5,28 +5,65 @@
 //!   whitespace-separated `src dst` pair per line, arbitrary vertex ids that
 //!   get densified).
 //! * [`load_adjacency`] reads the adjacency-list format of [21]
-//!   (`u k v1 … vk` per line).
-//! * [`save_binary`] / [`load_binary`] provide a fast binary cache so bench
-//!   runs don't re-parse text (format: magic, counts, raw arrays, LE).
+//!   (`u k v1 … vk` per line, optional `n m` header).
+//! * [`save_binary`] / [`load_binary`] / [`map_binary`] provide the **v2**
+//!   binary cache: a 32-byte header (`PRNBCSR2`, name length, `n`, `m`),
+//!   the dataset name, then the five CSR arrays as little-endian sections
+//!   each starting on a 64-byte boundary. Offset arrays are stored as
+//!   `u64`, edge arrays as `u32`. Because every section offset — and hence
+//!   the exact file size — is a pure function of the three header counts,
+//!   a single length check both rejects every truncated/corrupt prefix
+//!   cleanly *and* caps all allocations by the real file size before any
+//!   happen. The 64-byte section alignment is what makes [`map_binary`]
+//!   possible: the sections are reinterpreted in place from a page-aligned
+//!   memory map, giving a zero-copy [`Csr`] whose arrays the OS pages in on
+//!   demand — the storage layer of the out-of-core path
+//!   ([`crate::engine::ooc`]).
+//!
+//! v1 caches (`PRNBCSR1`: unaligned, allocation-unsafe header) are detected
+//! and rejected with a migration hint — regenerate with `pagerank-nb gen`
+//! or re-save through [`save_binary`].
 
+use crate::graph::csr::GraphStore;
 use crate::graph::{Csr, GraphBuilder, VertexId};
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use mmap_lite::Mmap;
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
+use std::sync::Arc;
+
+/// Densify the next raw id: the dense id equals the number already
+/// assigned. Guards the `u32` vertex-id space — more than
+/// [`VertexId::MAX`] distinct raw ids would otherwise silently wrap and
+/// alias distinct vertices.
+fn next_dense_id(assigned: usize) -> Result<VertexId> {
+    ensure!(
+        assigned < VertexId::MAX as usize,
+        "edge list has more than {} distinct vertex ids — vertex ids are u32, \
+         so densifying further would overflow and alias vertices",
+        VertexId::MAX
+    );
+    Ok(assigned as VertexId)
+}
 
 /// Load a SNAP-style edge list. Vertex ids are densified (SNAP files skip
 /// ids); duplicate edges and self-loops are removed to match the paper's
-/// simple-graph preprocessing.
+/// simple-graph preprocessing. Fails cleanly when the file names more than
+/// `u32::MAX` distinct vertices.
 pub fn load_edge_list(path: &Path) -> Result<Csr> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("opening edge list {}", path.display()))?;
     let reader = BufReader::new(f);
     let mut remap: HashMap<u64, VertexId> = HashMap::new();
     let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
-    let densify = |raw: u64, remap: &mut HashMap<u64, VertexId>| -> VertexId {
-        let next = remap.len() as VertexId;
-        *remap.entry(raw).or_insert(next)
+    let mut densify = |raw: u64| -> Result<VertexId> {
+        if let Some(&id) = remap.get(&raw) {
+            return Ok(id);
+        }
+        let id = next_dense_id(remap.len())?;
+        remap.insert(raw, id);
+        Ok(id)
     };
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
@@ -41,8 +78,8 @@ pub fn load_edge_list(path: &Path) -> Result<Csr> {
         };
         let u: u64 = a.parse().with_context(|| format!("line {}: bad src", lineno + 1))?;
         let v: u64 = b.parse().with_context(|| format!("line {}: bad dst", lineno + 1))?;
-        let u = densify(u, &mut remap);
-        let v = densify(v, &mut remap);
+        let u = densify(u)?;
+        let v = densify(v)?;
         edges.push((u, v));
     }
     let n = remap.len();
@@ -54,13 +91,28 @@ pub fn load_edge_list(path: &Path) -> Result<Csr> {
 }
 
 /// Load the adjacency-list format of Luo & Liu [21]: each line
-/// `u k v1 v2 … vk` lists `u`'s out-neighbours. First line may be `n m`.
+/// `u k v1 v2 … vk` lists `u`'s out-neighbours; the first content line may
+/// be an `n m` header.
+///
+/// Header disambiguation: a 2-token first line `a b` is ambiguous between
+/// the header `n m` and a degree-0 vertex line `u 0`. When `b == 0` it is
+/// read as the vertex line — a data interpretation never silently drops a
+/// vertex, which the old always-a-header rule did. When `b > 0` a data
+/// reading would be malformed (degree `b` with zero neighbours listed), so
+/// it must be the header — and it is then verified against the parsed
+/// file: the declared edge count must match and every named vertex must
+/// fall below the declared `n`, otherwise the load fails instead of
+/// guessing.
 pub fn load_adjacency(path: &Path) -> Result<Csr> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("opening adjacency list {}", path.display()))?;
     let reader = BufReader::new(f);
     let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
     let mut max_v: u64 = 0;
+    let mut saw_vertex = false;
+    let mut first_content = true;
+    let mut header: Option<(u64, u64)> = None;
+    let mut declared_edges: u64 = 0;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
         let line = line.trim();
@@ -72,113 +124,312 @@ pub fn load_adjacency(path: &Path) -> Result<Csr> {
             .map(|t| t.parse::<u64>())
             .collect::<std::result::Result<_, _>>()
             .with_context(|| format!("line {}: non-numeric token", lineno + 1))?;
-        if lineno == 0 && nums.len() == 2 {
-            // optional `n m` header
-            max_v = max_v.max(nums[0].saturating_sub(1));
-            continue;
-        }
-        if nums.is_empty() {
+        if std::mem::take(&mut first_content) && nums.len() == 2 && nums[1] > 0 {
+            // see the doc comment: `a b` with b > 0 can only be the header
+            header = Some((nums[0], nums[1]));
             continue;
         }
         let u = nums[0];
         max_v = max_v.max(u);
+        saw_vertex = true;
         let k = if nums.len() >= 2 { nums[1] as usize } else { 0 };
         if nums.len() != k + 2 {
-            bail!("line {}: declared degree {} but {} listed", lineno + 1, k, nums.len().saturating_sub(2));
+            bail!(
+                "line {}: declared degree {} but {} listed",
+                lineno + 1,
+                k,
+                nums.len().saturating_sub(2)
+            );
         }
+        declared_edges += k as u64;
         for &v in &nums[2..] {
             max_v = max_v.max(v);
             edges.push((u as VertexId, v as VertexId));
         }
     }
-    let n = (max_v + 1) as usize;
+    let mut n = if saw_vertex { max_v + 1 } else { 0 };
+    if let Some((hn, hm)) = header {
+        ensure!(
+            hm == declared_edges,
+            "header declares {hm} edges but the file lists {declared_edges} — \
+             either the header is wrong or the first line was a malformed vertex line"
+        );
+        ensure!(
+            hn >= n,
+            "header declares {hn} vertices but the file names vertex {max_v}"
+        );
+        n = hn; // the header may declare trailing isolated vertices
+    }
     let name = path
         .file_stem()
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "adjacency".into());
-    Ok(GraphBuilder::new(n).dedup(true).edges(&edges).build(&name))
+    Ok(GraphBuilder::new(n as usize).dedup(true).edges(&edges).build(&name))
 }
 
-const MAGIC: &[u8; 8] = b"PRNBCSR1";
+/// v2 binary cache magic (current format; 64-byte-aligned sections).
+const MAGIC_V2: &[u8; 8] = b"PRNBCSR2";
+/// v1 magic — recognized only to produce the migration error.
+const MAGIC_V1: &[u8; 8] = b"PRNBCSR1";
+/// Fixed header: magic + `name_len` + `n` + `m`, all `u64` LE.
+const HEADER_BYTES: u64 = 32;
+/// Every array section starts on this boundary, so a page-aligned map can
+/// reinterpret the section bytes in place for any element type used.
+const SECTION_ALIGN: u64 = 64;
 
-/// Write the binary cache format.
+/// One section's placement inside a v2 file.
+#[derive(Debug, Clone, Copy)]
+struct Span {
+    /// Byte offset of the section start (64-byte aligned).
+    at: u64,
+    /// Element count.
+    elems: u64,
+}
+
+/// Byte layout of a v2 file — a pure function of the header counts, so the
+/// expected total size is known before touching anything past the header.
+#[derive(Debug, Clone, Copy)]
+struct V2Layout {
+    out_offsets: Span,
+    out_edges: Span,
+    in_offsets: Span,
+    in_edges: Span,
+    offset_list: Span,
+    /// Exact file size in bytes.
+    total: u64,
+}
+
+fn align_up(x: u64) -> Result<u64> {
+    x.checked_add(SECTION_ALIGN - 1)
+        .map(|y| y & !(SECTION_ALIGN - 1))
+        .ok_or_else(|| anyhow!("binary graph layout overflows u64"))
+}
+
+fn v2_layout(name_len: u64, n: u64, m: u64) -> Result<V2Layout> {
+    let overflow =
+        || anyhow!("binary graph header counts overflow (name_len {name_len}, n {n}, m {m})");
+    let offsets_elems = n.checked_add(1).ok_or_else(overflow)?;
+    let offsets_bytes = offsets_elems.checked_mul(8).ok_or_else(overflow)?;
+    let edges_bytes_u32 = m.checked_mul(4).ok_or_else(overflow)?;
+    let edges_bytes_u64 = m.checked_mul(8).ok_or_else(overflow)?;
+    let mut at = align_up(HEADER_BYTES.checked_add(name_len).ok_or_else(overflow)?)?;
+    let out_offsets = Span { at, elems: offsets_elems };
+    at = align_up(at.checked_add(offsets_bytes).ok_or_else(overflow)?)?;
+    let out_edges = Span { at, elems: m };
+    at = align_up(at.checked_add(edges_bytes_u32).ok_or_else(overflow)?)?;
+    let in_offsets = Span { at, elems: offsets_elems };
+    at = align_up(at.checked_add(offsets_bytes).ok_or_else(overflow)?)?;
+    let in_edges = Span { at, elems: m };
+    at = align_up(at.checked_add(edges_bytes_u32).ok_or_else(overflow)?)?;
+    let offset_list = Span { at, elems: m };
+    let total = at.checked_add(edges_bytes_u64).ok_or_else(overflow)?;
+    Ok(V2Layout { out_offsets, out_edges, in_offsets, in_edges, offset_list, total })
+}
+
+/// Parsed v2 header counts plus the derived layout, checked against the
+/// actual file length — the single gate that both rejects every truncated
+/// prefix and bounds all subsequent allocations.
+struct V2Header {
+    name_len: usize,
+    n: usize,
+    m: usize,
+    layout: V2Layout,
+}
+
+fn parse_v2_header(header: &[u8; 32], file_len: u64, what: &Path) -> Result<V2Header> {
+    let magic = &header[0..8];
+    if magic == MAGIC_V1 {
+        bail!(
+            "{}: v1 binary cache (PRNBCSR1) is no longer supported — \
+             regenerate it with `pagerank-nb gen` or re-save the graph \
+             (save_binary now writes the 64-byte-aligned v2 format)",
+            what.display()
+        );
+    }
+    if magic != MAGIC_V2 {
+        bail!("{}: not a pagerank-nb binary graph", what.display());
+    }
+    let word = |i: usize| u64::from_le_bytes(header[8 * i..8 * i + 8].try_into().unwrap());
+    let (name_len, n, m) = (word(1), word(2), word(3));
+    let layout = v2_layout(name_len, n, m)?;
+    ensure!(
+        layout.total == file_len,
+        "{}: binary graph truncated or corrupt — header (n {n}, m {m}, \
+         name {name_len}B) implies exactly {} bytes, file has {file_len}",
+        what.display(),
+        layout.total
+    );
+    // file_len fits usize on every supported target once this passes; the
+    // casts below are bounded by it, so no count can demand an allocation
+    // beyond what the file actually contains.
+    let fits = |x: u64| -> Result<usize> {
+        usize::try_from(x).map_err(|_| {
+            anyhow!("{}: graph exceeds this platform's address space", what.display())
+        })
+    };
+    Ok(V2Header { name_len: fits(name_len)?, n: fits(n)?, m: fits(m)?, layout })
+}
+
+/// Write the v2 binary cache format.
 pub fn save_binary(g: &Csr, path: &Path) -> Result<()> {
+    let name = g.name.as_bytes();
+    let layout = v2_layout(name.len() as u64, g.num_vertices() as u64, g.num_edges() as u64)?;
     let f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
     let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    let name = g.name.as_bytes();
+    w.write_all(MAGIC_V2)?;
     w.write_all(&(name.len() as u64).to_le_bytes())?;
-    w.write_all(name)?;
     w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
     w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
-    write_usizes(&mut w, &g.out_offsets)?;
-    write_u32s(&mut w, &g.out_edges)?;
-    write_usizes(&mut w, &g.in_offsets)?;
-    write_u32s(&mut w, &g.in_edges)?;
-    write_usizes(&mut w, &g.offset_list)?;
+    w.write_all(name)?;
+    let mut written = HEADER_BYTES + name.len() as u64;
+    let mut pad_to = |w: &mut BufWriter<std::fs::File>, written: &mut u64, at: u64| -> Result<()> {
+        debug_assert!(at >= *written);
+        for _ in *written..at {
+            w.write_all(&[0u8])?;
+        }
+        *written = at;
+        Ok(())
+    };
+    pad_to(&mut w, &mut written, layout.out_offsets.at)?;
+    written += write_usizes(&mut w, &g.out_offsets)?;
+    pad_to(&mut w, &mut written, layout.out_edges.at)?;
+    written += write_u32s(&mut w, &g.out_edges)?;
+    pad_to(&mut w, &mut written, layout.in_offsets.at)?;
+    written += write_usizes(&mut w, &g.in_offsets)?;
+    pad_to(&mut w, &mut written, layout.in_edges.at)?;
+    written += write_u32s(&mut w, &g.in_edges)?;
+    pad_to(&mut w, &mut written, layout.offset_list.at)?;
+    written += write_usizes(&mut w, &g.offset_list)?;
+    debug_assert_eq!(written, layout.total);
     w.flush()?;
     Ok(())
 }
 
-/// Read the binary cache format (validates the result).
+/// Read the v2 binary cache into an owned (heap-resident) [`Csr`],
+/// validating the result. Truncated or corrupt files fail cleanly: the
+/// header-implied size must match the file exactly before anything is
+/// allocated or parsed.
 pub fn load_binary(path: &Path) -> Result<Csr> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("opening {}", path.display()))?;
+    let file_len = f.metadata()?.len();
     let mut r = BufReader::new(f);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{}: not a pagerank-nb binary graph", path.display());
-    }
-    let name_len = read_u64(&mut r)? as usize;
-    let mut name_bytes = vec![0u8; name_len];
+    let mut header = [0u8; 32];
+    r.read_exact(&mut header)
+        .with_context(|| format!("{}: binary graph shorter than its header", path.display()))?;
+    let h = parse_v2_header(&header, file_len, path)?;
+    let mut name_bytes = vec![0u8; h.name_len];
     r.read_exact(&mut name_bytes)?;
     let name = String::from_utf8(name_bytes).context("graph name not utf-8")?;
-    let n = read_u64(&mut r)? as usize;
-    let m = read_u64(&mut r)? as usize;
-    let out_offsets = read_usizes(&mut r, n + 1)?;
-    let out_edges = read_u32s(&mut r, m)?;
-    let in_offsets = read_usizes(&mut r, n + 1)?;
-    let in_edges = read_u32s(&mut r, m)?;
-    let offset_list = read_usizes(&mut r, m)?;
-    let g = Csr::from_parts(n, out_offsets, out_edges, in_offsets, in_edges, offset_list, name);
-    g.validate().map_err(|e| anyhow::anyhow!("corrupt binary graph: {e}"))?;
+    let out_offsets = read_usizes_at(&mut r, h.layout.out_offsets)?;
+    let out_edges = read_u32s_at(&mut r, h.layout.out_edges)?;
+    let in_offsets = read_usizes_at(&mut r, h.layout.in_offsets)?;
+    let in_edges = read_u32s_at(&mut r, h.layout.in_edges)?;
+    let offset_list = read_usizes_at(&mut r, h.layout.offset_list)?;
+    // from_stores + explicit validate (not from_parts): the data is
+    // untrusted, so corruption must surface as this error on every build
+    // profile, never as a debug assertion.
+    let g = Csr::from_stores(
+        h.n,
+        out_offsets.into(),
+        out_edges.into(),
+        in_offsets.into(),
+        in_edges.into(),
+        offset_list.into(),
+        name,
+    );
+    g.validate()
+        .map_err(|e| anyhow!("{}: corrupt binary graph: {e}", path.display()))?;
     Ok(g)
 }
 
-fn write_usizes<W: Write>(w: &mut W, xs: &[usize]) -> Result<()> {
+/// Memory-map the v2 binary cache and return a zero-copy [`Csr`] whose five
+/// arrays alias the mapped sections — the OS pages them in on demand, so
+/// graphs larger than RAM stay runnable ([`crate::engine::ooc`]).
+///
+/// The mapped graph passes the same full [`Csr::validate`] as the owned
+/// loader before it is returned: kernels index the CSR with unchecked
+/// loads on the strength of that check, so it must hold for on-disk bytes
+/// too (the validation scan is sequential and streams cleanly through the
+/// page cache).
+///
+/// Requires a 64-bit little-endian host — the on-disk sections are LE
+/// `u64`/`u32` reinterpreted in place.
+pub fn map_binary(path: &Path) -> Result<Csr> {
+    ensure!(
+        cfg!(target_endian = "little") && std::mem::size_of::<usize>() == 8,
+        "mmap-backed graph storage requires a 64-bit little-endian host \
+         (the v2 sections are reinterpreted in place); use the owned loader"
+    );
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let map = Arc::new(
+        Mmap::map(&f).with_context(|| format!("memory-mapping {}", path.display()))?,
+    );
+    let bytes: &[u8] = &map;
+    ensure!(
+        bytes.len() >= HEADER_BYTES as usize,
+        "{}: binary graph shorter than its header",
+        path.display()
+    );
+    let header: [u8; 32] = bytes[..32].try_into().expect("length checked");
+    let h = parse_v2_header(&header, bytes.len() as u64, path)?;
+    let name = String::from_utf8(bytes[32..32 + h.name_len].to_vec())
+        .context("graph name not utf-8")?;
+    let store_usize = |s: Span| -> Result<GraphStore<usize>> {
+        GraphStore::mapped(Arc::clone(&map), s.at as usize, s.elems as usize)
+            .map_err(anyhow::Error::msg)
+    };
+    let store_u32 = |s: Span| -> Result<GraphStore<VertexId>> {
+        GraphStore::mapped(Arc::clone(&map), s.at as usize, s.elems as usize)
+            .map_err(anyhow::Error::msg)
+    };
+    let g = Csr::from_stores(
+        h.n,
+        store_usize(h.layout.out_offsets)?,
+        store_u32(h.layout.out_edges)?,
+        store_usize(h.layout.in_offsets)?,
+        store_u32(h.layout.in_edges)?,
+        store_usize(h.layout.offset_list)?,
+        name,
+    );
+    g.validate()
+        .map_err(|e| anyhow!("{}: corrupt binary graph: {e}", path.display()))?;
+    Ok(g)
+}
+
+fn write_usizes<W: Write>(w: &mut W, xs: &[usize]) -> Result<u64> {
     for &x in xs {
         w.write_all(&(x as u64).to_le_bytes())?;
     }
-    Ok(())
+    Ok(xs.len() as u64 * 8)
 }
 
-fn write_u32s<W: Write>(w: &mut W, xs: &[u32]) -> Result<()> {
+fn write_u32s<W: Write>(w: &mut W, xs: &[u32]) -> Result<u64> {
     for &x in xs {
         w.write_all(&x.to_le_bytes())?;
     }
-    Ok(())
+    Ok(xs.len() as u64 * 4)
 }
 
-fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+fn read_usizes_at<R: Read + Seek>(r: &mut R, span: Span) -> Result<Vec<usize>> {
+    r.seek(SeekFrom::Start(span.at))?;
+    // the count was already bounded by the exact-file-size check
+    let mut out = Vec::with_capacity(span.elems as usize);
     let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
-}
-
-fn read_usizes<R: Read>(r: &mut R, count: usize) -> Result<Vec<usize>> {
-    let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
-        out.push(read_u64(r)? as usize);
+    for _ in 0..span.elems {
+        r.read_exact(&mut b)?;
+        out.push(u64::from_le_bytes(b) as usize);
     }
     Ok(out)
 }
 
-fn read_u32s<R: Read>(r: &mut R, count: usize) -> Result<Vec<u32>> {
-    let mut out = Vec::with_capacity(count);
-    for _ in 0..count {
-        let mut b = [0u8; 4];
+fn read_u32s_at<R: Read + Seek>(r: &mut R, span: Span) -> Result<Vec<u32>> {
+    r.seek(SeekFrom::Start(span.at))?;
+    let mut out = Vec::with_capacity(span.elems as usize);
+    let mut b = [0u8; 4];
+    for _ in 0..span.elems {
         r.read_exact(&mut b)?;
         out.push(u32::from_le_bytes(b));
     }
@@ -226,6 +477,17 @@ mod tests {
         assert!(load_edge_list(&p).is_err());
     }
 
+    /// The id-space guard itself (4 billion distinct ids won't fit in a test
+    /// fixture): the last assignable dense id is `u32::MAX - 1`, one more
+    /// must fail instead of wrapping.
+    #[test]
+    fn dense_id_overflow_guard() {
+        assert_eq!(next_dense_id(0).unwrap(), 0);
+        assert_eq!(next_dense_id(VertexId::MAX as usize - 1).unwrap(), VertexId::MAX - 1);
+        let err = next_dense_id(VertexId::MAX as usize).unwrap_err().to_string();
+        assert!(err.contains("distinct vertex ids"), "{err}");
+    }
+
     #[test]
     fn adjacency_format() {
         let p = tmpfile("adj.txt");
@@ -244,6 +506,51 @@ mod tests {
         assert!(load_adjacency(&p).is_err());
     }
 
+    /// Regression: a first line `u 0` (vertex `u`, out-degree 0) used to be
+    /// swallowed as an `n m` header, silently dropping the vertex.
+    #[test]
+    fn adjacency_first_line_degree_zero_vertex_is_kept() {
+        let p = tmpfile("adjdeg0.txt");
+        std::fs::write(&p, "7 0\n").unwrap();
+        let g = load_adjacency(&p).unwrap();
+        assert_eq!(g.num_vertices(), 8, "vertex 7 must not be dropped");
+        assert_eq!(g.num_edges(), 0);
+
+        std::fs::write(&p, "0 0\n1 1 0\n").unwrap();
+        let g = load_adjacency(&p).unwrap();
+        assert_eq!(g.num_vertices(), 2);
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.out_degree(0), 0);
+    }
+
+    #[test]
+    fn adjacency_header_accepted_when_consistent() {
+        let p = tmpfile("adjheader.txt");
+        std::fs::write(&p, "3 3\n0 2 1 2\n1 1 2\n2 0\n").unwrap();
+        let g = load_adjacency(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+
+        // the header may declare trailing isolated vertices
+        std::fs::write(&p, "5 1\n0 1 1\n").unwrap();
+        let g = load_adjacency(&p).unwrap();
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn adjacency_inconsistent_header_rejected() {
+        let p = tmpfile("adjbadheader.txt");
+        // declares 9 edges, lists 1
+        std::fs::write(&p, "2 9\n0 1 1\n").unwrap();
+        let err = load_adjacency(&p).unwrap_err().to_string();
+        assert!(err.contains("header declares 9 edges"), "{err}");
+        // declares 1 vertex, names vertex 5
+        std::fs::write(&p, "1 1\n0 1 5\n").unwrap();
+        let err = load_adjacency(&p).unwrap_err().to_string();
+        assert!(err.contains("names vertex 5"), "{err}");
+    }
+
     #[test]
     fn binary_roundtrip_preserves_graph() {
         let g = crate::graph::synthetic::web_replica(500, 4, 7);
@@ -256,7 +563,155 @@ mod tests {
     #[test]
     fn binary_rejects_bad_magic() {
         let p = tmpfile("notagraph.bin");
-        std::fs::write(&p, b"NOTMAGIC________").unwrap();
+        std::fs::write(&p, b"NOTMAGIC________________________").unwrap();
         assert!(load_binary(&p).is_err());
+        assert!(map_binary(&p).is_err());
+    }
+
+    #[test]
+    fn v1_cache_rejected_with_migration_hint() {
+        let p = tmpfile("v1.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"PRNBCSR1");
+        bytes.extend_from_slice(&4u64.to_le_bytes()); // name_len
+        bytes.extend_from_slice(b"tiny");
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // n
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // m
+        std::fs::write(&p, bytes).unwrap();
+        for load in [load_binary as fn(&Path) -> Result<Csr>, map_binary] {
+            let err = load(&p).unwrap_err().to_string();
+            assert!(err.contains("v1 binary cache"), "{err}");
+            assert!(err.contains("pagerank-nb gen"), "migration hint missing: {err}");
+        }
+    }
+
+    #[test]
+    fn sections_are_64_byte_aligned() {
+        let layout = v2_layout(11, 97, 331).unwrap();
+        for span in [
+            layout.out_offsets,
+            layout.out_edges,
+            layout.in_offsets,
+            layout.in_edges,
+            layout.offset_list,
+        ] {
+            assert_eq!(span.at % SECTION_ALIGN, 0, "{span:?}");
+        }
+        let g = crate::graph::synthetic::web_replica(300, 5, 3);
+        let p = tmpfile("aligned.bin");
+        save_binary(&g, &p).unwrap();
+        let on_disk = std::fs::metadata(&p).unwrap().len();
+        let expect = v2_layout(
+            g.name.len() as u64,
+            g.num_vertices() as u64,
+            g.num_edges() as u64,
+        )
+        .unwrap();
+        assert_eq!(on_disk, expect.total, "writer and layout must agree exactly");
+    }
+
+    #[test]
+    fn header_counts_cannot_demand_absurd_allocations() {
+        // a 32-byte file whose header claims u64::MAX vertices: the layout
+        // math must fail (or the size check must), never an allocation
+        let p = tmpfile("absurd.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // name_len
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // n
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // m
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_binary(&p).is_err());
+        assert!(map_binary(&p).is_err());
+        // a plausible-but-false header: claims 1e6 vertices in a 32-byte file
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC_V2);
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&1_000_000u64.to_le_bytes());
+        bytes.extend_from_slice(&5_000_000u64.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_binary(&p).unwrap_err().to_string();
+        assert!(err.contains("truncated or corrupt"), "{err}");
+    }
+
+    /// Property: EVERY truncated prefix of a valid v2 file fails cleanly —
+    /// no panic, no multi-GB allocation, just an error.
+    #[test]
+    fn every_truncated_prefix_fails_cleanly() {
+        let g = crate::graph::synthetic::web_replica(40, 3, 5);
+        let full_path = tmpfile("fuzzfull.bin");
+        save_binary(&g, &full_path).unwrap();
+        let full = std::fs::read(&full_path).unwrap();
+        assert!(load_binary(&full_path).is_ok());
+        let p = tmpfile("fuzzprefix.bin");
+        for cut in 0..full.len() {
+            std::fs::write(&p, &full[..cut]).unwrap();
+            assert!(load_binary(&p).is_err(), "prefix of {cut} bytes must not load");
+            assert!(map_binary(&p).is_err(), "prefix of {cut} bytes must not map");
+        }
+    }
+
+    /// Corruption *inside* a right-sized file (bad offsets / endpoints) must
+    /// come back as the validation error, not a panic — on both loaders.
+    #[test]
+    fn bit_flipped_body_fails_validation_cleanly() {
+        let g = crate::graph::synthetic::web_replica(60, 4, 9);
+        let p = tmpfile("flipped.bin");
+        save_binary(&g, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let body_start =
+            v2_layout(g.name.len() as u64, g.num_vertices() as u64, g.num_edges() as u64)
+                .unwrap()
+                .out_offsets
+                .at as usize;
+        for (i, step) in [(body_start + 1, 7usize), (body_start + 3, 97)] {
+            let mut corrupt = bytes.clone();
+            let mut j = i;
+            while j < corrupt.len() {
+                corrupt[j] ^= 0xA5;
+                j += step;
+            }
+            std::fs::write(&p, &corrupt).unwrap();
+            assert!(load_binary(&p).is_err(), "corruption from byte {i} step {step}");
+            assert!(map_binary(&p).is_err(), "corruption from byte {i} step {step}");
+        }
+        // restore and confirm the fixture itself was fine
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(load_binary(&p).is_ok());
+    }
+
+    /// The tentpole equivalence: an mmapped graph is indistinguishable from
+    /// its owned round-trip twin — same vertices, edges, neighbours, and
+    /// `PartialEq` — while actually borrowing from the map.
+    #[test]
+    fn mmap_and_owned_loads_compare_equal() {
+        let g = crate::graph::synthetic::web_replica(400, 5, 13);
+        let p = tmpfile("mmap_eq.bin");
+        save_binary(&g, &p).unwrap();
+        let owned = load_binary(&p).unwrap();
+        let mapped = map_binary(&p).unwrap();
+        assert!(!owned.is_mapped());
+        assert!(mapped.is_mapped());
+        assert_eq!(owned, mapped);
+        assert_eq!(mapped, g);
+        assert_eq!(mapped.name, g.name);
+        assert_eq!(mapped.num_vertices(), g.num_vertices());
+        assert_eq!(mapped.num_edges(), g.num_edges());
+        for u in (0..g.num_vertices() as VertexId).step_by(17) {
+            assert_eq!(mapped.out_neighbors(u), g.out_neighbors(u), "vertex {u}");
+            assert_eq!(mapped.in_neighbors(u), g.in_neighbors(u), "vertex {u}");
+        }
+        assert_eq!(mapped.validate(), Ok(()));
+        // a clone of a mapped graph still aliases the map
+        assert!(mapped.clone().is_mapped());
+    }
+
+    #[test]
+    fn empty_graph_roundtrips_through_both_loaders() {
+        let g = crate::graph::GraphBuilder::new(0).build("nil");
+        let p = tmpfile("empty.bin");
+        save_binary(&g, &p).unwrap();
+        assert_eq!(load_binary(&p).unwrap().num_vertices(), 0);
+        assert_eq!(map_binary(&p).unwrap().num_vertices(), 0);
     }
 }

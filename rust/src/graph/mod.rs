@@ -16,7 +16,8 @@ pub mod scc;
 pub mod synthetic;
 
 pub use builder::GraphBuilder;
-pub use csr::Csr;
+pub use csr::{Csr, GraphStore};
+pub use io::map_binary;
 pub use delta::{AppliedDelta, GraphDelta};
 pub use partition::{CompressedBins, PartitionPolicy, Partitions};
 

@@ -2,9 +2,12 @@
 //!
 //! `pagerank-nb bench-ci` runs every registered engine variant — plus the
 //! PCPM layout/batching ablation rows (`PCPM-slots`, `Frontier-PCPM-slots`,
-//! `PCPM-batch4`) and the incremental-reconvergence rows (`Frontier-incr`,
+//! `PCPM-batch4`), the incremental-reconvergence rows (`Frontier-incr`,
 //! `Frontier-PCPM-incr`: warm-started convergence of a random mutation
-//! batch, see [`crate::engine::incremental`]) — on the scaled-down CI
+//! batch, see [`crate::engine::incremental`]), and the out-of-core rows
+//! (`OOC-mem-s4`, `OOC-mmap-s1`, `OOC-mmap-s4`: the shard coordinator of
+//! [`crate::engine::ooc`] over in-memory vs mmap-backed storage, isolating
+//! rotation overhead from storage cost) — on the scaled-down CI
 //! datasets, writes a
 //! `BENCH_ci.json` report (per-variant wall time, normalized time,
 //! iteration count, vertex updates), and —
@@ -302,6 +305,37 @@ pub fn run_ci_bench(
                         &applied.touched,
                     )
                     .expect("incremental reconverge");
+                    any_dnf |= r.dnf;
+                    (r.elapsed.as_secs_f64(), r)
+                });
+                let secs = if any_dnf { f64::INFINITY } else { m.summary.median };
+                record(label, secs, &probe);
+            }
+        }
+        // Out-of-core ablation rows: the same graph swept through the
+        // shard coordinator. `OOC-mem-s4` isolates the rotation overhead
+        // (owned storage, 4 shards); `OOC-mmap-s1` isolates the mmap
+        // storage cost (no sharding); `OOC-mmap-s4` is the full
+        // out-of-core path. The v2 cache is written and mapped once
+        // outside the timed closure — materializing it is a gen-step
+        // cost, not a per-run one.
+        {
+            let dir = std::env::temp_dir().join("pagerank_nb_bench_ci");
+            std::fs::create_dir_all(&dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+            let spill = dir.join(format!("{name}-{}.bin", std::process::id()));
+            crate::graph::io::save_binary(&g, &spill)?;
+            let mapped = crate::graph::io::map_binary(&spill)?;
+            let ooc_rows: [(&str, &Csr, usize); 3] = [
+                ("OOC-mem-s4", &g, 4),
+                ("OOC-mmap-s1", &mapped, 1),
+                ("OOC-mmap-s4", &mapped, 4),
+            ];
+            for (label, graph, shards) in ooc_rows {
+                let mut any_dnf = false;
+                let (m, probe) = runner.measure_with(label, || {
+                    let r = crate::engine::ooc::run_sharded(graph, &cfg, shards)
+                        .expect("out-of-core run");
                     any_dnf |= r.dnf;
                     (r.elapsed.as_secs_f64(), r)
                 });
@@ -651,9 +685,10 @@ mod tests {
     #[test]
     fn report_covers_every_mode_on_every_dataset() {
         let r = tiny_report();
-        // every engine mode plus the three layout/batching ablation rows
-        // and the two incremental-reconvergence rows
-        assert_eq!(r.rows.len(), 2 * (Variant::ALL_MODES.len() + 5));
+        // every engine mode plus the three layout/batching ablation rows,
+        // the two incremental-reconvergence rows, and the three
+        // out-of-core rows
+        assert_eq!(r.rows.len(), 2 * (Variant::ALL_MODES.len() + 8));
         for v in Variant::ALL_MODES {
             for ds in ["webStanford", "roaditalyosm"] {
                 let row = r.find(ds, v.name()).unwrap_or_else(|| panic!("{ds}/{v}"));
@@ -666,6 +701,9 @@ mod tests {
             "PCPM-batch4",
             "Frontier-incr",
             "Frontier-PCPM-incr",
+            "OOC-mem-s4",
+            "OOC-mmap-s1",
+            "OOC-mmap-s4",
         ] {
             for ds in ["webStanford", "roaditalyosm"] {
                 let row = r.find(ds, label).unwrap_or_else(|| panic!("{ds}/{label}"));
@@ -693,6 +731,19 @@ mod tests {
         // frontier rows carry the work metric the schedule is about
         let f = r.find("roaditalyosm", "Frontier").unwrap();
         assert!(f.vertex_updates > 0);
+        // out-of-core rows: deterministic coordinator, so the mmap and
+        // in-memory runs at the same shard count do identical work
+        for ds in ["webStanford", "roaditalyosm"] {
+            for label in ["OOC-mem-s4", "OOC-mmap-s1", "OOC-mmap-s4"] {
+                let row = r.find(ds, label).unwrap();
+                assert!(row.converged, "{ds}/{label}");
+                assert!(row.vertex_updates > 0, "{ds}/{label}");
+            }
+            let mem = r.find(ds, "OOC-mem-s4").unwrap();
+            let mmap = r.find(ds, "OOC-mmap-s4").unwrap();
+            assert_eq!(mem.vertex_updates, mmap.vertex_updates, "{ds}");
+            assert_eq!(mem.iterations, mmap.iterations, "{ds}");
+        }
     }
 
     #[test]

@@ -88,6 +88,33 @@ impl DirtyFlags {
             .sum()
     }
 
+    /// True when any bit in `range` is set. Non-destructive — unlike
+    /// [`DirtyFlags::drain_range`] nothing is claimed — so a coordinator can
+    /// ask "does this shard need a sweep?" without disturbing the frontier
+    /// (the out-of-core scheduler, [`crate::engine::ooc`]). One `Acquire`
+    /// load per 64 vertices; a concurrent set may be missed by this probe
+    /// (it lands in the modification order after the load) but is seen by
+    /// the next one — the same delay-not-loss guarantee the drain gives.
+    pub fn any_in_range(&self, range: Range<VertexId>) -> bool {
+        let (start, end) = (range.start as usize, range.end as usize);
+        if start >= end {
+            return false;
+        }
+        let first_word = start / 64;
+        let last_word = (end - 1) / 64;
+        (first_word..=last_word).any(|w| {
+            let lo = (w * 64).max(start);
+            let hi = ((w + 1) * 64).min(end);
+            let width = hi - lo;
+            let mask: u64 = if width == 64 {
+                !0
+            } else {
+                ((1u64 << width) - 1) << (lo - w * 64)
+            };
+            self.words[w].load(Ordering::Acquire) & mask != 0
+        })
+    }
+
     /// Claim-and-visit every set bit in `range`, in ascending order.
     ///
     /// Claims all of a word's in-range bits with one `fetch_and`, then calls
@@ -165,6 +192,23 @@ mod tests {
         assert!(!d.is_set(129));
         assert_eq!(d.count_set(), 130);
         assert_eq!(d.drain_range(60..130, |_| ()), 0);
+    }
+
+    #[test]
+    fn any_in_range_probes_without_claiming() {
+        let d = DirtyFlags::new_clear(300);
+        assert!(!d.any_in_range(0..300));
+        d.set(130);
+        assert!(d.any_in_range(0..300));
+        assert!(d.any_in_range(130..131));
+        assert!(d.any_in_range(64..192), "word-spanning range");
+        assert!(!d.any_in_range(0..130));
+        assert!(!d.any_in_range(131..300));
+        assert!(!d.any_in_range(10..10), "empty range");
+        // probing never claims: the bit is still there for the drain
+        assert!(d.is_set(130));
+        assert_eq!(d.drain_range(0..300, |v| assert_eq!(v, 130)), 1);
+        assert!(!d.any_in_range(0..300));
     }
 
     #[test]

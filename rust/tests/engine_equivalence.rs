@@ -213,6 +213,41 @@ fn prop_pcpm_layouts_and_batches_agree_on_random_graphs() {
     );
 }
 
+/// The out-of-core acceptance criterion: a graph whose CSR arrays exceed
+/// the memory budget is spilled to the v2 binary cache, mapped back
+/// zero-copy, and swept shard-by-shard through the coordinator — and the
+/// resulting ranks land within 1e-6 L1 of the in-memory Barrier schedule.
+#[test]
+fn out_of_core_mmap_sharded_matches_in_memory_barrier() {
+    use pagerank_nb::engine::ooc;
+    use pagerank_nb::graph::io;
+
+    let g = synthetic::web_replica(4_000, 6, 42);
+    let cfg = PrConfig { threads: 4, threshold: 1e-10, ..PrConfig::default() };
+    let barrier = pagerank::run(&g, Variant::Barrier, &cfg).unwrap();
+    assert!(barrier.converged);
+
+    let dir = std::env::temp_dir().join("pagerank_nb_equiv_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spill = dir.join(format!("ooc-{}.bin", std::process::id()));
+    io::save_binary(&g, &spill).unwrap();
+    let mapped = io::map_binary(&spill).unwrap();
+    assert!(mapped.is_mapped());
+
+    // a budget of a quarter of the graph forces a multi-shard schedule
+    let budget = g.memory_bytes() / 4;
+    let derived = ooc::shards_for_budget(&mapped, budget);
+    assert!(derived >= 4, "quarter budget must derive >= 4 shards, got {derived}");
+
+    for shards in [4usize, derived] {
+        let r = ooc::run_sharded(&mapped, &cfg, shards).unwrap();
+        assert!(r.converged, "shards={shards} did not converge");
+        let l1 = r.l1_norm(&barrier.ranks);
+        assert!(l1 < 1e-6, "shards={shards}: L1 vs barrier {l1}");
+        assert!(r.vertex_updates > 0, "shards={shards}: coordinator not instrumented");
+    }
+}
+
 /// The XlaBlock-excluded dispatch path: the engine registry rejects it with
 /// a pointer at `run_with_engine` instead of panicking or hanging.
 #[test]

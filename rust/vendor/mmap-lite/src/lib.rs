@@ -1,0 +1,226 @@
+//! Offline minimal read-only memory map.
+//!
+//! The build image has no crates.io registry, so the out-of-core graph
+//! storage ([`pagerank_nb::graph`]'s mmap-backed CSR) vendors this tiny
+//! wrapper instead of depending on `memmap2`. It supports exactly what the
+//! project needs:
+//!
+//! * [`Mmap::map`] — map an open file read-only, private;
+//! * [`Deref`] to `&[u8]` — the mapped bytes as a slice;
+//! * automatic `munmap` on drop.
+//!
+//! On unix targets this calls `mmap`/`munmap` directly through `extern "C"`
+//! declarations (the constants below match Linux and the BSD family for the
+//! read-only private case). On non-unix targets — and for zero-length files,
+//! which `mmap(2)` rejects with `EINVAL` — it falls back to reading the file
+//! into the heap, so callers get the same `&[u8]` view everywhere; only the
+//! paging behaviour differs.
+//!
+//! The kernel maps page-aligned memory, so a mapping's base address is
+//! always at least 4 KiB-aligned — callers may rely on that when
+//! reinterpreting section bytes at 64-byte-aligned offsets.
+
+use std::fs::File;
+use std::io;
+use std::ops::Deref;
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+
+    /// `PROT_READ` — pages may be read.
+    pub const PROT_READ: i32 = 1;
+    /// `MAP_PRIVATE` — copy-on-write private mapping (we never write).
+    pub const MAP_PRIVATE: i32 = 2;
+    /// `mmap(2)` error sentinel (`(void *) -1`).
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// A read-only view of a file's bytes: a kernel memory map on unix, a heap
+/// copy elsewhere. Deref's to `&[u8]`.
+pub struct Mmap {
+    inner: Inner,
+}
+
+enum Inner {
+    /// A live `mmap(2)` mapping; unmapped on drop.
+    #[cfg(unix)]
+    Mapped { ptr: *const u8, len: usize },
+    /// Heap-backed fallback (non-unix targets, zero-length files).
+    Owned(Vec<u8>),
+}
+
+// SAFETY: the mapping is immutable (PROT_READ, MAP_PRIVATE) and the pointer
+// refers to pages owned by this value for its whole lifetime, so shared
+// access from any thread is a plain read of immutable memory.
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `file` read-only. The returned view covers the file's length at
+    /// call time; the caller must not truncate the file while the map is
+    /// live (on unix that would turn reads past the new end into `SIGBUS`,
+    /// exactly as with any mmap).
+    pub fn map(file: &File) -> io::Result<Mmap> {
+        let len = file.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "file larger than the address space",
+            ));
+        }
+        Self::map_len(file, len as usize)
+    }
+
+    #[cfg(unix)]
+    fn map_len(file: &File, len: usize) -> io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            // mmap(2) rejects zero-length maps with EINVAL.
+            return Ok(Mmap { inner: Inner::Owned(Vec::new()) });
+        }
+        // SAFETY: the fd is valid for the duration of the call; a PROT_READ
+        // + MAP_PRIVATE mapping of `len` bytes at offset 0 has no aliasing
+        // requirements on our side. The result is checked against
+        // MAP_FAILED before use.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::MAP_FAILED {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Mmap { inner: Inner::Mapped { ptr: ptr as *const u8, len } })
+    }
+
+    #[cfg(not(unix))]
+    fn map_len(file: &File, len: usize) -> io::Result<Mmap> {
+        use std::io::Read;
+        let mut buf = Vec::with_capacity(len);
+        let mut f = file;
+        f.read_to_end(&mut buf)?;
+        Ok(Mmap { inner: Inner::Owned(buf) })
+    }
+
+    /// The mapped bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        match &self.inner {
+            // SAFETY: `ptr` points at `len` mapped read-only bytes that stay
+            // mapped until drop (see `Inner::Mapped`).
+            #[cfg(unix)]
+            Inner::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Inner::Owned(v) => v,
+        }
+    }
+
+    /// Length of the view in bytes.
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    /// True when the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Mmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Mmap").field("len", &self.len()).finish()
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Inner::Mapped { ptr, len } = self.inner {
+            // SAFETY: `ptr`/`len` came from a successful mmap of exactly
+            // this extent and are unmapped exactly once (drop).
+            unsafe {
+                sys::munmap(ptr as *mut std::ffi::c_void, len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("mmap_lite_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = File::create(&p).unwrap();
+        f.write_all(bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let p = tmpfile("payload.bin", &payload);
+        let m = Mmap::map(&File::open(&p).unwrap()).unwrap();
+        assert_eq!(m.len(), payload.len());
+        assert_eq!(&m[..], &payload[..]);
+    }
+
+    #[test]
+    fn empty_file_maps_to_empty_slice() {
+        let p = tmpfile("empty.bin", b"");
+        let m = Mmap::map(&File::open(&p).unwrap()).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(&m[..], b"");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn map_is_page_aligned() {
+        let p = tmpfile("aligned.bin", &[7u8; 4096]);
+        let m = Mmap::map(&File::open(&p).unwrap()).unwrap();
+        // A real kernel mapping is page-aligned, which is what lets callers
+        // reinterpret 64-byte-aligned sections inside it.
+        assert_eq!(m.as_slice().as_ptr() as usize % 4096, 0);
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let p = tmpfile("shared.bin", &[42u8; 1 << 16]);
+        let m = std::sync::Arc::new(Mmap::map(&File::open(&p).unwrap()).unwrap());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = std::sync::Arc::clone(&m);
+                s.spawn(move || {
+                    assert!(m.iter().all(|&b| b == 42));
+                });
+            }
+        });
+    }
+}

@@ -54,6 +54,12 @@ echo "· frontier-pcpm (per-edge slots baseline)"
 "$BIN" run --graph "$GRAPH" --mode frontier-pcpm --pcpm-layout slots \
     --threads "$THREADS" --top 3
 
+echo "· out-of-core (mmap-backed v2 cache, 4-shard rotation)"
+"$BIN" run --graph "$GRAPH" --storage mmap --shards 4 --top 3
+
+echo "· out-of-core (shard count derived from a 1 MiB memory budget)"
+"$BIN" run --graph "$GRAPH" --storage mmap --mem-budget 1 --top 3
+
 echo "· serve (evolve-query-reconverge: incremental epochs + live queries)"
 "$BIN" serve --graph "$GRAPH" --epochs 2 --batch 16 --readers 2 \
     --threads "$THREADS" --top 3
