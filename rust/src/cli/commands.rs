@@ -2,12 +2,13 @@
 
 use crate::cli::ArgMap;
 use crate::coordinator::host::HostInfo;
+use crate::engine::topology::Placement;
 use crate::graph::properties::GraphStats;
 use crate::graph::synthetic::{self, table1};
 use crate::graph::{io, Csr, PartitionPolicy};
 use crate::harness::bench::BenchRunner;
 use crate::harness::experiments::{self, Ctx, ALL_EXPERIMENTS};
-use crate::pagerank::{self, PcpmLayout, PrConfig, Variant};
+use crate::pagerank::{self, FrontierSched, PcpmLayout, PrConfig, Variant};
 use crate::util::fmt;
 use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
@@ -102,14 +103,31 @@ fn config_from_args(args: &ArgMap) -> Result<PrConfig> {
         None => PcpmLayout::Compressed,
         Some(s) => PcpmLayout::parse(s)?,
     };
+    let numa = match args.get("numa") {
+        None => Placement::Off,
+        Some(s) => Placement::parse(s)?,
+    };
+    let frontier_sched = match args.get("frontier-sched") {
+        None => FrontierSched::Bitmap,
+        Some(s) => FrontierSched::parse(s)?,
+    };
+    // `--delta-threshold auto` arms the residual-driven tuner; a number
+    // fixes the push cutoff (0 = derive from the convergence threshold).
+    let (delta_auto, delta_threshold) = match args.get("delta-threshold") {
+        Some("auto") => (true, 0.0),
+        _ => (false, args.get_parsed("delta-threshold", 0.0f64)?),
+    };
     Ok(PrConfig {
         damping: args.get_parsed("damping", crate::DAMPING)?,
         threshold: args.get_parsed("threshold", crate::DEFAULT_THRESHOLD)?,
         max_iterations: args.get_parsed("iters", 10_000u64)?,
         threads: args.get_parsed("threads", host.default_threads())?,
         partition,
-        // frontier/delta push cutoff; 0 = derive from the threshold
-        delta_threshold: args.get_parsed("delta-threshold", 0.0f64)?,
+        delta_threshold,
+        delta_auto,
+        // frontier sweep scheduling + worker placement (see engine docs)
+        frontier_sched,
+        numa,
         // partition-centric knobs: source-partition batch + bin layout
         pcpm_batch: args.get_parsed("pcpm-batch", 1usize)?,
         pcpm_layout,
@@ -359,7 +377,8 @@ pub fn cmd_bench_ci(args: &ArgMap) -> Result<()> {
         for b in &baseline.rows {
             if report.find(&b.dataset, &b.variant).is_none() {
                 eprintln!(
-                    "note: baseline row {}/{} has no counterpart in this run — not gated",
+                    "MISSING: baseline row {}/{} has no counterpart in this run — \
+                     skipped by the gate (renamed/removed ablation?)",
                     b.dataset, b.variant
                 );
             }
@@ -628,6 +647,46 @@ mod tests {
         assert_eq!(cfg.resolved_delta_threshold(), 1e-4);
         let b = ArgMap::parse(&[]).unwrap();
         assert_eq!(config_from_args(&b).unwrap().delta_threshold, 0.0);
+    }
+
+    #[test]
+    fn delta_threshold_auto_arms_the_tuner() {
+        let a = ArgMap::parse(&["--delta-threshold".into(), "auto".into()]).unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert!(cfg.delta_auto);
+        assert_eq!(cfg.delta_threshold, 0.0, "auto starts from the derived cutoff");
+        let fixed = ArgMap::parse(&["--delta-threshold".into(), "1e-5".into()]).unwrap();
+        assert!(!config_from_args(&fixed).unwrap().delta_auto);
+        let bad = ArgMap::parse(&["--delta-threshold".into(), "soon".into()]).unwrap();
+        assert!(config_from_args(&bad).is_err(), "non-numeric, non-auto rejected");
+    }
+
+    #[test]
+    fn numa_and_frontier_sched_flags_reach_config() {
+        let a = ArgMap::parse(&[
+            "--numa".into(),
+            "pin".into(),
+            "--frontier-sched".into(),
+            "worklist".into(),
+        ])
+        .unwrap();
+        let cfg = config_from_args(&a).unwrap();
+        assert_eq!(cfg.numa, Placement::Pin);
+        assert_eq!(cfg.frontier_sched, FrontierSched::Worklist);
+        let defaults = config_from_args(&ArgMap::parse(&[]).unwrap()).unwrap();
+        assert_eq!(defaults.numa, Placement::Off);
+        assert_eq!(defaults.frontier_sched, FrontierSched::Bitmap);
+        let hybrid =
+            ArgMap::parse(&["--frontier-sched".into(), "hybrid".into()]).unwrap();
+        assert_eq!(
+            config_from_args(&hybrid).unwrap().frontier_sched,
+            FrontierSched::Hybrid
+        );
+        let bad_numa = ArgMap::parse(&["--numa".into(), "far".into()]).unwrap();
+        assert!(config_from_args(&bad_numa).is_err());
+        let bad_sched =
+            ArgMap::parse(&["--frontier-sched".into(), "stack".into()]).unwrap();
+        assert!(config_from_args(&bad_sched).is_err());
     }
 
     #[test]

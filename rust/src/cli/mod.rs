@@ -60,7 +60,8 @@ USAGE:
                        [--mode standard|pcpm|frontier|frontier-pcpm]
                        [--threads N] [--threshold X] [--iters N]
                        [--partition vertex|edge] [--top K] [--damping D]
-                       [--delta-threshold X]
+                       [--delta-threshold X|auto] [--frontier-sched bitmap|worklist|hybrid]
+                       [--numa off|pin|interleave]
                        [--pcpm-batch B] [--pcpm-layout compressed|slots]
                        [--storage memory|mmap] [--shards S | --mem-budget MiB]
                        (--storage mmap runs against the v2 binary cache
@@ -88,8 +89,10 @@ VARIANTS:
   no-sync no-sync-identical no-sync-edge no-sync-opt no-sync-opt-identical
   pcpm (partition-centric scatter-gather on compressed bin streams;
         tune --pcpm-batch / --pcpm-layout; also via --mode pcpm)
-  frontier | frontier-pcpm (delta-scheduled gather; tune --delta-threshold,
-        and --pcpm-layout for frontier-pcpm)
+  frontier | frontier-pcpm (delta-scheduled gather; tune --delta-threshold
+        (a number, or `auto` for residual-driven retuning), --frontier-sched
+        (bitmap scan, claim-based work-list, or density-switching hybrid),
+        and --pcpm-layout for frontier-pcpm; --numa pins workers node-local)
   xla-block (needs `make artifacts`)
 
 Full flag reference with examples: docs/cli.md"

@@ -15,7 +15,18 @@
 //! hold a stale-calm slot, so the driver demands **two consecutive** calm
 //! iterations — the second sweep re-validates the partition against any
 //! updates that landed in between. See DESIGN.md §Substitutions.
+//!
+//! ## NUMA placement
+//!
+//! When `--numa pin|interleave` resolves to a [`topology::Plan`], every
+//! parallel driver pins worker `tid` to its planned CPU set and then runs
+//! the kernel's [`Kernel::first_touch`] pre-pass before iteration 0, so the
+//! pages of that partition's rank/`last_pushed`/value-stream entries fault
+//! in node-local. Pinning is best-effort: on hosts without the syscall (or
+//! without NUMA at all) the plan degrades to a no-op and the numerics are
+//! untouched.
 
+use crate::engine::topology::Plan;
 use crate::engine::{Kernel, SyncMode, WorkerCtx};
 use crate::coordinator::executor::run_workers;
 use crate::coordinator::metrics::RunMetrics;
@@ -59,8 +70,19 @@ fn run_sequential(variant: Variant, kernel: &dyn Kernel, start: Instant) -> Resu
         converged,
         barrier_wait_secs: 0.0,
         vertex_updates,
+        frontier_switches: 0,
+        worklist_peak: 0,
         dnf: false,
     })
+}
+
+/// Pin worker `tid` per the placement plan (if any) and run the kernel's
+/// first-touch pre-pass so its pages fault in on the pinned node.
+fn place_worker(plan: &Option<Plan>, kernel: &dyn Kernel, tid: usize) {
+    if let Some(p) = plan {
+        p.apply(tid);
+        kernel.first_touch(tid);
+    }
 }
 
 /// Barrier-separated phases, algorithm-level convergence (Algorithms 1/2/5
@@ -82,8 +104,10 @@ fn run_blocking(
     let barrier = SenseBarrier::new(threads);
     let metrics = RunMetrics::new(threads);
     let converged = AtomicBool::new(false);
+    let plan = Plan::new(cfg.numa, threads);
 
     let outcome = run_workers(threads, cfg.dnf_timeout, &[&barrier], |tid, stop| {
+        place_worker(&plan, kernel, tid);
         let ctx = WorkerCtx { tid, metrics: &metrics };
         let mut waiter = barrier.waiter();
         let mut iter = 0u64;
@@ -124,6 +148,7 @@ fn run_blocking(
         }
     });
 
+    let (frontier_switches, worklist_peak) = kernel.frontier_stats();
     PrResult {
         variant,
         ranks: kernel.ranks(),
@@ -133,6 +158,8 @@ fn run_blocking(
         converged: converged.load(Ordering::Acquire) && !outcome.dnf,
         barrier_wait_secs: PhaseBarrier::total_wait_secs(&barrier),
         vertex_updates: metrics.total_gathered(),
+        frontier_switches,
+        worklist_peak,
         dnf: outcome.dnf,
     }
 }
@@ -171,8 +198,10 @@ fn run_nonblocking(
     let frontier = kernel.frontier_scheduled();
     // Which workers have returned (any reason) — the hopeless-wait check.
     let exited: Vec<AtomicBool> = (0..threads).map(|_| AtomicBool::new(false)).collect();
+    let plan = Plan::new(cfg.numa, threads);
 
     let outcome = run_workers(threads, cfg.dnf_timeout, &[], |tid, stop| {
+        place_worker(&plan, kernel, tid);
         let ctx = WorkerCtx { tid, metrics: &metrics };
         let mut iter = 0u64;
         // Consecutive iterations with every visible error ≤ threshold (the
@@ -257,6 +286,7 @@ fn run_nonblocking(
         exited[tid].store(true, Ordering::Release);
     });
 
+    let (frontier_switches, worklist_peak) = kernel.frontier_stats();
     PrResult {
         variant,
         ranks: kernel.ranks(),
@@ -266,6 +296,8 @@ fn run_nonblocking(
         converged: !capped.load(Ordering::Acquire) && !outcome.dnf,
         barrier_wait_secs: 0.0,
         vertex_updates: metrics.total_gathered(),
+        frontier_switches,
+        worklist_peak,
         dnf: outcome.dnf,
     }
 }
@@ -284,7 +316,9 @@ fn run_helping(
     };
     let threads = cfg.threads;
     let metrics = RunMetrics::new(threads);
+    let plan = Plan::new(cfg.numa, threads);
     let outcome = run_workers(threads, cfg.dnf_timeout, &[], |tid, stop| {
+        place_worker(&plan, kernel, tid);
         state.drive_worker(tid, stop, &cfg.faults, &metrics);
     });
     // Algorithmic completion time when recorded; wall-clock join otherwise
@@ -299,6 +333,8 @@ fn run_helping(
         converged: state.is_converged() && !outcome.dnf,
         barrier_wait_secs: 0.0,
         vertex_updates: metrics.total_gathered(),
+        frontier_switches: 0,
+        worklist_peak: 0,
         dnf: outcome.dnf,
     })
 }

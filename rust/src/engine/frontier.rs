@@ -12,8 +12,7 @@
 //!
 //! * a lock-free per-vertex dirty bitmap ([`crate::sync::dirty::DirtyFlags`])
 //!   holds the active frontier — every vertex starts dirty;
-//! * a sweep drains only the dirty vertices of the worker's partition
-//!   (claim-per-word `fetch_and`, so concurrent re-marks are never lost);
+//! * a sweep gathers only the dirty vertices of the worker's partition;
 //! * after recomputing `pr(u)`, the worker re-marks `u`'s out-neighbours
 //!   only when the rank moved more than the delta threshold since the last
 //!   push ([`crate::pagerank::PrConfig::resolved_delta_threshold`]) — the
@@ -23,6 +22,33 @@
 //!   confirmation machinery: an empty frontier publishes a zero error, and
 //!   the run ends only after a confirmation sweep re-validates that every
 //!   peer's merged error is calm too (see `engine::driver`).
+//!
+//! On top of the bitmap substrate sit three scheduling upgrades, all owned
+//! by the private [`FrontierScheduler`]:
+//!
+//! * **Two-phase sweeps** — every sweep first *snapshots* the partition's
+//!   dirty set (claiming the bits), then gathers exactly that snapshot in
+//!   ascending vertex order; marks generated mid-sweep land in the *next*
+//!   sweep. All discovery modes therefore process identical sets in
+//!   identical order, which makes a single-threaded run bit-identical
+//!   across `--frontier-sched bitmap|worklist|hybrid`.
+//! * **Claim-based work-list**
+//!   ([`FrontierSched::Worklist`](crate::pagerank::FrontierSched)) — a
+//!   marked vertex is also enqueued on its owner partition's lock-free MPMC
+//!   ring ([`crate::sync::WorkList`]), and the owner pops instead of
+//!   scanning O(n/64) bitmap words. The bitmap stays the ground truth:
+//!   enqueue happens only on a clear→set transition, every pop re-validates
+//!   with [`DirtyFlags::claim`], and a full ring merely sets an overflow
+//!   flag that forces the next sweep back to a bitmap scan. The `hybrid`
+//!   mode picks per sweep: scan while the frontier is dense (≥ one vertex
+//!   per bitmap word), pop once it is sparse.
+//! * **Residual-driven delta autotuning** (`--delta-threshold auto`, the
+//!   [`DeltaTuner`]) — the push cutoff starts at the resolved delta
+//!   threshold and is retuned geometrically from the observed decay of the
+//!   merged residual: a stalling residual tightens the cutoff (more
+//!   propagation), fast decay loosens it (less work), clamped to
+//!   `[threshold/100, threshold*10]` so the un-propagated residual bound
+//!   `delta / (1 - d)` stays far inside the 1e-6-vs-Barrier budget.
 //!
 //! Two kernels share the schedule:
 //!
@@ -41,27 +67,266 @@
 
 use crate::engine::{inv_out_degrees, Kernel, SyncMode, WorkerCtx};
 use crate::graph::{CompressedBins, Csr, Partitions, VertexId};
-use crate::pagerank::{amplify_work, PcpmLayout, PrConfig};
+use crate::pagerank::{amplify_work, FrontierSched, PcpmLayout, PrConfig};
 use crate::sync::atomics::{atomic_vec, atomic_vec_from, snapshot, AtomicF64};
 use crate::sync::dirty::DirtyFlags;
+use crate::sync::WorkList;
 use anyhow::{ensure, Result};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// `last_mode` sentinel values for the per-partition switch telemetry.
+const MODE_SCAN: u8 = 0;
+const MODE_QUEUE: u8 = 1;
+const MODE_UNSET: u8 = 2;
+
+/// Frontier discovery for one run: the dirty bitmap (ground truth), the
+/// optional per-partition work-list rings, and the per-sweep mode choice.
+///
+/// Every sweep is two-phase: `sweep` first collects the start-of-sweep
+/// snapshot of the partition's dirty vertices (claiming their bits), sorts
+/// it ascending, and only then hands each vertex to the kernel's gather
+/// body. Marks issued during the sweep — including marks into the sweeping
+/// partition itself — land in the *next* sweep. That invariant is what
+/// makes the three discovery modes interchangeable: they may differ in how
+/// the snapshot is *found* (scan vs pop) but never in which vertices it
+/// contains or in what order they are gathered.
+struct FrontierScheduler {
+    sched: FrontierSched,
+    /// Shared so an external scheduler (the out-of-core coordinator) can
+    /// probe the frontier without owning the kernel.
+    dirty: Arc<DirtyFlags>,
+    parts: Partitions,
+    /// One ring per partition; empty in bitmap mode.
+    queues: Vec<WorkList>,
+    /// Sticky per-partition "scan next sweep" flags. Initialized `true` so
+    /// the first sweep always scans — that is how externally seeded bits
+    /// (cold start's `new_set`, the incremental path's `seed_frontier`)
+    /// enter the schedule without ever having been enqueued.
+    overflow: Vec<AtomicBool>,
+    /// Last discovery mode per partition (scan/queue/unset), for the
+    /// mode-switch telemetry.
+    last_mode: Vec<AtomicU8>,
+    switches: AtomicU64,
+    /// Per-partition snapshot buffers, reused across sweeps. Each worker
+    /// only ever locks its own slot, so the mutexes are uncontended.
+    scratch: Vec<Mutex<Vec<VertexId>>>,
+}
+
+impl FrontierScheduler {
+    fn new(sched: FrontierSched, dirty: Arc<DirtyFlags>, parts: Partitions) -> Self {
+        let p = parts.count();
+        let queues = if sched == FrontierSched::Bitmap {
+            Vec::new()
+        } else {
+            (0..p)
+                .map(|i| {
+                    let r = parts.range(i);
+                    let len = (r.end - r.start) as usize;
+                    // Deliberately undersized (a quarter of the partition):
+                    // a dense frontier overflows into the bitmap scan —
+                    // which is cheaper than popping most of the partition
+                    // through a ring anyway — and the ring serves the
+                    // sparse tail it exists for.
+                    WorkList::with_capacity((len / 4).max(1).next_power_of_two().clamp(64, 65_536))
+                })
+                .collect()
+        };
+        Self {
+            sched,
+            dirty,
+            parts,
+            queues,
+            overflow: (0..p).map(|_| AtomicBool::new(true)).collect(),
+            last_mode: (0..p).map(|_| AtomicU8::new(MODE_UNSET)).collect(),
+            switches: AtomicU64::new(0),
+            scratch: (0..p).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    /// Mark `w` dirty. The bitmap transition is the dedup guard: only the
+    /// marker that flips the bit clear→set may enqueue, so a vertex sits in
+    /// its owner's ring at most once per sweep. A full ring degrades to a
+    /// sticky scan flag — the bit is already set, nothing is lost.
+    fn mark(&self, w: VertexId) {
+        if self.dirty.set(w) && self.sched != FrontierSched::Bitmap {
+            let p = self.parts.owner(w);
+            if !self.queues[p].push(w) {
+                self.overflow[p].store(true, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// One two-phase sweep of partition `tid`: snapshot the dirty set,
+    /// gather it in ascending order through `f`, return the gather count.
+    fn sweep(&self, tid: usize, mut f: impl FnMut(VertexId)) -> u64 {
+        let range = self.parts.range(tid);
+        let mut batch = self.scratch[tid].lock().unwrap();
+        batch.clear();
+        let mut scanned = self.sched == FrontierSched::Bitmap;
+        if scanned {
+            self.dirty.drain_range(range, |v| batch.push(v));
+        } else {
+            let q = &self.queues[tid];
+            // Entries pushed after this point belong to the next sweep; the
+            // ring is FIFO, so bounding the pop count by the start-of-sweep
+            // occupancy leaves them untouched.
+            let occupancy = q.len();
+            let part_len = (range.end - range.start) as usize;
+            scanned = self.overflow[tid].swap(false, Ordering::Relaxed)
+                || (self.sched == FrontierSched::Hybrid
+                    && occupancy * 64 >= part_len.max(1));
+            for _ in 0..occupancy {
+                let Some(v) = q.pop() else { break };
+                // Re-validate against the bitmap: a stale entry (its bit
+                // already claimed by an overflow scan) is skipped, never
+                // double-gathered.
+                if self.dirty.claim(v) {
+                    batch.push(v);
+                }
+            }
+            if scanned {
+                self.dirty.drain_range(range.clone(), |v| batch.push(v));
+            } else if batch.is_empty() && self.dirty.any_in_range(range.clone()) {
+                // Safety net: bits the rings lost track of (marks racing an
+                // overflow hand-off) are recovered by a full scan, so a
+                // dirty vertex can never be starved past this sweep.
+                scanned = true;
+                self.dirty.drain_range(range, |v| batch.push(v));
+            }
+            batch.sort_unstable();
+        }
+        let mode = if scanned { MODE_SCAN } else { MODE_QUEUE };
+        if self.last_mode[tid].swap(mode, Ordering::Relaxed) != mode {
+            self.switches.fetch_add(1, Ordering::Relaxed);
+        }
+        for &v in batch.iter() {
+            f(v);
+        }
+        batch.len() as u64
+    }
+
+    /// Telemetry: `(mode switches, peak ring occupancy)`. The switch count
+    /// includes each partition's initial entry into its first mode.
+    fn stats(&self) -> (u64, u64) {
+        let peak = self.queues.iter().map(WorkList::peak).max().unwrap_or(0);
+        (self.switches.load(Ordering::Relaxed), peak)
+    }
+}
+
+/// The frontier push cutoff: either the fixed resolved threshold or the
+/// residual-driven autotuner behind `--delta-threshold auto`.
+enum DeltaCutoff {
+    Fixed(f64),
+    Auto(DeltaTuner),
+}
+
+impl DeltaCutoff {
+    fn from_cfg(cfg: &PrConfig) -> Self {
+        if cfg.delta_auto {
+            DeltaCutoff::Auto(DeltaTuner::new(cfg))
+        } else {
+            DeltaCutoff::Fixed(cfg.resolved_delta_threshold())
+        }
+    }
+
+    /// Cutoff to use for the current sweep (read once per sweep so one
+    /// sweep applies one consistent cutoff).
+    fn get(&self) -> f64 {
+        match self {
+            DeltaCutoff::Fixed(d) => *d,
+            DeltaCutoff::Auto(t) => t.current(),
+        }
+    }
+
+    /// Feed one merged-residual observation to the autotuner (no-op for a
+    /// fixed cutoff).
+    fn observe(&self, err: f64) {
+        if let DeltaCutoff::Auto(t) = self {
+            t.observe(err);
+        }
+    }
+}
+
+/// Residual-decay-driven retuning of the push cutoff (Blanco et al.'s
+/// delayed-async schedule, applied to the accumulated-delta test).
+///
+/// The driver feeds every worker's view of the *merged* error through
+/// [`Kernel::converged`] once per sweep; the tuner samples one observation
+/// per round (`period` = worker count) and compares it with the previous
+/// sample. A residual that failed to decay by at least 10% means the
+/// schedule is starving propagation — the cutoff halves. A decaying
+/// residual earns a 1.25× loosening. Both moves are clamped to
+/// `[threshold/100, threshold*10]`: the upper bound keeps the per-vertex
+/// un-propagated residual below `10·threshold / (1 - d)`, comfortably
+/// inside the 1e-6-vs-Barrier equivalence budget at the default
+/// threshold, and the lower bound stops the schedule degenerating into
+/// plain NoSync. With one thread the sampling is deterministic.
+struct DeltaTuner {
+    /// Current cutoff, as `f64::to_bits` (atomically retuned).
+    delta_bits: AtomicU64,
+    /// Previous sampled residual (`f64::to_bits`; +inf until first sample).
+    prev_err_bits: AtomicU64,
+    calls: AtomicU64,
+    period: u64,
+    lo: f64,
+    hi: f64,
+}
+
+impl DeltaTuner {
+    fn new(cfg: &PrConfig) -> Self {
+        let lo = cfg.threshold * 0.01;
+        let hi = cfg.threshold * 10.0;
+        let start = cfg.resolved_delta_threshold().clamp(lo, hi);
+        Self {
+            delta_bits: AtomicU64::new(start.to_bits()),
+            prev_err_bits: AtomicU64::new(f64::INFINITY.to_bits()),
+            calls: AtomicU64::new(0),
+            period: cfg.threads.max(1) as u64,
+            lo,
+            hi,
+        }
+    }
+
+    fn current(&self) -> f64 {
+        f64::from_bits(self.delta_bits.load(Ordering::Relaxed))
+    }
+
+    fn observe(&self, err: f64) {
+        if !err.is_finite() {
+            return;
+        }
+        let tick = self.calls.fetch_add(1, Ordering::Relaxed);
+        if tick % self.period != 0 {
+            return;
+        }
+        let prev = f64::from_bits(self.prev_err_bits.swap(err.to_bits(), Ordering::Relaxed));
+        if !prev.is_finite() || prev <= 0.0 || err <= 0.0 {
+            // Zero residuals are confirmation sweeps — nothing to learn.
+            return;
+        }
+        let cur = self.current();
+        let next = if err >= prev * 0.9 {
+            (cur * 0.5).max(self.lo) // stalled: push harder
+        } else {
+            (cur * 1.25).min(self.hi) // decaying: prune harder
+        };
+        self.delta_bits.store(next.to_bits(), Ordering::Relaxed);
+    }
+}
 
 /// Pull-model frontier kernel: a dirty vertex re-reads its in-neighbours'
 /// ranks directly. See the module docs for the schedule.
 pub struct FrontierKernel<'g> {
     g: &'g Csr,
-    parts: Partitions,
     inv_out: Vec<f64>,
     pr: Vec<AtomicF64>,
     /// Rank value each vertex last propagated to its out-neighbours; the
     /// push test compares against this (not the previous gather) so that
     /// many sub-delta moves accumulate into a push instead of drifting.
     last_pushed: Vec<AtomicF64>,
-    /// Shared so an external scheduler (the out-of-core coordinator) can
-    /// probe the frontier without owning the kernel.
-    dirty: Arc<DirtyFlags>,
-    delta: f64,
+    sched: FrontierScheduler,
+    delta: DeltaCutoff,
     base: f64,
     d: f64,
     work_amplify: u32,
@@ -97,12 +362,11 @@ pub fn warm_kernel<'g>(
     ensure!(dirty.len() == n, "dirty bitmap length {} != n {}", dirty.len(), n);
     Ok(Box::new(FrontierKernel {
         g,
-        parts: parts.clone(),
         inv_out: inv_out_degrees(g),
         pr: atomic_vec_from(warm),
         last_pushed: atomic_vec_from(warm),
-        dirty: Arc::new(dirty),
-        delta: cfg.resolved_delta_threshold(),
+        sched: FrontierScheduler::new(cfg.frontier_sched, Arc::new(dirty), parts.clone()),
+        delta: DeltaCutoff::from_cfg(cfg),
         base: (1.0 - cfg.damping) / n as f64,
         d: cfg.damping,
         work_amplify: cfg.work_amplify,
@@ -118,11 +382,12 @@ impl Kernel for FrontierKernel<'_> {
         true
     }
 
-    /// One sweep over this partition's *dirty* vertices only.
+    /// One two-phase sweep over this partition's *dirty* vertices only.
     fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
+        let delta = self.delta.get();
         let mut local_err: f64 = 0.0;
         let mut edges = 0u64;
-        let gathered = self.dirty.drain_range(self.parts.range(ctx.tid), |u| {
+        let gathered = self.sched.sweep(ctx.tid, |u| {
             let ui = u as usize;
             let previous = self.pr[ui].load();
             let mut tmp = 0.0;
@@ -139,10 +404,10 @@ impl Kernel for FrontierKernel<'_> {
             let new = self.base + self.d * tmp;
             self.pr[ui].store(new);
             local_err = local_err.max((new - previous).abs());
-            if (new - self.last_pushed[ui].load()).abs() > self.delta {
+            if (new - self.last_pushed[ui].load()).abs() > delta {
                 self.last_pushed[ui].store(new);
                 for &w in self.g.out_neighbors(u) {
-                    self.dirty.set(w);
+                    self.sched.mark(w);
                 }
             }
         });
@@ -151,6 +416,24 @@ impl Kernel for FrontierKernel<'_> {
             ctx.metrics.add_edges(ctx.tid, edges);
         }
         local_err
+    }
+
+    fn converged(&self, global_err: f64, threshold: f64) -> bool {
+        self.delta.observe(global_err);
+        global_err <= threshold
+    }
+
+    fn first_touch(&self, tid: usize) {
+        let mut acc = 0.0;
+        for u in self.sched.parts.range(tid) {
+            let ui = u as usize;
+            acc += self.pr[ui].load() + self.last_pushed[ui].load() + self.inv_out[ui];
+        }
+        std::hint::black_box(acc);
+    }
+
+    fn frontier_stats(&self) -> (u64, u64) {
+        self.sched.stats()
     }
 
     fn ranks(&self) -> Vec<f64> {
@@ -163,7 +446,6 @@ impl Kernel for FrontierKernel<'_> {
 /// from it. See the module docs for the schedule.
 pub struct FrontierPcpmKernel<'g> {
     g: &'g Csr,
-    parts: Partitions,
     bins: CompressedBins,
     /// In-edge slot (index into the CSR in-edge array) → value-stream slot,
     /// so a dirty vertex can gather its in-contributions straight from the
@@ -175,11 +457,8 @@ pub struct FrontierPcpmKernel<'g> {
     /// slot per value group (per edge under the `slots` baseline layout).
     values: Vec<AtomicF64>,
     last_pushed: Vec<AtomicF64>,
-    /// Shared with the out-of-core coordinator (see
-    /// [`warm_pcpm_kernel_shared`]), which probes shard ranges to skip
-    /// clean shards.
-    dirty: Arc<DirtyFlags>,
-    delta: f64,
+    sched: FrontierScheduler,
+    delta: DeltaCutoff,
     base: f64,
     d: f64,
     work_amplify: u32,
@@ -245,15 +524,14 @@ pub fn warm_pcpm_kernel_shared<'g>(
     }
     Ok(Box::new(FrontierPcpmKernel {
         g,
-        parts: parts.clone(),
         in_slots,
         inv_out,
         pr: atomic_vec_from(warm),
         values,
         bins,
         last_pushed: atomic_vec_from(warm),
-        dirty,
-        delta: cfg.resolved_delta_threshold(),
+        sched: FrontierScheduler::new(cfg.frontier_sched, dirty, parts.clone()),
+        delta: DeltaCutoff::from_cfg(cfg),
         base: (1.0 - cfg.damping) / n as f64,
         d: cfg.damping,
         work_amplify: cfg.work_amplify,
@@ -269,13 +547,14 @@ impl Kernel for FrontierPcpmKernel<'_> {
         true
     }
 
-    /// One sweep over the partition's dirty vertices, gathering from the
-    /// value stream and scattering changed contributions back through it
-    /// (one store per value group — the compressed delta push).
+    /// One two-phase sweep over the partition's dirty vertices, gathering
+    /// from the value stream and scattering changed contributions back
+    /// through it (one store per value group — the compressed delta push).
     fn gather(&self, ctx: &WorkerCtx<'_>) -> f64 {
+        let delta = self.delta.get();
         let mut local_err: f64 = 0.0;
         let mut edges = 0u64;
-        let gathered = self.dirty.drain_range(self.parts.range(ctx.tid), |u| {
+        let gathered = self.sched.sweep(ctx.tid, |u| {
             let ui = u as usize;
             let previous = self.pr[ui].load();
             let mut tmp = 0.0;
@@ -287,7 +566,7 @@ impl Kernel for FrontierPcpmKernel<'_> {
             let new = self.base + self.d * tmp;
             self.pr[ui].store(new);
             local_err = local_err.max((new - previous).abs());
-            if (new - self.last_pushed[ui].load()).abs() > self.delta
+            if (new - self.last_pushed[ui].load()).abs() > delta
                 && self.g.out_degree(u) > 0
             {
                 self.last_pushed[ui].store(new);
@@ -296,7 +575,7 @@ impl Kernel for FrontierPcpmKernel<'_> {
                     self.values[slot].store(contribution);
                 }
                 for &w in self.g.out_neighbors(u) {
-                    self.dirty.set(w);
+                    self.sched.mark(w);
                 }
             }
         });
@@ -307,6 +586,27 @@ impl Kernel for FrontierPcpmKernel<'_> {
         local_err
     }
 
+    fn converged(&self, global_err: f64, threshold: f64) -> bool {
+        self.delta.observe(global_err);
+        global_err <= threshold
+    }
+
+    fn first_touch(&self, tid: usize) {
+        let mut acc = 0.0;
+        for u in self.sched.parts.range(tid) {
+            let ui = u as usize;
+            acc += self.pr[ui].load() + self.last_pushed[ui].load() + self.inv_out[ui];
+            for &slot in self.bins.push_slots(u) {
+                acc += self.values[slot].load();
+            }
+        }
+        std::hint::black_box(acc);
+    }
+
+    fn frontier_stats(&self) -> (u64, u64) {
+        self.sched.stats()
+    }
+
     fn ranks(&self) -> Vec<f64> {
         snapshot(&self.pr)
     }
@@ -315,7 +615,9 @@ impl Kernel for FrontierPcpmKernel<'_> {
 #[cfg(test)]
 mod tests {
     use crate::graph::{synthetic, GraphBuilder, PartitionPolicy};
-    use crate::pagerank::{self, convergence, seq, PcpmLayout, PrConfig, Variant};
+    use crate::pagerank::{
+        self, convergence, seq, FrontierSched, PcpmLayout, PrConfig, Variant,
+    };
 
     fn cfg(threads: usize) -> PrConfig {
         PrConfig { threads, threshold: 1e-12, ..PrConfig::default() }
@@ -457,5 +759,76 @@ mod tests {
             let r = pagerank::run(&g, v, &c).unwrap();
             assert!(!r.converged, "{v}");
         }
+    }
+
+    /// The two-phase invariant made concrete: with one thread, every
+    /// discovery mode must gather identical vertex sets in identical order
+    /// — bit-identical ranks and exactly equal update counts.
+    #[test]
+    fn scheduler_modes_are_bit_identical_single_threaded() {
+        let g = synthetic::web_replica(500, 6, 11);
+        let base = cfg(1);
+        for v in BOTH {
+            let bitmap = pagerank::run(&g, v, &base).unwrap();
+            assert!(bitmap.converged, "{v}/bitmap");
+            for sched in [FrontierSched::Worklist, FrontierSched::Hybrid] {
+                let c = PrConfig { frontier_sched: sched, ..base.clone() };
+                let r = pagerank::run(&g, v, &c).unwrap();
+                assert!(r.converged, "{v}/{sched}");
+                assert_eq!(r.ranks, bitmap.ranks, "{v}/{sched}: ranks diverged");
+                assert_eq!(
+                    r.vertex_updates, bitmap.vertex_updates,
+                    "{v}/{sched}: update counts diverged"
+                );
+            }
+        }
+    }
+
+    /// Multi-threaded work-list and hybrid runs stay on the fixed point.
+    #[test]
+    fn scheduler_modes_converge_multi_threaded() {
+        let g = synthetic::web_replica(800, 6, 29);
+        let base = cfg(4);
+        let (sr, _, _) = seq::solve(&g, &base);
+        for v in BOTH {
+            for sched in [FrontierSched::Worklist, FrontierSched::Hybrid] {
+                let c = PrConfig { frontier_sched: sched, ..base.clone() };
+                let r = pagerank::run(&g, v, &c).unwrap();
+                assert!(r.converged, "{v}/{sched}");
+                assert!(r.l1_norm(&sr) < 1e-7, "{v}/{sched}: l1 {}", r.l1_norm(&sr));
+            }
+        }
+    }
+
+    /// `--delta-threshold auto`: the tuner must stay inside its clamp band,
+    /// converge, and land on the same fixed point.
+    #[test]
+    fn auto_delta_converges_on_the_fixed_point() {
+        let g = synthetic::web_replica(800, 6, 17);
+        let base = cfg(4);
+        let (sr, _, _) = seq::solve(&g, &base);
+        for v in BOTH {
+            let c = PrConfig { delta_auto: true, ..base.clone() };
+            let r = pagerank::run(&g, v, &c).unwrap();
+            assert!(r.converged, "{v}/auto");
+            assert!(r.l1_norm(&sr) < 1e-7, "{v}/auto: l1 {}", r.l1_norm(&sr));
+        }
+    }
+
+    /// A ring far smaller than the frontier must degrade to bitmap scans,
+    /// never lose marks: tiny partitions on a dense graph exercise the
+    /// overflow flag and the claim re-validation path.
+    #[test]
+    fn ring_overflow_degrades_to_scan_without_losing_marks() {
+        // 3000 vertices on 2 threads: partitions of 1500, rings of 512 —
+        // the dense early frontiers overflow every sweep, the sparse tail
+        // flows through the rings, and the claim re-validation has to drop
+        // entries a scan already gathered.
+        let g = synthetic::web_replica(3_000, 8, 41);
+        let c = PrConfig { frontier_sched: FrontierSched::Worklist, ..cfg(2) };
+        let (sr, _, _) = seq::solve(&g, &c);
+        let r = pagerank::run(&g, Variant::Frontier, &c).unwrap();
+        assert!(r.converged);
+        assert!(r.l1_norm(&sr) < 1e-7, "l1 {}", r.l1_norm(&sr));
     }
 }

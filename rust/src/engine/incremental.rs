@@ -40,11 +40,24 @@ use std::time::Instant;
 /// out-degree changed.
 pub fn seed_frontier(g: &Csr, touched: &[VertexId]) -> DirtyFlags {
     let dirty = DirtyFlags::new_clear(g.num_vertices());
-    for &u in touched {
-        dirty.set(u);
-        for &w in g.out_neighbors(u) {
-            dirty.set(w);
+    // `touched` arrives sorted+deduped (AppliedDelta builds it that way),
+    // so consecutive ids collapse into word-wide `set_range` bulk marks —
+    // an edge batch hitting a dense id range seeds in O(range/64) instead
+    // of one CAS per vertex. Out-neighbour closures stay per-vertex (their
+    // adjacency lists are arbitrary sets).
+    let mut i = 0;
+    while i < touched.len() {
+        let mut j = i + 1;
+        while j < touched.len() && touched[j] == touched[j - 1] + 1 {
+            j += 1;
         }
+        dirty.set_range(touched[i]..touched[j - 1] + 1);
+        for &u in &touched[i..j] {
+            for &w in g.out_neighbors(u) {
+                dirty.set(w);
+            }
+        }
+        i = j;
     }
     dirty
 }
@@ -124,6 +137,22 @@ mod tests {
                 matches!(v, 3 | 4 | 7 | 8),
                 "vertex {v}"
             );
+        }
+    }
+
+    /// The `set_range` fast path: maximal consecutive runs in the sorted
+    /// touched list must mark exactly the same bits as per-vertex sets.
+    #[test]
+    fn seed_bulk_marks_consecutive_runs() {
+        let g = synthetic::cycle(130); // u → u+1 (mod 130)
+        let touched: Vec<u32> = (10..80).chain([100, 101, 120]).collect();
+        let dirty = seed_frontier(&g, &touched);
+        for v in 0..130u32 {
+            let expect = (10..=80).contains(&v)
+                || (100..=102).contains(&v)
+                || v == 120
+                || v == 121;
+            assert_eq!(dirty.is_set(v), expect, "vertex {v}");
         }
     }
 

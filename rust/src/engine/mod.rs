@@ -32,6 +32,7 @@ pub mod helping;
 pub mod incremental;
 pub mod ooc;
 pub mod pcpm;
+pub mod topology;
 
 use crate::coordinator::metrics::RunMetrics;
 use crate::graph::{Csr, Partitions, VertexId};
@@ -98,6 +99,20 @@ pub trait Kernel: Sync {
     /// briefly instead of hot-spinning (see `driver::run_nonblocking`).
     fn frontier_scheduled(&self) -> bool {
         false
+    }
+
+    /// First-touch pre-pass for NUMA placement: the driver calls this from
+    /// worker `tid` (after pinning, before iteration 0) so the kernel can
+    /// walk the rank/`last_pushed`/value-stream entries of `tid`'s
+    /// partition and pull their pages node-local. Must be free of side
+    /// effects on the schedule — loads only. Default: nothing to touch.
+    fn first_touch(&self, _tid: usize) {}
+
+    /// Frontier-scheduler telemetry `(mode switches, peak work-list
+    /// occupancy)`, surfaced as [`PrResult::frontier_switches`] /
+    /// [`PrResult::worklist_peak`]. Default: no scheduler, all zeros.
+    fn frontier_stats(&self) -> (u64, u64) {
+        (0, 0)
     }
 
     /// Snapshot the final rank vector.

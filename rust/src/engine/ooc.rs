@@ -12,7 +12,10 @@
 //!   are borrowed zero-copy through [`crate::graph::io::map_binary`]; the
 //!   OS pages a shard's slice of the arrays in as the sweep streams it and
 //!   can evict cold shards under pressure (`MAP_PRIVATE` read-only, so
-//!   nothing is ever written back);
+//!   nothing is ever written back); while one shard gathers, the
+//!   coordinator issues a `madvise(MADV_WILLNEED)` read-ahead
+//!   ([`Csr::prefetch_vertex_range`]) for the *next dirty* shard so its
+//!   page-ins overlap with compute;
 //! * **compute** — vertices are split into `S` contiguous shards by the
 //!   standard [`Partitions`] policies, and the coordinator rotates through
 //!   them *one at a time* on the calling thread, replaying each shard
@@ -94,6 +97,15 @@ pub fn run_sharded(g: &Csr, cfg: &PrConfig, shards: usize) -> Result<PrResult> {
                 skipped_shards += 1;
                 continue;
             }
+            // Read-ahead: while this shard gathers, the kernel can stream
+            // in the pages of the *next dirty* shard
+            // (`madvise(MADV_WILLNEED)` under the hood — a no-op on owned
+            // graphs). Probe-gated, so a clean shard is never advised in.
+            if let Some(next) =
+                (shard + 1..shards).find(|&s| dirty.any_in_range(parts.range(s)))
+            {
+                g.prefetch_vertex_range(parts.range(next));
+            }
             kernel.gather(&WorkerCtx { tid: shard, metrics: &metrics });
             metrics.bump_iteration(shard);
         }
@@ -108,6 +120,7 @@ pub fn run_sharded(g: &Csr, cfg: &PrConfig, shards: usize) -> Result<PrResult> {
         }
     }
     metrics.add_skipped(0, skipped_shards);
+    let (frontier_switches, worklist_peak) = kernel.frontier_stats();
     Ok(PrResult {
         variant: Variant::FrontierPcpm,
         ranks: kernel.ranks(),
@@ -117,6 +130,8 @@ pub fn run_sharded(g: &Csr, cfg: &PrConfig, shards: usize) -> Result<PrResult> {
         converged,
         barrier_wait_secs: 0.0,
         vertex_updates: metrics.total_gathered(),
+        frontier_switches,
+        worklist_peak,
         dnf: false,
     })
 }

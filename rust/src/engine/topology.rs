@@ -1,0 +1,329 @@
+//! NUMA topology detection and worker placement.
+//!
+//! The paper's machine-scale numbers (56-core dual-socket Xeon) depend on
+//! workers not bouncing across sockets mid-run. This module detects the
+//! node layout from `/sys/devices/system/node/node*/cpulist` (falling back
+//! to a single synthetic node when the tree is absent, unreadable, or the
+//! host is not Linux), and turns a [`Placement`] policy into a per-worker
+//! CPU mask applied via the vendored `affinity-lite` `sched_setaffinity`
+//! shim at the top of each worker closure
+//! ([`crate::engine::driver::execute`]).
+//!
+//! Placement interacts with partitioning: worker tids map to contiguous
+//! vertex ranges ([`crate::graph::Partitions`]), so `Placement::Pin`'s
+//! node-contiguous worker blocks make each node own a contiguous vertex
+//! range — its rank/`last_pushed`/value-stream pages are first-touched from
+//! an on-node worker before iteration 0 ([`crate::engine::Kernel::first_touch`]),
+//! and each per-partition `CompressedBins` stream is produced and consumed
+//! node-locally, so cross-socket traffic degenerates to one compacted
+//! stream per (node, partition) pair.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Worker-placement policy (CLI: `--numa off|pin|interleave`).
+///
+/// Placement is a pure scheduling hint: pinned and unpinned runs execute
+/// the same kernel schedule, so results stay within the usual equivalence
+/// bounds (bit-identical for deterministic schedules).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    /// No pinning — threads float wherever the OS scheduler puts them.
+    Off,
+    /// Node-contiguous blocks: with `k` nodes and `p` workers, worker `t`
+    /// is bound to node `t·k/p` — contiguous tids (and therefore contiguous
+    /// partition vertex ranges) share a node.
+    Pin,
+    /// Round-robin: worker `t` is bound to node `t mod k`, spreading memory
+    /// bandwidth demand evenly across controllers.
+    Interleave,
+}
+
+impl std::fmt::Display for Placement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Placement::Off => f.write_str("off"),
+            Placement::Pin => f.write_str("pin"),
+            Placement::Interleave => f.write_str("interleave"),
+        }
+    }
+}
+
+impl Placement {
+    /// Parse a `--numa` value.
+    pub fn parse(s: &str) -> Result<Placement> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Ok(Placement::Off),
+            "pin" | "bind" | "local" => Ok(Placement::Pin),
+            "interleave" | "spread" => Ok(Placement::Interleave),
+            other => bail!("--numa must be off|pin|interleave, got '{other}'"),
+        }
+    }
+}
+
+/// One NUMA node as detected from sysfs (or the single-node fallback).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NumaNode {
+    /// Kernel node id (`/sys/devices/system/node/node<id>`).
+    pub id: usize,
+    /// The CPUs this node owns, ascending and deduplicated.
+    pub cpus: Vec<usize>,
+}
+
+/// The machine topology a placement plan is derived from. Never empty:
+/// detection that finds nothing yields the single-node fallback.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// Detected nodes with at least one CPU each, sorted by node id.
+    pub nodes: Vec<NumaNode>,
+}
+
+/// Largest CPU id the cpulist parser accepts — guards a corrupt sysfs
+/// entry from driving a huge allocation.
+const MAX_CPU_ID: usize = 1 << 20;
+
+/// Parse a kernel cpulist string (`"0-3,8-11"`, `"0"`, `"0,2-4,7"`; an
+/// empty or whitespace-only string is an empty list, as sysfs reports for
+/// memory-only nodes). Returns ascending, deduplicated CPU ids.
+pub fn parse_cpulist(s: &str) -> Result<Vec<usize>> {
+    let trimmed = s.trim();
+    let mut cpus = Vec::new();
+    if trimmed.is_empty() {
+        return Ok(cpus);
+    }
+    for part in trimmed.split(',') {
+        let part = part.trim();
+        match part.split_once('-') {
+            Some((a, b)) => {
+                let (Ok(lo), Ok(hi)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>())
+                else {
+                    bail!("bad cpu range '{part}' in cpulist '{trimmed}'");
+                };
+                if lo > hi {
+                    bail!("descending cpu range '{part}' in cpulist '{trimmed}'");
+                }
+                if hi >= MAX_CPU_ID {
+                    bail!("cpu id {hi} out of range in cpulist '{trimmed}'");
+                }
+                cpus.extend(lo..=hi);
+            }
+            None => {
+                let Ok(id) = part.parse::<usize>() else {
+                    bail!("bad cpu id '{part}' in cpulist '{trimmed}'");
+                };
+                if id >= MAX_CPU_ID {
+                    bail!("cpu id {id} out of range in cpulist '{trimmed}'");
+                }
+                cpus.push(id);
+            }
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    Ok(cpus)
+}
+
+impl Topology {
+    /// Read `node<k>/cpulist` entries under `root` (the layout of
+    /// `/sys/devices/system/node`). Entries that are not `node<digits>`,
+    /// have no readable `cpulist`, or own zero CPUs (memory-only nodes) are
+    /// skipped. Returns `None` when nothing usable is found — the caller
+    /// falls back to [`Topology::single_node`].
+    pub fn from_sysfs(root: &Path) -> Option<Topology> {
+        let entries = std::fs::read_dir(root).ok()?;
+        let mut nodes = Vec::new();
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let Some(idx) = name.strip_prefix("node") else { continue };
+            let Ok(id) = idx.parse::<usize>() else { continue };
+            let Ok(raw) = std::fs::read_to_string(entry.path().join("cpulist")) else {
+                continue;
+            };
+            let Ok(cpus) = parse_cpulist(&raw) else { continue };
+            if !cpus.is_empty() {
+                nodes.push(NumaNode { id, cpus });
+            }
+        }
+        nodes.sort_by_key(|n| n.id);
+        if nodes.is_empty() {
+            None
+        } else {
+            Some(Topology { nodes })
+        }
+    }
+
+    /// The graceful fallback: one node owning CPUs
+    /// `0..available_parallelism` — non-NUMA hosts, non-Linux platforms,
+    /// and containers that hide sysfs all land here, so every placement
+    /// policy runs end-to-end anywhere.
+    pub fn single_node() -> Topology {
+        let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        Topology { nodes: vec![NumaNode { id: 0, cpus: (0..n).collect() }] }
+    }
+
+    /// Detect the host topology: the sysfs node tree when present and
+    /// parseable, the single-node fallback otherwise. Never panics, never
+    /// returns zero nodes.
+    pub fn detect() -> Topology {
+        Self::from_sysfs(Path::new("/sys/devices/system/node"))
+            .unwrap_or_else(Self::single_node)
+    }
+}
+
+/// A resolved placement: for each worker tid, the CPU set to pin to.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    cpus_per_worker: Vec<Vec<usize>>,
+    nodes: usize,
+}
+
+impl Plan {
+    /// Build the placement plan for `threads` workers on the detected host
+    /// topology. `None` when `placement` is [`Placement::Off`] — the driver
+    /// then skips pinning and first-touch entirely.
+    pub fn new(placement: Placement, threads: usize) -> Option<Plan> {
+        if placement == Placement::Off {
+            return None;
+        }
+        Some(Self::from_topology(&Topology::detect(), placement, threads))
+    }
+
+    /// Deterministic plan construction from an explicit topology (unit
+    /// tests drive this with canned fixtures).
+    pub fn from_topology(topo: &Topology, placement: Placement, threads: usize) -> Plan {
+        let k = topo.nodes.len().max(1);
+        let cpus_per_worker = (0..threads)
+            .map(|tid| {
+                let node = match placement {
+                    Placement::Off => return Vec::new(),
+                    Placement::Pin => tid * k / threads.max(1),
+                    Placement::Interleave => tid % k,
+                };
+                topo.nodes[node].cpus.clone()
+            })
+            .collect();
+        Plan { cpus_per_worker, nodes: k }
+    }
+
+    /// CPU set worker `tid` is bound to (empty = unconstrained).
+    pub fn cpus(&self, tid: usize) -> &[usize] {
+        self.cpus_per_worker.get(tid).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Number of NUMA nodes the plan spreads workers across.
+    pub fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    /// Pin the calling worker thread to its planned CPU set. Best-effort:
+    /// a container seccomp policy may deny `sched_setaffinity`, and
+    /// correctness never depends on the pin landing — results are
+    /// placement-independent by construction.
+    pub fn apply(&self, tid: usize) {
+        let _ = affinity_lite::pin_to_cpus(self.cpus(tid));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpulist_parses_kernel_formats() {
+        assert_eq!(parse_cpulist("0-3,8-11").unwrap(), vec![0, 1, 2, 3, 8, 9, 10, 11]);
+        assert_eq!(parse_cpulist("0\n").unwrap(), vec![0]);
+        assert_eq!(parse_cpulist("5-5").unwrap(), vec![5]);
+        assert_eq!(parse_cpulist("0,2-4,7").unwrap(), vec![0, 2, 3, 4, 7]);
+        assert_eq!(parse_cpulist("3,1,3").unwrap(), vec![1, 3], "sorted + deduped");
+        assert_eq!(parse_cpulist("").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_cpulist(" \n").unwrap(), Vec::<usize>::new());
+        assert!(parse_cpulist("3-1").is_err(), "descending range");
+        assert!(parse_cpulist("a-b").is_err());
+        assert!(parse_cpulist("1,,2").is_err());
+        assert!(parse_cpulist("0-99999999").is_err(), "absurd range is rejected");
+    }
+
+    /// Canned `/sys/devices/system/node` fixture: two CPU-bearing nodes, a
+    /// memory-only node (empty cpulist), a node directory without a
+    /// cpulist, and stray non-node entries — only the real nodes survive,
+    /// sorted by id.
+    #[test]
+    fn sysfs_fixture_detects_two_nodes() {
+        let root = std::env::temp_dir()
+            .join(format!("pagerank_nb_topology_fixture_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        for (dir, cpulist) in
+            [("node1", Some("4-7\n")), ("node0", Some("0-3\n")), ("node2", Some(" \n"))]
+        {
+            let d = root.join(dir);
+            std::fs::create_dir_all(&d).unwrap();
+            if let Some(list) = cpulist {
+                std::fs::write(d.join("cpulist"), list).unwrap();
+            }
+        }
+        std::fs::create_dir_all(root.join("node3")).unwrap(); // no cpulist
+        std::fs::create_dir_all(root.join("nodeX")).unwrap(); // not a node id
+        std::fs::write(root.join("possible"), "0-3\n").unwrap(); // stray file
+
+        let topo = Topology::from_sysfs(&root).expect("fixture must parse");
+        assert_eq!(topo.nodes.len(), 2);
+        assert_eq!(topo.nodes[0], NumaNode { id: 0, cpus: vec![0, 1, 2, 3] });
+        assert_eq!(topo.nodes[1], NumaNode { id: 1, cpus: vec![4, 5, 6, 7] });
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn missing_sysfs_falls_back_to_single_node() {
+        let bogus = std::env::temp_dir().join("pagerank_nb_topology_no_such_dir");
+        assert!(Topology::from_sysfs(&bogus).is_none());
+        let topo = Topology::single_node();
+        assert_eq!(topo.nodes.len(), 1);
+        assert!(!topo.nodes[0].cpus.is_empty());
+        // detect() must always produce a usable topology, whatever the host
+        let detected = Topology::detect();
+        assert!(!detected.nodes.is_empty());
+        assert!(detected.nodes.iter().all(|n| !n.cpus.is_empty()));
+    }
+
+    #[test]
+    fn pin_is_node_contiguous_and_interleave_round_robins() {
+        let topo = Topology {
+            nodes: vec![
+                NumaNode { id: 0, cpus: vec![0, 1] },
+                NumaNode { id: 1, cpus: vec![2, 3] },
+            ],
+        };
+        let pin = Plan::from_topology(&topo, Placement::Pin, 4);
+        assert_eq!(pin.nodes(), 2);
+        assert_eq!(pin.cpus(0), &[0, 1]);
+        assert_eq!(pin.cpus(1), &[0, 1]);
+        assert_eq!(pin.cpus(2), &[2, 3]);
+        assert_eq!(pin.cpus(3), &[2, 3]);
+        let il = Plan::from_topology(&topo, Placement::Interleave, 4);
+        assert_eq!(il.cpus(0), &[0, 1]);
+        assert_eq!(il.cpus(1), &[2, 3]);
+        assert_eq!(il.cpus(2), &[0, 1]);
+        assert_eq!(il.cpus(3), &[2, 3]);
+        // odd worker counts still cover both nodes contiguously
+        let pin3 = Plan::from_topology(&topo, Placement::Pin, 3);
+        assert_eq!(pin3.cpus(0), &[0, 1]);
+        assert_eq!(pin3.cpus(1), &[0, 1]);
+        assert_eq!(pin3.cpus(2), &[2, 3]);
+        // out-of-range tid is unconstrained, not a panic
+        assert!(pin.cpus(99).is_empty());
+    }
+
+    #[test]
+    fn off_yields_no_plan_and_single_node_pins_everywhere() {
+        assert!(Plan::new(Placement::Off, 4).is_none());
+        let topo = Topology { nodes: vec![NumaNode { id: 0, cpus: vec![0] }] };
+        for placement in [Placement::Pin, Placement::Interleave] {
+            let plan = Plan::from_topology(&topo, placement, 3);
+            assert_eq!(plan.nodes(), 1);
+            for tid in 0..3 {
+                assert_eq!(plan.cpus(tid), &[0], "{placement} tid {tid}");
+            }
+        }
+    }
+}

@@ -93,6 +93,21 @@ impl<T: Copy + 'static> GraphStore<T> {
     pub fn as_slice(&self) -> &[T] {
         self
     }
+
+    /// Hint the OS to read ahead the pages backing elements
+    /// `start..end` (`madvise(MADV_WILLNEED)` on the underlying map).
+    /// Clamped to the span; a no-op for heap-owned storage, where the
+    /// elements are already resident.
+    pub fn advise_willneed(&self, start: usize, end: usize) {
+        if let Repr::Mapped { map, offset, len } = &self.repr {
+            let end = end.min(*len);
+            if start >= end {
+                return;
+            }
+            let esz = std::mem::size_of::<T>();
+            map.advise_willneed(offset + start * esz, (end - start) * esz);
+        }
+    }
 }
 
 impl<T: Copy + 'static> Deref for GraphStore<T> {
@@ -288,6 +303,23 @@ impl Csr {
         self.out_offsets.is_mapped()
     }
 
+    /// Read-ahead hint for the CSR pages a sweep of `range` touches: both
+    /// offset arrays plus the adjacency spans they delimit. The out-of-core
+    /// coordinator calls this for the *next* dirty shard while the current
+    /// one gathers, overlapping its page-ins with compute. Purely advisory
+    /// — a no-op on heap-owned graphs, and never changes what a sweep
+    /// reads or computes.
+    pub fn prefetch_vertex_range(&self, range: std::ops::Range<VertexId>) {
+        if range.is_empty() || !self.is_mapped() {
+            return;
+        }
+        let (s, e) = (range.start as usize, range.end as usize);
+        self.out_offsets.advise_willneed(s, e + 1);
+        self.in_offsets.advise_willneed(s, e + 1);
+        self.out_edges.advise_willneed(self.out_offsets[s], self.out_offsets[e]);
+        self.in_edges.advise_willneed(self.in_offsets[s], self.in_offsets[e]);
+    }
+
     /// Construct from raw parts (used by the builder; validates in debug).
     pub(crate) fn from_parts(
         n: usize,
@@ -422,6 +454,17 @@ mod tests {
             let twin = mapped.clone();
             assert_eq!(twin, mapped);
             assert!(twin.is_mapped());
+        }
+
+        #[test]
+        fn advise_willneed_is_a_safe_hint_on_both_storage_kinds() {
+            let values = vec![1u32, 2, 3];
+            GraphStore::owned(values.clone()).advise_willneed(0, 3); // no-op
+            let mapped = GraphStore::<u32>::mapped(map_of(&values), 0, 3).unwrap();
+            mapped.advise_willneed(0, 3);
+            mapped.advise_willneed(2, 99); // clamped to the span
+            mapped.advise_willneed(3, 3); // empty range
+            assert_eq!(mapped.as_slice(), &values[..], "advice must not disturb elements");
         }
 
         #[test]

@@ -2,7 +2,10 @@
 //!
 //! `pagerank-nb bench-ci` runs every registered engine variant — plus the
 //! PCPM layout/batching ablation rows (`PCPM-slots`, `Frontier-PCPM-slots`,
-//! `PCPM-batch4`), the incremental-reconvergence rows (`Frontier-incr`,
+//! `PCPM-batch4`), the frontier-scheduling rows (`Frontier-worklist`: the
+//! claim-based work-list scheduler; `Frontier-auto-delta`: the
+//! residual-driven push-cutoff tuner — both from
+//! [`crate::engine::frontier`]), the incremental-reconvergence rows (`Frontier-incr`,
 //! `Frontier-PCPM-incr`: warm-started convergence of a random mutation
 //! batch, see [`crate::engine::incremental`]), and the out-of-core rows
 //! (`OOC-mem-s4`, `OOC-mmap-s1`, `OOC-mmap-s4`: the shard coordinator of
@@ -24,7 +27,7 @@
 use crate::coordinator::host::HostInfo;
 use crate::graph::{synthetic, Csr};
 use crate::harness::bench::BenchRunner;
-use crate::pagerank::{self, PcpmLayout, PrConfig, PrResult, Variant};
+use crate::pagerank::{self, FrontierSched, PcpmLayout, PrConfig, PrResult, Variant};
 use crate::util::report::{json_escape, json_f64};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -273,6 +276,18 @@ pub fn run_ci_bench(
                 PrConfig { pcpm_layout: PcpmLayout::Slots, ..cfg.clone() },
             ),
             (Variant::Pcpm, "PCPM-batch4", PrConfig { pcpm_batch: 4, ..cfg.clone() }),
+            // frontier-scheduling ablations: the claim-based work-list
+            // sweep and the residual-driven delta-threshold tuner
+            (
+                Variant::Frontier,
+                "Frontier-worklist",
+                PrConfig { frontier_sched: FrontierSched::Worklist, ..cfg.clone() },
+            ),
+            (
+                Variant::Frontier,
+                "Frontier-auto-delta",
+                PrConfig { delta_auto: true, ..cfg.clone() },
+            ),
         ];
         for (v, label, vcfg) in &extras {
             let (secs, probe) = measure(*v, vcfg);
@@ -686,9 +701,9 @@ mod tests {
     fn report_covers_every_mode_on_every_dataset() {
         let r = tiny_report();
         // every engine mode plus the three layout/batching ablation rows,
-        // the two incremental-reconvergence rows, and the three
-        // out-of-core rows
-        assert_eq!(r.rows.len(), 2 * (Variant::ALL_MODES.len() + 8));
+        // the two frontier-scheduling rows, the two
+        // incremental-reconvergence rows, and the three out-of-core rows
+        assert_eq!(r.rows.len(), 2 * (Variant::ALL_MODES.len() + 10));
         for v in Variant::ALL_MODES {
             for ds in ["webStanford", "roaditalyosm"] {
                 let row = r.find(ds, v.name()).unwrap_or_else(|| panic!("{ds}/{v}"));
@@ -699,6 +714,8 @@ mod tests {
             "PCPM-slots",
             "Frontier-PCPM-slots",
             "PCPM-batch4",
+            "Frontier-worklist",
+            "Frontier-auto-delta",
             "Frontier-incr",
             "Frontier-PCPM-incr",
             "OOC-mem-s4",
@@ -731,6 +748,14 @@ mod tests {
         // frontier rows carry the work metric the schedule is about
         let f = r.find("roaditalyosm", "Frontier").unwrap();
         assert!(f.vertex_updates > 0);
+        // the scheduling ablations settle like the bitmap default does
+        for ds in ["webStanford", "roaditalyosm"] {
+            for label in ["Frontier-worklist", "Frontier-auto-delta"] {
+                let row = r.find(ds, label).unwrap();
+                assert!(row.converged, "{ds}/{label}");
+                assert!(row.vertex_updates > 0, "{ds}/{label}");
+            }
+        }
         // out-of-core rows: deterministic coordinator, so the mmap and
         // in-memory runs at the same shard count do identical work
         for ds in ["webStanford", "roaditalyosm"] {

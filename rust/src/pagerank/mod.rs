@@ -253,6 +253,47 @@ impl PcpmLayout {
     }
 }
 
+/// How the frontier kernels discover dirty vertices (CLI:
+/// `--frontier-sched`). Scheduling changes *how* the frontier is found,
+/// never *which* vertices are gathered: every mode processes exactly the
+/// start-of-sweep frontier snapshot in ascending vertex order, so a
+/// single-threaded run is bit-identical across all three.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrontierSched {
+    /// Scan the dirty bitmap word-by-word every sweep (the PR-4 baseline;
+    /// O(n/64) per sweep regardless of how sparse the frontier is).
+    Bitmap,
+    /// Claim-based work-list: marked vertices are enqueued on a per-owner
+    /// MPMC ring ([`crate::sync::WorkList`]) and the owner pops instead of
+    /// scanning. Falls back to a bitmap scan on ring overflow.
+    Worklist,
+    /// Per-sweep choice: bitmap scan while the active fraction is dense,
+    /// work-list once it drops below one vertex per bitmap word.
+    Hybrid,
+}
+
+impl std::fmt::Display for FrontierSched {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrontierSched::Bitmap => f.write_str("bitmap"),
+            FrontierSched::Worklist => f.write_str("worklist"),
+            FrontierSched::Hybrid => f.write_str("hybrid"),
+        }
+    }
+}
+
+impl FrontierSched {
+    /// Parse a `--frontier-sched` value.
+    pub fn parse(s: &str) -> Result<FrontierSched> {
+        match s.to_ascii_lowercase().as_str() {
+            "bitmap" | "scan" => Ok(FrontierSched::Bitmap),
+            "worklist" | "work-list" | "queue" => Ok(FrontierSched::Worklist),
+            "hybrid" | "auto" => Ok(FrontierSched::Hybrid),
+            other => bail!("--frontier-sched must be bitmap|worklist|hybrid, got '{other}'"),
+        }
+    }
+}
+
 /// Run configuration.
 #[derive(Debug, Clone)]
 pub struct PrConfig {
@@ -279,6 +320,25 @@ pub struct PrConfig {
     /// [`PrConfig::resolved_delta_threshold`]. Only the `Frontier*` variants
     /// read it. CLI: `--delta-threshold`.
     pub delta_threshold: f64,
+    /// Autotune the frontier push cutoff from the observed residual decay
+    /// (Blanco et al.'s delayed-async schedule): the cutoff starts at
+    /// [`PrConfig::resolved_delta_threshold`] and is tightened when the
+    /// global residual stalls / loosened when it decays fast, clamped to
+    /// `[threshold/100, threshold*10]` so the un-propagated residual bound
+    /// `delta / (1 - d)` stays far inside the 1e-6-vs-Barrier equivalence
+    /// budget. Only the `Frontier*` variants read it.
+    /// CLI: `--delta-threshold auto`.
+    pub delta_auto: bool,
+    /// How the frontier kernels discover dirty vertices (bitmap scan,
+    /// claim-based work-list, or the density-switched hybrid). Only the
+    /// `Frontier*` variants read it. CLI: `--frontier-sched`.
+    pub frontier_sched: FrontierSched,
+    /// NUMA worker-placement policy ([`crate::engine::topology`]): `Off`
+    /// leaves threads floating, `Pin` binds node-contiguous worker blocks
+    /// (and therefore contiguous partition/vertex ranges) to their node's
+    /// CPUs with a first-touch pre-pass, `Interleave` round-robins workers
+    /// across nodes. Single-node hosts fall back gracefully. CLI: `--numa`.
+    pub numa: crate::engine::topology::Placement,
     /// Synthetic extra work per edge (spin iterations through
     /// `std::hint::black_box`) so scheduling effects dominate on hosts with
     /// fewer cores than the paper's 56; numerics are unaffected. 0 = off.
@@ -310,6 +370,9 @@ impl Default for PrConfig {
             partition: PartitionPolicy::VertexBalanced,
             perforation_factor: 1e-5,
             delta_threshold: 0.0,
+            delta_auto: false,
+            frontier_sched: FrontierSched::Bitmap,
+            numa: crate::engine::topology::Placement::Off,
             work_amplify: 0,
             pcpm_batch: 1,
             pcpm_layout: PcpmLayout::Compressed,
@@ -385,6 +448,14 @@ pub struct PrResult {
     /// frontier/delta scheduling reduces. `0` for kernels that don't
     /// instrument their gather (see `RunMetrics::add_gathered`).
     pub vertex_updates: u64,
+    /// Frontier-scheduler telemetry: how many times a partition switched
+    /// between bitmap-scan and work-list discovery (`--frontier-sched
+    /// hybrid`; includes each partition's initial seeding scan). `0` for
+    /// non-frontier kernels and pure bitmap scheduling.
+    pub frontier_switches: u64,
+    /// Frontier-scheduler telemetry: peak work-list queue occupancy over
+    /// all partitions. `0` when the work-list was never engaged.
+    pub worklist_peak: u64,
     /// Was the run aborted by the watchdog (thread failure wedged it)?
     pub dnf: bool,
 }
@@ -402,6 +473,8 @@ impl PrResult {
             converged: true,
             barrier_wait_secs: 0.0,
             vertex_updates: 0,
+            frontier_switches: 0,
+            worklist_peak: 0,
             dnf: false,
         }
     }
@@ -531,6 +604,31 @@ mod tests {
     }
 
     #[test]
+    fn placement_and_sched_knobs_parse_and_default() {
+        use crate::engine::topology::Placement;
+        let cfg = PrConfig::default();
+        assert_eq!(cfg.numa, Placement::Off);
+        assert_eq!(cfg.frontier_sched, FrontierSched::Bitmap);
+        assert!(!cfg.delta_auto);
+        assert!(cfg.validate().is_ok());
+        assert!(
+            PrConfig { delta_auto: true, ..PrConfig::default() }.validate().is_ok(),
+            "auto tuning needs no explicit cutoff"
+        );
+        assert_eq!(FrontierSched::parse("bitmap").unwrap(), FrontierSched::Bitmap);
+        assert_eq!(FrontierSched::parse("worklist").unwrap(), FrontierSched::Worklist);
+        assert_eq!(FrontierSched::parse("work-list").unwrap(), FrontierSched::Worklist);
+        assert_eq!(FrontierSched::parse("hybrid").unwrap(), FrontierSched::Hybrid);
+        assert!(FrontierSched::parse("magic").is_err());
+        assert_eq!(FrontierSched::Hybrid.to_string(), "hybrid");
+        assert_eq!(Placement::parse("off").unwrap(), Placement::Off);
+        assert_eq!(Placement::parse("pin").unwrap(), Placement::Pin);
+        assert_eq!(Placement::parse("interleave").unwrap(), Placement::Interleave);
+        assert!(Placement::parse("sideways").is_err());
+        assert_eq!(Placement::Interleave.to_string(), "interleave");
+    }
+
+    #[test]
     fn all_cpu_lists_eleven() {
         assert_eq!(Variant::ALL_CPU.len(), 11);
         assert_eq!(Variant::parallel_cpu().count(), 10);
@@ -562,6 +660,8 @@ mod tests {
             converged: false,
             barrier_wait_secs: 0.0,
             vertex_updates: 0,
+            frontier_switches: 0,
+            worklist_peak: 0,
             dnf: false,
         };
         let top = r.top_k(3);

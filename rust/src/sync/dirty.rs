@@ -73,6 +73,44 @@ impl DirtyFlags {
         self.words[w].fetch_or(bit, Ordering::AcqRel) & bit == 0
     }
 
+    /// Claim (atomically clear) vertex `v`'s bit. Returns `true` when this
+    /// call found it set — the caller now owns gathering `v` this sweep.
+    /// The single-vertex dual of [`DirtyFlags::drain_range`]'s per-word
+    /// claim, used by the work-list scheduler to re-validate popped ids:
+    /// an id whose bit was already claimed (say, by an overflow bitmap
+    /// scan) returns `false` and is skipped, so a vertex is never gathered
+    /// twice in one sweep. Same `AcqRel` publication contract as the drain.
+    #[inline]
+    pub fn claim(&self, v: VertexId) -> bool {
+        let (w, bit) = (v as usize / 64, 1u64 << (v as usize % 64));
+        self.words[w].fetch_and(!bit, Ordering::AcqRel) & bit != 0
+    }
+
+    /// Bulk-mark every vertex in `range` dirty — one `fetch_or` per 64
+    /// vertices instead of a per-vertex [`DirtyFlags::set`] loop. Used by
+    /// [`crate::engine::incremental::seed_frontier`] for consecutive runs
+    /// of touched vertices. No transition report: bulk seeding happens
+    /// before workers race on the bitmap.
+    pub fn set_range(&self, range: Range<VertexId>) {
+        let (start, end) = (range.start as usize, range.end as usize);
+        if start >= end {
+            return;
+        }
+        let first_word = start / 64;
+        let last_word = (end - 1) / 64;
+        for w in first_word..=last_word {
+            let lo = (w * 64).max(start);
+            let hi = ((w + 1) * 64).min(end);
+            let width = hi - lo;
+            let mask: u64 = if width == 64 {
+                !0
+            } else {
+                ((1u64 << width) - 1) << (lo - w * 64)
+            };
+            self.words[w].fetch_or(mask, Ordering::AcqRel);
+        }
+    }
+
     /// Is vertex `v` currently marked?
     #[inline]
     pub fn is_set(&self, v: VertexId) -> bool {
@@ -209,6 +247,45 @@ mod tests {
         assert!(d.is_set(130));
         assert_eq!(d.drain_range(0..300, |v| assert_eq!(v, 130)), 1);
         assert!(!d.any_in_range(0..300));
+    }
+
+    #[test]
+    fn claim_clears_exactly_one_bit_once() {
+        let d = DirtyFlags::new_clear(128);
+        assert!(!d.claim(70), "clear bit cannot be claimed");
+        d.set(70);
+        d.set(71);
+        assert!(d.claim(70));
+        assert!(!d.claim(70), "second claim must lose");
+        assert!(d.is_set(71), "neighbouring bit untouched");
+        assert_eq!(d.count_set(), 1);
+    }
+
+    #[test]
+    fn set_range_marks_word_spanning_runs() {
+        let d = DirtyFlags::new_clear(300);
+        d.set_range(60..130);
+        assert_eq!(d.count_set(), 70);
+        assert!(!d.is_set(59));
+        assert!(d.is_set(60));
+        assert!(d.is_set(129));
+        assert!(!d.is_set(130));
+        d.set_range(10..10); // empty range is a no-op
+        assert_eq!(d.count_set(), 70);
+        d.set_range(0..300);
+        assert_eq!(d.count_set(), 300, "full range marks everything");
+        // equivalent to the per-vertex loop
+        let loopy = DirtyFlags::new_clear(300);
+        for v in 60..130 {
+            loopy.set(v);
+        }
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        let fresh = DirtyFlags::new_clear(300);
+        fresh.set_range(60..130);
+        fresh.drain_range(0..300, |v| a.push(v));
+        loopy.drain_range(0..300, |v| b.push(v));
+        assert_eq!(a, b);
     }
 
     #[test]

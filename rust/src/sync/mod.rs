@@ -15,6 +15,9 @@
 //! * [`dirty::DirtyFlags`] — a lock-free per-vertex dirty bitmap, the
 //!   frontier substrate of the delta-scheduled kernels (ours, after Blanco
 //!   et al.'s delayed-async scheduling; not a paper primitive).
+//! * [`worklist::WorkList`] — a fixed-capacity lock-free MPMC ring of
+//!   vertex ids, the sparse-frontier alternative to scanning the bitmap
+//!   (ours; claim-based, deduplicated through `DirtyFlags`).
 //!
 //! The [`RankCell`] and [`PhaseBarrier`] traits are the engine-facing
 //! surface: [`crate::engine`] snapshots rank storage and reads barrier
@@ -25,6 +28,10 @@ pub mod atomics;
 pub mod barrier;
 pub mod cas_cell;
 pub mod dirty;
+pub mod worklist;
+
+pub use dirty::DirtyFlags;
+pub use worklist::WorkList;
 
 /// Engine-facing view of one rank cell. Implemented by the plain
 /// [`atomics::AtomicF64`] and by the wait-free

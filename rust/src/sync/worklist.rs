@@ -1,0 +1,287 @@
+//! Claim-based work-list frontier: a fixed-capacity lock-free MPMC ring of
+//! vertex ids.
+//!
+//! The bitmap frontier ([`crate::sync::DirtyFlags`]) costs O(n/64) per
+//! sweep no matter how sparse the active set is; once a partition's
+//! frontier drops to a handful of vertices, scanning megabytes of clean
+//! words dominates. The work-list inverts that: marking a vertex also
+//! enqueues its id on the owner partition's ring, and the owner pops
+//! instead of scanning — O(active) per sweep.
+//!
+//! This is the bounded MPMC queue of Vyukov's design: each slot carries a
+//! sequence number; producers claim a slot by CAS on `tail` and publish
+//! with a `Release` store of `seq = pos + 1`, consumers claim by CAS on
+//! `head` once they observe that sequence and retire the slot with
+//! `seq = pos + capacity`. Full and empty are detected from the sequence
+//! lag without locking. The ring never blocks: `push` on a full ring
+//! returns `false` (the frontier scheduler then falls back to a bitmap
+//! scan — the bitmap stays the ground truth, so overflow loses telemetry,
+//! never marks).
+//!
+//! Deduplication is *not* the ring's job: the frontier enqueues a vertex
+//! only when its [`DirtyFlags::set`](crate::sync::DirtyFlags::set)
+//! transition reports the bit was clear, and consumers re-validate every
+//! pop against the bitmap with
+//! [`DirtyFlags::claim`](crate::sync::DirtyFlags::claim) — so a vertex is
+//! queued at most once per sweep and a stale entry (already claimed by an
+//! overflow scan) is skipped, never double-gathered.
+
+use crate::graph::VertexId;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+
+/// One ring slot: the Vyukov sequence word plus the payload.
+struct Slot {
+    seq: AtomicUsize,
+    val: AtomicU32,
+}
+
+/// A fixed-capacity lock-free MPMC ring of vertex ids.
+pub struct WorkList {
+    slots: Vec<Slot>,
+    mask: usize,
+    head: AtomicUsize,
+    tail: AtomicUsize,
+    peak: AtomicUsize,
+}
+
+impl WorkList {
+    /// A ring holding at least `cap` entries (rounded up to a power of two,
+    /// minimum 2).
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(2).next_power_of_two();
+        let slots =
+            (0..cap).map(|i| Slot { seq: AtomicUsize::new(i), val: AtomicU32::new(0) }).collect();
+        Self {
+            slots,
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            peak: AtomicUsize::new(0),
+        }
+    }
+
+    /// Ring capacity (always a power of two).
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Approximate current occupancy (exact when quiescent).
+    pub fn len(&self) -> usize {
+        let tail = self.tail.load(Ordering::Relaxed);
+        let head = self.head.load(Ordering::Relaxed);
+        tail.saturating_sub(head)
+    }
+
+    /// Approximately empty (exact when quiescent).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Peak occupancy ever observed by a successful `push` (telemetry;
+    /// monotone, approximate under contention).
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed) as u64
+    }
+
+    /// Enqueue `v`. Returns `false` when the ring is full — the caller
+    /// falls back to the bitmap scan; nothing is lost because the bitmap
+    /// mark always precedes the enqueue attempt.
+    pub fn push(&self, v: VertexId) -> bool {
+        let mut pos = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let lag = seq as isize - pos as isize;
+            if lag == 0 {
+                match self.tail.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        slot.val.store(v, Ordering::Relaxed);
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        let occupancy =
+                            pos.wrapping_add(1).saturating_sub(self.head.load(Ordering::Relaxed));
+                        self.peak.fetch_max(occupancy, Ordering::Relaxed);
+                        return true;
+                    }
+                    Err(current) => pos = current,
+                }
+            } else if lag < 0 {
+                // The slot still holds an unconsumed entry from one lap
+                // ago: the ring is full.
+                return false;
+            } else {
+                pos = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Dequeue the oldest entry, `None` when the ring is empty.
+    pub fn pop(&self) -> Option<VertexId> {
+        let mut pos = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let lag = seq as isize - pos.wrapping_add(1) as isize;
+            if lag == 0 {
+                match self.head.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let v = slot.val.load(Ordering::Relaxed);
+                        // retire the slot for the producers' next lap
+                        slot.seq.store(pos.wrapping_add(self.mask + 1), Ordering::Release);
+                        return Some(v);
+                    }
+                    Err(current) => pos = current,
+                }
+            } else if lag < 0 {
+                return None;
+            } else {
+                pos = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sync::DirtyFlags;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_single_thread() {
+        let q = WorkList::with_capacity(8);
+        assert!(q.is_empty());
+        assert_eq!(q.pop(), None);
+        for v in [3u32, 1, 4, 1, 5] {
+            assert!(q.push(v));
+        }
+        assert_eq!(q.len(), 5);
+        for v in [3u32, 1, 4, 1, 5] {
+            assert_eq!(q.pop(), Some(v));
+        }
+        assert_eq!(q.pop(), None);
+        assert!(q.peak() >= 5);
+    }
+
+    #[test]
+    fn full_ring_rejects_then_recovers_across_wraparound() {
+        let q = WorkList::with_capacity(4);
+        assert_eq!(q.capacity(), 4);
+        for v in 0..4u32 {
+            assert!(q.push(v));
+        }
+        assert!(!q.push(99), "full ring must reject, not overwrite");
+        assert_eq!(q.pop(), Some(0));
+        assert!(q.push(4), "freed slot is reusable");
+        // drain across the wrap boundary several laps
+        for lap in 0..5u32 {
+            while q.pop().is_some() {}
+            for v in 0..4u32 {
+                assert!(q.push(lap * 10 + v));
+            }
+        }
+        let mut drained = Vec::new();
+        while let Some(v) = q.pop() {
+            drained.push(v);
+        }
+        assert_eq!(drained, vec![40, 41, 42, 43]);
+    }
+
+    #[test]
+    fn tiny_capacities_are_clamped() {
+        assert_eq!(WorkList::with_capacity(0).capacity(), 2);
+        assert_eq!(WorkList::with_capacity(3).capacity(), 4);
+    }
+
+    /// The satellite stress test: racing producers and consumers over a
+    /// ring much smaller than the id space — every id must come out exactly
+    /// once, none lost, none duplicated.
+    #[test]
+    fn concurrent_claim_enqueue_loses_and_duplicates_nothing() {
+        const PRODUCERS: usize = 4;
+        const PER_PRODUCER: usize = 8_192;
+        let n = PRODUCERS * PER_PRODUCER;
+        let q = Arc::new(WorkList::with_capacity(1024));
+        let seen: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
+        let popped = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for p in 0..PRODUCERS {
+                let q = Arc::clone(&q);
+                s.spawn(move || {
+                    for i in 0..PER_PRODUCER {
+                        let v = (p * PER_PRODUCER + i) as VertexId;
+                        while !q.push(v) {
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+            for _ in 0..2 {
+                let q = Arc::clone(&q);
+                let seen = Arc::clone(&seen);
+                let popped = Arc::clone(&popped);
+                s.spawn(move || loop {
+                    match q.pop() {
+                        Some(v) => {
+                            seen[v as usize].fetch_add(1, Ordering::Relaxed);
+                            if popped.fetch_add(1, Ordering::Relaxed) + 1 == n {
+                                return;
+                            }
+                        }
+                        None => {
+                            if popped.load(Ordering::Relaxed) >= n {
+                                return;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+        });
+        for (v, c) in seen.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "vertex {v} popped wrong count");
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    /// The frontier's dedup contract: enqueue only on a `DirtyFlags::set`
+    /// transition, validate pops with `claim` — racing markers of the same
+    /// vertices never produce a duplicate gather.
+    #[test]
+    fn dirty_guard_dedups_racing_markers() {
+        let n = 1_000usize;
+        let q = Arc::new(WorkList::with_capacity(2048));
+        let dirty = Arc::new(DirtyFlags::new_clear(n));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let q = Arc::clone(&q);
+                let dirty = Arc::clone(&dirty);
+                s.spawn(move || {
+                    for v in 0..n as VertexId {
+                        if dirty.set(v) {
+                            assert!(q.push(v), "capacity covers every unique id");
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(q.len(), n, "exactly one enqueue per vertex");
+        let mut gathered = 0usize;
+        while let Some(v) = q.pop() {
+            assert!(dirty.claim(v), "each queued vertex claims its bit once");
+            gathered += 1;
+        }
+        assert_eq!(gathered, n);
+        assert_eq!(dirty.count_set(), 0);
+    }
+}

@@ -5,7 +5,7 @@
 //! `XlaBlock`-excluded dispatch error path.
 
 use pagerank_nb::graph::{rmat, synthetic, Csr, GraphBuilder};
-use pagerank_nb::pagerank::{self, seq, PcpmLayout, PrConfig, Variant};
+use pagerank_nb::pagerank::{self, seq, FrontierSched, PcpmLayout, PrConfig, Variant};
 use pagerank_nb::testkit::{check, Config, EdgeList};
 
 fn build(n: usize, edges: &[(u32, u32)]) -> Csr {
@@ -245,6 +245,94 @@ fn out_of_core_mmap_sharded_matches_in_memory_barrier() {
         let l1 = r.l1_norm(&barrier.ranks);
         assert!(l1 < 1e-6, "shards={shards}: L1 vs barrier {l1}");
         assert!(r.vertex_updates > 0, "shards={shards}: coordinator not instrumented");
+    }
+}
+
+/// The scheduling acceptance criterion: `--frontier-sched worklist|hybrid`
+/// must agree with the default bitmap scan — bit-identically at one thread
+/// (the two-phase sweep makes the gather set schedule-independent there),
+/// within 1e-6 L1 of the Barrier ranks at four — and the `PrResult`
+/// telemetry must tell the modes apart.
+#[test]
+fn frontier_scheduler_modes_agree_with_bitmap() {
+    let g = synthetic::web_replica(2_000, 6, 42);
+    for threads in [1usize, 4] {
+        let base = PrConfig { threads, threshold: 1e-10, ..PrConfig::default() };
+        let barrier = pagerank::run(&g, Variant::Barrier, &base).unwrap();
+        assert!(barrier.converged);
+        for v in [Variant::Frontier, Variant::FrontierPcpm] {
+            let bitmap = pagerank::run(&g, v, &base).unwrap();
+            assert!(bitmap.converged, "{v} t{threads}");
+            assert_eq!(bitmap.worklist_peak, 0, "{v}: bitmap mode has no rings");
+            for sched in [FrontierSched::Worklist, FrontierSched::Hybrid] {
+                let cfg = PrConfig { frontier_sched: sched, ..base.clone() };
+                let r = pagerank::run(&g, v, &cfg).unwrap();
+                assert!(r.converged, "{v}/{sched} t{threads} did not converge");
+                if threads == 1 {
+                    // single worker: every mode snapshots the same dirty
+                    // set each sweep, so the runs are indistinguishable
+                    assert_eq!(r.ranks, bitmap.ranks, "{v}/{sched}: not bit-identical");
+                    assert_eq!(r.vertex_updates, bitmap.vertex_updates, "{v}/{sched}");
+                } else {
+                    let l1 = r.l1_norm(&barrier.ranks);
+                    assert!(l1 < 1e-6, "{v}/{sched}: L1 vs barrier {l1}");
+                }
+                assert!(r.worklist_peak > 0, "{v}/{sched} t{threads}: rings never used");
+                assert!(r.frontier_switches >= 1, "{v}/{sched} t{threads}: no telemetry");
+            }
+        }
+    }
+}
+
+/// `--delta-threshold auto`: the residual-driven tuner must keep the
+/// 1e-6-vs-Barrier equivalence while gathering no more vertex updates than
+/// No-Sync's gather-everything sweeps.
+#[test]
+fn auto_delta_matches_barrier_with_no_more_work_than_nosync() {
+    let g = synthetic::web_replica(2_000, 6, 42);
+    let cfg = PrConfig {
+        threads: 4,
+        threshold: 1e-10,
+        delta_auto: true,
+        ..PrConfig::default()
+    };
+    let barrier = pagerank::run(&g, Variant::Barrier, &cfg).unwrap();
+    let nosync = pagerank::run(&g, Variant::NoSync, &cfg).unwrap();
+    assert!(barrier.converged && nosync.converged);
+    assert!(nosync.vertex_updates > 0, "No-Sync must be instrumented");
+    for v in [Variant::Frontier, Variant::FrontierPcpm] {
+        let r = pagerank::run(&g, v, &cfg).unwrap();
+        assert!(r.converged, "{v} (auto) did not converge");
+        let l1 = r.l1_norm(&barrier.ranks);
+        assert!(l1 < 1e-6, "{v} (auto): L1 vs barrier {l1}");
+        assert!(
+            r.vertex_updates <= nosync.vertex_updates,
+            "{v} (auto) gathered {} vertex updates, No-Sync {}",
+            r.vertex_updates,
+            nosync.vertex_updates
+        );
+    }
+}
+
+/// `--numa pin|interleave` is worker placement only: on any host —
+/// including single-node CI machines, where the sysfs detection falls back
+/// to one node holding every CPU — the placed runs land on the same fixed
+/// point as `--numa off`.
+#[test]
+fn numa_placement_does_not_change_the_fixed_point() {
+    use pagerank_nb::engine::topology::Placement;
+    let g = synthetic::web_replica(2_000, 6, 42);
+    let base = PrConfig { threads: 2, threshold: 1e-10, ..PrConfig::default() };
+    let off = pagerank::run(&g, Variant::Frontier, &base).unwrap();
+    assert!(off.converged);
+    for numa in [Placement::Pin, Placement::Interleave] {
+        for v in [Variant::Frontier, Variant::Barrier] {
+            let cfg = PrConfig { numa, ..base.clone() };
+            let r = pagerank::run(&g, v, &cfg).unwrap();
+            assert!(r.converged, "{v}/{numa} did not converge");
+            let l1 = r.l1_norm(&off.ranks);
+            assert!(l1 < 1e-6, "{v}/{numa}: L1 vs --numa off {l1}");
+        }
     }
 }
 

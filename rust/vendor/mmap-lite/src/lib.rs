@@ -35,6 +35,9 @@ mod sys {
     /// `mmap(2)` error sentinel (`(void *) -1`).
     pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
 
+    /// `MADV_WILLNEED` — expect access in the near future; start read-ahead.
+    pub const MADV_WILLNEED: i32 = 3;
+
     extern "C" {
         pub fn mmap(
             addr: *mut c_void,
@@ -45,6 +48,7 @@ mod sys {
             offset: i64,
         ) -> *mut c_void;
         pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+        pub fn madvise(addr: *mut c_void, len: usize, advice: i32) -> i32;
     }
 }
 
@@ -140,6 +144,40 @@ impl Mmap {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Hint the kernel that `offset..offset + len` will be read soon
+    /// (`madvise(MADV_WILLNEED)`), so read-ahead can overlap with whatever
+    /// the caller does in the meantime. Purely advisory: the range is
+    /// clamped to the mapping, the address is aligned down to the page, a
+    /// failing syscall is ignored, and heap-backed views (non-unix targets,
+    /// zero-length files) are already resident — so this is a no-op
+    /// everywhere it cannot help.
+    pub fn advise_willneed(&self, offset: usize, len: usize) {
+        #[cfg(unix)]
+        if let Inner::Mapped { ptr, len: map_len } = self.inner {
+            const PAGE: usize = 4096;
+            let start = offset.min(map_len);
+            let end = offset.saturating_add(len).min(map_len);
+            if start >= end {
+                return;
+            }
+            // Align the start down to a page boundary — madvise(2) demands
+            // a page-aligned address, and the mapping base itself is
+            // page-aligned (see the module docs).
+            let aligned = start - (start % PAGE);
+            // SAFETY: `ptr + aligned` and the clamped length lie inside
+            // this live mapping; MADV_WILLNEED never mutates page contents.
+            unsafe {
+                sys::madvise(
+                    ptr.add(aligned) as *mut std::ffi::c_void,
+                    end - aligned,
+                    sys::MADV_WILLNEED,
+                );
+            }
+        }
+        #[cfg(not(unix))]
+        let _ = (offset, len);
+    }
 }
 
 impl Deref for Mmap {
@@ -208,6 +246,21 @@ mod tests {
         // A real kernel mapping is page-aligned, which is what lets callers
         // reinterpret 64-byte-aligned sections inside it.
         assert_eq!(m.as_slice().as_ptr() as usize % 4096, 0);
+    }
+
+    #[test]
+    fn advise_willneed_is_safe_everywhere() {
+        let p = tmpfile("advise.bin", &[9u8; 20_000]);
+        let m = Mmap::map(&File::open(&p).unwrap()).unwrap();
+        m.advise_willneed(0, m.len());
+        m.advise_willneed(5_000, 1_000); // unaligned interior range
+        m.advise_willneed(19_999, 50_000); // clamped past the end
+        m.advise_willneed(usize::MAX, 1); // degenerate offset
+        m.advise_willneed(100, 0); // empty range
+        assert!(m.iter().all(|&b| b == 9), "advice must not disturb contents");
+        let p = tmpfile("advise_empty.bin", b"");
+        let empty = Mmap::map(&File::open(&p).unwrap()).unwrap();
+        empty.advise_willneed(0, 10); // heap-backed fallback: no-op
     }
 
     #[test]

@@ -54,6 +54,22 @@ echo "· frontier-pcpm (per-edge slots baseline)"
 "$BIN" run --graph "$GRAPH" --mode frontier-pcpm --pcpm-layout slots \
     --threads "$THREADS" --top 3
 
+echo "· frontier (claim-based work-list scheduler)"
+"$BIN" run --graph "$GRAPH" --mode frontier --frontier-sched worklist \
+    --threads "$THREADS" --top 3
+
+echo "· frontier-pcpm (hybrid density-switching scheduler)"
+"$BIN" run --graph "$GRAPH" --mode frontier-pcpm --frontier-sched hybrid \
+    --threads "$THREADS" --top 3
+
+echo "· frontier (residual-driven delta autotuning)"
+"$BIN" run --graph "$GRAPH" --mode frontier --delta-threshold auto \
+    --threads "$THREADS" --top 3
+
+echo "· frontier (NUMA-pinned workers; single-node fallback on laptops/CI)"
+"$BIN" run --graph "$GRAPH" --mode frontier --numa pin \
+    --threads "$THREADS" --top 3
+
 echo "· out-of-core (mmap-backed v2 cache, 4-shard rotation)"
 "$BIN" run --graph "$GRAPH" --storage mmap --shards 4 --top 3
 
