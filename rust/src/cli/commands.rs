@@ -381,6 +381,13 @@ pub fn cmd_bench_ci(args: &ArgMap) -> Result<()> {
                      skipped by the gate (renamed/removed ablation?)",
                     b.dataset, b.variant
                 );
+            } else if !b.gated {
+                eprintln!(
+                    "UNGATED: baseline row {}/{} is an offline placeholder — \
+                     skipped by the gate until a --seed-baseline refresh \
+                     records real numbers (docs/benchmarking.md)",
+                    b.dataset, b.variant
+                );
             }
         }
         let regressions = trajectory::compare(&report, &baseline, max_regress);
@@ -389,7 +396,9 @@ pub fn cmd_bench_ci(args: &ArgMap) -> Result<()> {
             let gated = baseline
                 .rows
                 .iter()
-                .filter(|r| r.converged && report.find(&r.dataset, &r.variant).is_some())
+                .filter(|r| {
+                    r.gated && r.converged && report.find(&r.dataset, &r.variant).is_some()
+                })
                 .count();
             println!(
                 "bench-trajectory gate: OK ({gated} baseline rows held within {:.0}%)",

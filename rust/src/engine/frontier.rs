@@ -195,6 +195,12 @@ impl FrontierScheduler {
                 self.dirty.drain_range(range, |v| batch.push(v));
             }
             batch.sort_unstable();
+            // A vertex claimed off the ring can be re-marked by a racing
+            // worker and then claimed again by a same-sweep overflow drain.
+            // The re-mark's delta is still covered by this sweep's single
+            // gather, so collapse the duplicate to keep the once-per-sweep
+            // invariant (and `vertex_updates`) honest.
+            batch.dedup();
         }
         let mode = if scanned { MODE_SCAN } else { MODE_QUEUE };
         if self.last_mode[tid].swap(mode, Ordering::Relaxed) != mode {

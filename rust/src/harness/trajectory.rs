@@ -51,6 +51,12 @@ pub struct BenchRow {
     pub vertex_updates: u64,
     /// Did the run converge?
     pub converged: bool,
+    /// False excludes this row from the regression gate: a baseline row
+    /// seeded offline (never measured on a bench host) sits in the file
+    /// for coverage but must not fail real runs against invented numbers.
+    /// Measured reports always record `true`; the JSON key is optional and
+    /// defaults to `true` so existing baselines keep gating unchanged.
+    pub gated: bool,
 }
 
 /// A full `BENCH_ci.json` document.
@@ -97,7 +103,7 @@ impl BenchReport {
         for (i, r) in self.rows.iter().enumerate() {
             s.push_str(&format!(
                 "    {{\"dataset\": {}, \"variant\": {}, \"secs\": {}, \"rel\": {}, \
-                 \"iterations\": {}, \"vertex_updates\": {}, \"converged\": {}}}{}\n",
+                 \"iterations\": {}, \"vertex_updates\": {}, \"converged\": {}{}}}{}\n",
                 json_escape(&r.dataset),
                 json_escape(&r.variant),
                 json_f64(r.secs),
@@ -105,6 +111,8 @@ impl BenchReport {
                 r.iterations,
                 r.vertex_updates,
                 r.converged,
+                // `gated` defaults true on parse; only the exception is worth bytes
+                if r.gated { "" } else { ", \"gated\": false" },
                 if i + 1 < self.rows.len() { "," } else { "" }
             ));
         }
@@ -147,6 +155,7 @@ impl BenchReport {
                     .get("converged")
                     .and_then(Json::as_bool)
                     .unwrap_or(false),
+                gated: ro.get("gated").and_then(Json::as_bool).unwrap_or(true),
             });
         }
         Ok(BenchReport {
@@ -248,6 +257,7 @@ pub fn run_ci_bench(
                 iterations: probe.iterations,
                 vertex_updates: probe.vertex_updates,
                 converged: probe.converged && secs.is_finite(),
+                gated: true,
             });
         };
         for v in Variant::ALL_MODES {
@@ -373,7 +383,9 @@ pub fn run_ci_bench(
 /// regression (empty = gate passes).
 ///
 /// Rules, per (dataset, variant) row present in **both** reports with a
-/// converged baseline:
+/// converged, gated baseline (`"gated": false` rows are offline-seeded
+/// placeholders that have never been measured — they are skipped until a
+/// `--seed-baseline` refresh replaces them with real numbers):
 /// * normalized time may grow to `base.rel * (1 + max_regress) + 1.0`
 ///   (the absolute slack absorbs scheduler noise, which dominates in the
 ///   millisecond regime the scaled-down CI graphs run in);
@@ -399,6 +411,9 @@ pub fn compare(current: &BenchReport, baseline: &BenchReport, max_regress: f64) 
         let Some(cur) = current.find(&base.dataset, &base.variant) else {
             continue;
         };
+        if !base.gated {
+            continue; // offline placeholder, never measured: nothing to hold
+        }
         if !base.converged {
             continue; // baseline itself was unstable here: nothing to hold
         }
@@ -860,6 +875,35 @@ mod tests {
             );
             assert!(row.secs.is_finite(), "{}/{}", row.dataset, row.variant);
         }
+    }
+
+    /// An offline-seeded `"gated": false` baseline row must never fail the
+    /// gate, however badly the live run diverges from its invented numbers,
+    /// and the flag must survive a JSON round-trip (it is only serialized
+    /// when false).
+    #[test]
+    fn ungated_baseline_rows_are_skipped() {
+        let r = tiny_report();
+        let mut base = r.clone();
+        let mut marked = 0;
+        for row in base.rows.iter_mut().filter(|x| x.variant == "Frontier-worklist") {
+            // budgets no real run could hold — only `gated: false` spares them
+            row.gated = false;
+            row.rel = 0.0;
+            row.iterations = 0;
+            row.converged = true;
+            marked += 1;
+        }
+        assert!(marked > 0, "tiny report must carry Frontier-worklist rows");
+        let base = BenchReport::from_json(&base.to_json()).expect("round-trip");
+        for row in base.rows.iter().filter(|x| x.variant == "Frontier-worklist") {
+            assert!(!row.gated, "gated flag must survive the JSON round-trip");
+        }
+        assert!(
+            base.rows.iter().filter(|x| x.variant != "Frontier-worklist").all(|x| x.gated),
+            "omitted key must parse back as gated"
+        );
+        assert!(compare(&r, &base, 0.25).is_empty(), "ungated rows must not gate");
     }
 
     #[test]

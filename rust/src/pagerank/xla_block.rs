@@ -113,6 +113,8 @@ pub fn run(g: &Csr, cfg: &PrConfig, engine: &Engine) -> Result<PrResult> {
         converged,
         barrier_wait_secs: 0.0,
         vertex_updates: iterations * n as u64,
+        frontier_switches: 0,
+        worklist_peak: 0,
         dnf: false,
     })
 }

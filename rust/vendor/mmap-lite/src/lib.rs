@@ -49,6 +49,33 @@ mod sys {
         ) -> *mut c_void;
         pub fn munmap(addr: *mut c_void, len: usize) -> i32;
         pub fn madvise(addr: *mut c_void, len: usize, advice: i32) -> i32;
+        pub fn getpagesize() -> i32;
+    }
+
+    /// The kernel's page size, queried once (`getpagesize(2)`, which every
+    /// unix we target exports — unlike the `_SC_PAGESIZE` constant, whose
+    /// value differs per platform). Hardcoding 4096 would hand `madvise` a
+    /// misaligned address on 16K/64K-page kernels (e.g. many aarch64
+    /// hosts), turning the hint into a silent `EINVAL`. An absurd answer
+    /// falls back to 4096: a wrong-but-sane alignment degrades the hint,
+    /// never safety.
+    pub fn page_size() -> usize {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static PAGE: AtomicUsize = AtomicUsize::new(0);
+        let cached = PAGE.load(Ordering::Relaxed);
+        if cached != 0 {
+            return cached;
+        }
+        // SAFETY: getpagesize takes no arguments and only reads kernel
+        // self-description; it cannot fail in a way that touches memory.
+        let raw = unsafe { getpagesize() };
+        let page = if raw > 0 && (raw as usize).is_power_of_two() {
+            raw as usize
+        } else {
+            4096
+        };
+        PAGE.store(page, Ordering::Relaxed);
+        page
     }
 }
 
@@ -155,7 +182,7 @@ impl Mmap {
     pub fn advise_willneed(&self, offset: usize, len: usize) {
         #[cfg(unix)]
         if let Inner::Mapped { ptr, len: map_len } = self.inner {
-            const PAGE: usize = 4096;
+            let page = sys::page_size();
             let start = offset.min(map_len);
             let end = offset.saturating_add(len).min(map_len);
             if start >= end {
@@ -164,7 +191,7 @@ impl Mmap {
             // Align the start down to a page boundary — madvise(2) demands
             // a page-aligned address, and the mapping base itself is
             // page-aligned (see the module docs).
-            let aligned = start - (start % PAGE);
+            let aligned = start - (start % page);
             // SAFETY: `ptr + aligned` and the clamped length lie inside
             // this live mapping; MADV_WILLNEED never mutates page contents.
             unsafe {
@@ -246,6 +273,16 @@ mod tests {
         // A real kernel mapping is page-aligned, which is what lets callers
         // reinterpret 64-byte-aligned sections inside it.
         assert_eq!(m.as_slice().as_ptr() as usize % 4096, 0);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn queried_page_size_is_sane() {
+        let p = super::sys::page_size();
+        // every supported kernel pages at a power-of-two ≥ 4 KiB, and the
+        // fallback guarantees the same — alignment math relies on it
+        assert!(p.is_power_of_two() && p >= 4096, "page size {p}");
+        assert_eq!(p, super::sys::page_size(), "cached answer must be stable");
     }
 
     #[test]
