@@ -158,7 +158,9 @@ fn variant_from_args(args: &ArgMap) -> Result<Variant> {
 
 /// `run`: one algorithm on one graph; prints timing + top ranks. With
 /// `--shards`/`--mem-budget` the run goes through the out-of-core shard
-/// coordinator ([`crate::engine::ooc`]) instead of the thread engine.
+/// coordinator ([`crate::engine::ooc`]) instead of the thread engine;
+/// `--ooc-workers K` sweeps K shards concurrently (default
+/// `min(threads, shards)`).
 pub fn cmd_run(args: &ArgMap) -> Result<()> {
     let seed = args.get_parsed("seed", 42u64)?;
     let storage = storage_from_args(args)?;
@@ -189,6 +191,20 @@ pub fn cmd_run(args: &ArgMap) -> Result<()> {
         cfg.threads
     );
     let r = if out_of_core {
+        // Requested parallel sweep width. The default is min(threads,
+        // shards); an explicit --ooc-workers above the shard count is
+        // clamped by the coordinator (surplus workers could never claim a
+        // shard). Resolved *before* the shard count because a budget-derived
+        // schedule must fit K resident shards, not one.
+        let workers_req = if args.has("ooc-workers") {
+            let k = args.get_parsed("ooc-workers", 1usize)?;
+            if k == 0 {
+                bail!("--ooc-workers must be at least 1");
+            }
+            k
+        } else {
+            cfg.threads
+        };
         let shards = if args.has("shards") {
             let s = args.get_parsed("shards", 1usize)?;
             if s == 0 {
@@ -200,18 +216,19 @@ pub fn cmd_run(args: &ArgMap) -> Result<()> {
             if budget_mib == 0 {
                 bail!("--mem-budget must be a positive number of MiB");
             }
-            crate::engine::ooc::shards_for_budget(&g, budget_mib << 20)
+            crate::engine::ooc::shards_for_budget(&g, budget_mib << 20, workers_req)?
         };
+        let workers = workers_req.min(shards).max(1);
         if args.has("mode") || args.has("algo") {
             eprintln!(
                 "note: out-of-core runs replay through Frontier-PCPM; --mode/--algo ignored"
             );
         }
         println!(
-            "out-of-core: {shards} shard(s), storage {}",
+            "out-of-core: {shards} shard(s), {workers} worker(s), storage {}",
             if g.is_mapped() { "mmap" } else { "memory" }
         );
-        crate::engine::ooc::run_sharded(&g, &cfg, shards)?
+        crate::engine::ooc::run_sharded_workers(&g, &cfg, shards, workers)?
     } else if variant == Variant::XlaBlock {
         let engine = crate::runtime::Engine::cpu()?;
         pagerank::run_with_engine(&g, variant, &cfg, &engine)?
@@ -283,7 +300,10 @@ pub fn cmd_bench(argv: &[String]) -> Result<()> {
 
 /// `bench-ci`: run every registered variant on the scaled-down CI datasets,
 /// write the `BENCH_ci.json` trajectory report, and (when a baseline is
-/// given) fail on any >`--max-regress` regression. See docs/benchmarking.md.
+/// given) fail on any >`--max-regress` regression. `--require-baseline`
+/// turns a missing/empty baseline into an error instead of a bootstrap
+/// skip; `--seed-baseline` writes one from this run. See
+/// docs/benchmarking.md.
 pub fn cmd_bench_ci(args: &ArgMap) -> Result<()> {
     use crate::harness::trajectory::{self, BenchReport};
     let divisor = scale_from_args(args)?;
@@ -339,6 +359,19 @@ pub fn cmd_bench_ci(args: &ArgMap) -> Result<()> {
             Some(b) => b.rows.is_empty(),
         };
         if bootstrap {
+            // CI passes --require-baseline: its baseline is committed, so
+            // finding it missing or empty means the file was corrupted or
+            // accidentally emptied — silently skipping (or reseeding) the
+            // gate would launder the damage into a green run.
+            if args.has("require-baseline") {
+                bail!(
+                    "baseline {baseline_path} is {} but --require-baseline was \
+                     given — restore the committed baseline or reseed it \
+                     explicitly via the baseline-refresh workflow \
+                     (docs/benchmarking.md)",
+                    if baseline.is_some() { "empty" } else { "missing" }
+                );
+            }
             if args.has("seed-baseline") {
                 std::fs::write(baseline_path, report.to_json())
                     .with_context(|| format!("seeding {baseline_path}"))?;
@@ -746,6 +779,33 @@ mod tests {
         let direct = load_graph_stored(p.to_str().unwrap(), 0, Storage::Mmap).unwrap();
         assert!(direct.is_mapped());
         assert_eq!(direct, owned);
+    }
+
+    #[test]
+    fn ooc_worker_flags_run_end_to_end() {
+        // --shards + --ooc-workers drive the parallel coordinator through
+        // the real CLI path (flag parsing, clamping, result printing).
+        let run = |argv: &[&str]| {
+            let owned: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+            cmd_run(&ArgMap::parse(&owned).unwrap())
+        };
+        run(&["--graph", "web:400:4", "--shards", "4", "--ooc-workers", "2"]).unwrap();
+        // K above the shard count clamps instead of erroring
+        run(&["--graph", "cycle:40", "--shards", "2", "--ooc-workers", "16"]).unwrap();
+        // zero is rejected loudly
+        let err = run(&["--graph", "cycle:40", "--shards", "2", "--ooc-workers", "0"])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--ooc-workers"), "{err}");
+        // a budget-derived schedule divides the budget by K before sizing
+        // shards, so splitting 1 MiB this many ways cannot hold a shard of
+        // even one vertex — the hint must surface, not a silent clamp
+        let err = run(&[
+            "--graph", "web:400:4", "--mem-budget", "1", "--ooc-workers", "999999",
+        ])
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("--ooc-workers") || err.contains("--mem-budget"), "{err}");
     }
 
     #[test]

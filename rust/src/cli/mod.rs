@@ -2,10 +2,12 @@
 //!
 //! ```text
 //! pagerank-nb run      --graph <src> --algo <variant> [--threads N]
-//!                      [--storage mmap] [--shards S | --mem-budget MiB] …
+//!                      [--storage mmap] [--shards S | --mem-budget MiB]
+//!                      [--ooc-workers K] …
 //! pagerank-nb serve    --graph <src> [--epochs N] [--batch N] [--readers N]
 //! pagerank-nb bench    <exp-id|all> [--out DIR]
-//! pagerank-nb bench-ci [--out FILE] [--baseline FILE] [--max-regress F] [--seed-baseline]
+//! pagerank-nb bench-ci [--out FILE] [--baseline FILE] [--max-regress F]
+//!                      [--seed-baseline | --require-baseline]
 //! pagerank-nb gen      (--all | --dataset NAME) --out DIR
 //! pagerank-nb info     --graph <src>
 //! pagerank-nb validate --graph <src> [--threads N]
@@ -64,9 +66,12 @@ USAGE:
                        [--numa off|pin|interleave]
                        [--pcpm-batch B] [--pcpm-layout compressed|slots]
                        [--storage memory|mmap] [--shards S | --mem-budget MiB]
+                       [--ooc-workers K]
                        (--storage mmap runs against the v2 binary cache
                         zero-copy; --shards / --mem-budget sweep the graph
-                        out-of-core, one shard resident at a time)
+                        out-of-core with K shards resident at a time —
+                        K workers claim dirty shards off a shared ring;
+                        default min(threads, shards))
   pagerank-nb serve    --graph <src> [--mode frontier|frontier-pcpm]
                        [--epochs N] [--batch N] [--readers N] [--top K]
                        (evolve-query-reconverge loop: random edge batches,
@@ -75,7 +80,7 @@ USAGE:
                        [--scale DIVISOR] [--threads N] [--samples N]
   pagerank-nb bench-ci [--out FILE] [--baseline FILE] [--max-regress F]
                        [--scale DIVISOR] [--threads N] [--samples N]
-                       [--seed-baseline]
+                       [--seed-baseline | --require-baseline]
   pagerank-nb gen      (--all | --dataset NAME) --out DIR [--scale DIVISOR]
   pagerank-nb info     --graph <src>
   pagerank-nb validate --graph <src> [--threads N]

@@ -91,6 +91,18 @@ const MODE_UNSET: u8 = 2;
 /// makes the three discovery modes interchangeable: they may differ in how
 /// the snapshot is *found* (scan vs pop) but never in which vertices it
 /// contains or in what order they are gathered.
+///
+/// **Concurrency contract.** `sweep(tid, …)` may be called from different
+/// threads *concurrently for distinct `tid`s* — this is how both the
+/// non-blocking driver (one worker per partition) and the parallel
+/// out-of-core coordinator (K workers claiming disjoint shards,
+/// [`crate::engine::ooc`]) share one kernel. Everything a sweep touches is
+/// either owned per-`tid` (the scratch buffer behind its own mutex, the
+/// partition's ring, its overflow/mode slots) or lock-free and shared (the
+/// dirty bitmap's claim/drain, `mark` into any partition's ring). Two
+/// concurrent sweeps of the *same* `tid` are serialized by the scratch
+/// mutex but would split the partition's snapshot between them — callers
+/// must not do that, and none do.
 struct FrontierScheduler {
     sched: FrontierSched,
     /// Shared so an external scheduler (the out-of-core coordinator) can
@@ -505,6 +517,15 @@ pub fn warm_pcpm_kernel<'g>(
 /// with [`DirtyFlags::any_in_range`] to decide which shard to sweep next and
 /// when the run has drained, while the kernel drains and re-marks through
 /// the very same bits.
+///
+/// The returned kernel is safe to *share across concurrently sweeping
+/// threads* as long as no two threads gather the same partition index at
+/// once (the scheduler's concurrency contract): `gather(ctx)` writes ranks
+/// and `last_pushed` only inside partition `ctx.tid`'s vertex range, every
+/// cross-partition effect goes through the atomic value stream and the
+/// lock-free bitmap/ring `mark`, and the per-partition scratch is behind
+/// its own mutex. The parallel out-of-core coordinator relies on exactly
+/// this to sweep K disjoint shards at a time through one kernel.
 pub fn warm_pcpm_kernel_shared<'g>(
     g: &'g Csr,
     cfg: &PrConfig,
@@ -836,5 +857,54 @@ mod tests {
         let r = pagerank::run(&g, Variant::Frontier, &c).unwrap();
         assert!(r.converged);
         assert!(r.l1_norm(&sr) < 1e-7, "l1 {}", r.l1_norm(&sr));
+    }
+
+    /// The kernel-sharing contract the parallel out-of-core coordinator
+    /// leans on: one `warm_pcpm_kernel_shared` kernel, gathered concurrently
+    /// by one thread per *distinct* partition, must drain the frontier and
+    /// land on the sequential fixed point — no lost marks, no torn state.
+    #[test]
+    fn shared_kernel_survives_concurrent_disjoint_sweeps() {
+        use super::warm_pcpm_kernel_shared;
+        use crate::coordinator::metrics::RunMetrics;
+        use crate::engine::WorkerCtx;
+        use crate::graph::Partitions;
+        use crate::sync::dirty::DirtyFlags;
+        use std::sync::Arc;
+
+        let g = synthetic::web_replica(900, 5, 33);
+        let c = cfg(4);
+        let (sr, _, _) = seq::solve(&g, &c);
+        let n = g.num_vertices();
+        let shards = 4usize;
+        let parts = Partitions::new(&g, shards, c.partition);
+        let dirty = Arc::new(DirtyFlags::new_set(n));
+        let warm = vec![1.0 / n as f64; n];
+        let kernel =
+            warm_pcpm_kernel_shared(&g, &c, &parts, &warm, Arc::clone(&dirty)).unwrap();
+        let metrics = RunMetrics::new(shards);
+        let mut converged = false;
+        for _ in 0..c.max_iterations {
+            // one rotation: every shard swept concurrently, then a
+            // quiescent probe (no sweep in flight once the scope joins)
+            std::thread::scope(|s| {
+                for tid in 0..shards {
+                    let kernel = &kernel;
+                    let metrics = &metrics;
+                    s.spawn(move || {
+                        kernel.gather(&WorkerCtx { tid, metrics });
+                    });
+                }
+            });
+            if dirty.count_set() == 0 {
+                converged = true;
+                break;
+            }
+        }
+        assert!(converged, "concurrent disjoint sweeps must drain the frontier");
+        let ranks = kernel.ranks();
+        let l1: f64 = ranks.iter().zip(&sr).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 < 1e-7, "l1 vs sequential {l1}");
+        assert!(metrics.total_gathered() > 0);
     }
 }

@@ -5,37 +5,70 @@
 //! every sweep into a page-fault storm with no locality: `p` workers touch
 //! `p` disjoint vertex ranges *concurrently*, so the page cache thrashes
 //! across the whole file. This module trades that for a classic
-//! semi-external schedule in the spirit of GraphChi's shards (Kyrola et al.,
-//! OSDI'12) built from pieces the engine already has:
+//! semi-external schedule in the spirit of GraphChi's parallel sliding
+//! windows (Kyrola et al., OSDI'12) built from pieces the engine already
+//! has:
 //!
 //! * **storage** — the CSR arrays stay on disk in the v2 binary cache and
 //!   are borrowed zero-copy through [`crate::graph::io::map_binary`]; the
 //!   OS pages a shard's slice of the arrays in as the sweep streams it and
 //!   can evict cold shards under pressure (`MAP_PRIVATE` read-only, so
-//!   nothing is ever written back); while one shard gathers, the
-//!   coordinator issues a `madvise(MADV_WILLNEED)` read-ahead
-//!   ([`Csr::prefetch_vertex_range`]) for the *next dirty* shard so its
-//!   page-ins overlap with compute;
+//!   nothing is ever written back); while resident shards gather, the
+//!   coordinator issues `madvise(MADV_WILLNEED)` read-ahead
+//!   ([`Csr::prefetch_vertex_range`]) for the shards about to be claimed so
+//!   their page-ins overlap with compute;
 //! * **compute** — vertices are split into `S` contiguous shards by the
-//!   standard [`Partitions`] policies, and the coordinator rotates through
-//!   them *one at a time* on the calling thread, replaying each shard
-//!   through the [`FrontierPcpm`](crate::pagerank::Variant::FrontierPcpm)
-//!   kernel's gather: contributions are read from the compressed
+//!   standard [`Partitions`] policies and replayed through the
+//!   [`FrontierPcpm`](crate::pagerank::Variant::FrontierPcpm) kernel's
+//!   gather: contributions are read from the compressed
 //!   [`CompressedBins`](crate::graph::CompressedBins) value stream (dense,
 //!   grouped by destination partition — sequential page-ins), and changed
-//!   vertices push back through the same stream;
+//!   vertices push back through the same stream. With `--ooc-workers 1`
+//!   (the default of [`run_sharded`]) the coordinator rotates shards *one
+//!   at a time* on the calling thread; with `K > 1`
+//!   ([`run_sharded_workers`]) K workers claim dirty shards from a shared
+//!   [`WorkList`] ring and sweep them concurrently — cross-shard writes
+//!   already flow through the atomic value stream and the lock-free dirty
+//!   bitmap, and each worker's sweep stays inside its claimed shard's
+//!   vertex range (see the concurrency contract on
+//!   [`warm_pcpm_kernel_shared`]);
 //! * **scheduling** — the kernel's dirty bitmap is shared with the
 //!   coordinator ([`warm_pcpm_kernel_shared`]), whose non-destructive
 //!   [`DirtyFlags::any_in_range`] probe skips shards with no pending work
-//!   entirely — they are never paged in. The run terminates when a full
-//!   rotation leaves the bitmap empty.
+//!   entirely — they are never paged in. A *rotation* is one full pass over
+//!   the shards; between rotations no sweep is in flight (a sense-reversing
+//!   barrier closes each rotation), so the probe pass is exact and the run
+//!   terminates when it finds the bitmap empty — the same
+//!   calm-observation-with-no-writers-in-flight reasoning the non-blocking
+//!   driver's confirmation sweeps implement, collapsed to one observation
+//!   because the barrier removes the in-flight writers.
 //!
-//! Because exactly one shard is active at a time, the resident working set
-//! is one shard's arrays plus the O(n) rank/value vectors, not the whole
-//! edge set — that is what `--mem-budget` sizes the shard count against
-//! ([`shards_for_budget`]). The schedule is sequential over shards, so the
-//! result is deterministic for a fixed shard count and matches the paper's
-//! fixed point to the same delta-bounded accuracy as the frontier family
+//! The parallel rotation (`K > 1`) looks like this:
+//!
+//! ```text
+//!   coordinator                    claim ring              K workers
+//!   ───────────                    ──────────              ─────────
+//!   probe shards 0..S              ┌───────────┐
+//!   (any_in_range; skip clean) ──▶ │ 2 5 6 9 … │ ◀── pop: claim shard
+//!   advise first K shards          └───────────┘         advise shard K
+//!   (MADV_WILLNEED)                                       ahead of claim
+//!        │                                                sweep shard
+//!        ├───────── barrier: rotation starts ───────────────┤
+//!        │                                                  │
+//!        ├───────── barrier: ring drained, sweeps done ─────┤
+//!   bitmap empty? ── yes ─▶ converged
+//!        └── no: next rotation
+//! ```
+//!
+//! Exactly `K` shards are being swept at any instant and at most `K` more
+//! are being advised in, so the resident working set is `≤ K` shards'
+//! arrays (plus read-ahead) and the O(n) rank/value vectors — that is what
+//! `--mem-budget` sizes the shard count against: [`shards_for_budget`]
+//! divides the budget by `K` so K resident shards still fit. The `K = 1`
+//! schedule is sequential over shards and therefore deterministic for a
+//! fixed shard count (bit-identical across runs and storage backends,
+//! pinned by tests); `K > 1` interleaves shard sweeps nondeterministically
+//! but stays within the same delta-bounded envelope as the frontier family
 //! (the equivalence test pins L1 ≤ 1e-6 against Barrier).
 
 use crate::coordinator::metrics::RunMetrics;
@@ -43,43 +76,100 @@ use crate::engine::frontier::warm_pcpm_kernel_shared;
 use crate::engine::WorkerCtx;
 use crate::graph::{Csr, Partitions};
 use crate::pagerank::{PrConfig, PrResult, Variant};
+use crate::sync::barrier::SenseBarrier;
 use crate::sync::dirty::DirtyFlags;
-use anyhow::{ensure, Result};
-use std::sync::Arc;
+use crate::sync::worklist::WorkList;
+use anyhow::{bail, ensure, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// Derive a shard count from a memory budget: enough shards that one
-/// shard's slice of the CSR arrays fits the budget. The O(n) resident state
-/// (ranks, last-pushed, value stream) is not shardable — it stays in RAM
-/// regardless — so the budget only has to cover the edge-heavy arrays,
-/// which is exactly what sharding divides. Clamped to `[1, n]`.
-pub fn shards_for_budget(g: &Csr, mem_budget_bytes: u64) -> usize {
+/// Derive a shard count from a memory budget: enough shards that the
+/// `workers` concurrently-resident shards' slices of the CSR arrays fit the
+/// budget together. The O(n) resident state (ranks, last-pushed, value
+/// stream) is not shardable — it stays in RAM regardless — so the budget
+/// only has to cover the edge-heavy arrays, which is exactly what sharding
+/// divides.
+///
+/// A zero budget means "no budget": the graph stays in one shard (the CLI
+/// rejects `--mem-budget 0` before it gets here). Errors when the budget
+/// cannot hold even one average shard at the finest sharding (one vertex
+/// per shard) — silently clamping there would hand back a schedule that
+/// blows the budget on every rotation.
+pub fn shards_for_budget(g: &Csr, mem_budget_bytes: u64, workers: usize) -> Result<usize> {
     let n = g.num_vertices();
     if n == 0 || mem_budget_bytes == 0 {
-        return 1;
+        return Ok(1);
     }
-    let per_shard_target = mem_budget_bytes.max(1);
-    let shards = g.memory_bytes().div_ceil(per_shard_target).max(1);
-    usize::try_from(shards).unwrap_or(n).min(n)
+    let workers = workers.max(1) as u64;
+    let total = g.memory_bytes();
+    // K shards are resident at once, so each may use budget / K.
+    let per_shard_budget = mem_budget_bytes / workers;
+    ensure!(
+        per_shard_budget > 0,
+        "--mem-budget of {mem_budget_bytes} bytes split across {workers} \
+         resident shard(s) leaves no room per shard — raise --mem-budget or \
+         lower --ooc-workers"
+    );
+    let shards = total.div_ceil(per_shard_budget).max(1);
+    if shards > n as u64 {
+        bail!(
+            "--mem-budget too small: {per_shard_budget} bytes per resident \
+             shard ({mem_budget_bytes} across {workers} worker(s)) cannot hold \
+             one shard of this graph even at one vertex per shard \
+             (~{} bytes each) — raise --mem-budget or lower --ooc-workers",
+            total.div_ceil(n as u64).max(1)
+        );
+    }
+    Ok(shards as usize)
 }
 
-/// Run PageRank out-of-core: `shards` vertex ranges swept one at a time on
-/// the calling thread through the frontier-PCPM kernel, clean shards
-/// skipped via the shared dirty bitmap. Works on any [`Csr`] but is built
-/// for mapped ones ([`Csr::is_mapped`]) — an owned graph gains nothing from
-/// the rotation except the skip telemetry.
+/// Run PageRank out-of-core with the sequential rotation: `shards` vertex
+/// ranges swept one at a time on the calling thread through the
+/// frontier-PCPM kernel, clean shards skipped via the shared dirty bitmap.
+/// Works on any [`Csr`] but is built for mapped ones ([`Csr::is_mapped`]) —
+/// an owned graph gains nothing from the rotation except the skip
+/// telemetry.
 ///
-/// `cfg.threads` is ignored (the coordinator is single-threaded by design —
-/// one shard resident at a time *is* the memory bound); `cfg.max_iterations`
-/// caps full rotations.
+/// Equivalent to [`run_sharded_workers`] with one worker — and kept
+/// bit-identical to it (the tests pin this), so `--ooc-workers 1` *is* the
+/// deterministic schedule this function has always produced.
+/// `cfg.max_iterations` caps full rotations.
 pub fn run_sharded(g: &Csr, cfg: &PrConfig, shards: usize) -> Result<PrResult> {
+    run_sharded_workers(g, cfg, shards, 1)
+}
+
+/// Run PageRank out-of-core with `workers` parallel shard sweeps
+/// (`--ooc-workers K`).
+///
+/// Per rotation the coordinator probes every shard with the non-destructive
+/// [`DirtyFlags::any_in_range`], pushes the dirty ones (ascending) onto a
+/// shared [`WorkList`] claim ring, and advises the first K in
+/// (`madvise(MADV_WILLNEED)`); the K workers then pop shard ids until the
+/// ring drains, each advising the shard K claims ahead before sweeping its
+/// own through the kernel's gather. A sense-reversing barrier closes the
+/// rotation, so the coordinator's empty-bitmap convergence probe never
+/// races an in-flight sweep. `workers` is clamped to the shard count
+/// (more workers than shards cannot claim anything); `workers == 1` takes
+/// the sequential rotation path of [`run_sharded`], bit for bit.
+///
+/// `cfg.threads` is ignored — out-of-core parallelism is `workers`, sized
+/// by the memory budget, not by `--threads`.
+pub fn run_sharded_workers(
+    g: &Csr,
+    cfg: &PrConfig,
+    shards: usize,
+    workers: usize,
+) -> Result<PrResult> {
     cfg.validate()?;
     ensure!(shards >= 1, "need at least one shard");
+    ensure!(workers >= 1, "need at least one out-of-core worker");
     let n = g.num_vertices();
     if n == 0 {
         return Ok(PrResult::empty(Variant::FrontierPcpm, shards));
     }
     let shards = shards.min(n);
+    let workers = workers.min(shards);
     let parts = Partitions::new(g, shards, cfg.partition);
     let dirty = Arc::new(DirtyFlags::new_set(n));
     let warm = vec![1.0 / n as f64; n];
@@ -90,34 +180,145 @@ pub fn run_sharded(g: &Csr, cfg: &PrConfig, shards: usize) -> Result<PrResult> {
     let metrics = RunMetrics::new(shards);
     let mut converged = false;
     let mut skipped_shards = 0u64;
-    for _rotation in 0..cfg.max_iterations {
-        for shard in 0..shards {
-            if !dirty.any_in_range(parts.range(shard)) {
-                // nothing pending: the shard's pages are never touched
-                skipped_shards += 1;
-                continue;
+    if workers == 1 {
+        // Sequential rotation: probe each shard lazily just before its slot
+        // in the pass, so work marked by an *earlier* sweep of the same
+        // rotation is still picked up this rotation. This is the historical
+        // deterministic schedule `--ooc-workers 1` promises to preserve.
+        for _rotation in 0..cfg.max_iterations {
+            for shard in 0..shards {
+                if !dirty.any_in_range(parts.range(shard)) {
+                    // nothing pending: the shard's pages are never touched
+                    skipped_shards += 1;
+                    continue;
+                }
+                // Read-ahead: while this shard gathers, the kernel can
+                // stream in the pages of the *next dirty* shard
+                // (`madvise(MADV_WILLNEED)` under the hood — a no-op on
+                // owned graphs). Probe-gated, so a clean shard is never
+                // advised in.
+                if let Some(next) =
+                    (shard + 1..shards).find(|&s| dirty.any_in_range(parts.range(s)))
+                {
+                    g.prefetch_vertex_range(parts.range(next));
+                }
+                kernel.gather(&WorkerCtx { tid: shard, metrics: &metrics });
+                metrics.bump_iteration(shard);
             }
-            // Read-ahead: while this shard gathers, the kernel can stream
-            // in the pages of the *next dirty* shard
-            // (`madvise(MADV_WILLNEED)` under the hood — a no-op on owned
-            // graphs). Probe-gated, so a clean shard is never advised in.
-            if let Some(next) =
-                (shard + 1..shards).find(|&s| dirty.any_in_range(parts.range(s)))
-            {
-                g.prefetch_vertex_range(parts.range(next));
+            // Single-threaded schedule: after a rotation no sweep is in
+            // flight, so an empty bitmap is definitive — every vertex has
+            // absorbed every push, and nothing moved enough to push again.
+            if dirty.count_set() == 0 {
+                converged = true;
+                break;
             }
-            kernel.gather(&WorkerCtx { tid: shard, metrics: &metrics });
-            metrics.bump_iteration(shard);
         }
-        // Single-threaded schedule: after a rotation no sweep is in flight,
-        // so an empty bitmap is definitive — every vertex has absorbed
-        // every push, and nothing moved enough to push again. No
-        // confirmation sweeps needed (those exist to close the concurrent
-        // mark-vs-drain window in the multi-worker driver).
-        if dirty.count_set() == 0 {
-            converged = true;
-            break;
-        }
+    } else {
+        // Parallel rotation: claim ring + per-rotation barrier (see the
+        // module diagram). The ring is sized to hold every shard, so a
+        // rotation's fill can never overflow it.
+        let queue = WorkList::with_capacity(shards);
+        // This rotation's dirty shards, ascending — read by workers only
+        // for the prefetch lookahead. Refilled by the coordinator while the
+        // workers sit at the rotation barrier, so the lock is uncontended.
+        let order: Mutex<Vec<u32>> = Mutex::new(Vec::with_capacity(shards));
+        let claims = AtomicUsize::new(0);
+        let done = AtomicBool::new(false);
+        let barrier = SenseBarrier::new(workers + 1);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let queue = &queue;
+                let order = &order;
+                let claims = &claims;
+                let done = &done;
+                let barrier = &barrier;
+                let kernel = &kernel;
+                let metrics = &metrics;
+                let parts = &parts;
+                scope.spawn(move || {
+                    // A worker that unwinds mid-sweep would leave the
+                    // coordinator spinning at the barrier forever; abort it
+                    // so everyone unblocks and the scope can propagate the
+                    // panic.
+                    let _guard = AbortOnPanic(barrier);
+                    let mut waiter = barrier.waiter();
+                    loop {
+                        if waiter.wait().is_aborted() || done.load(Ordering::Acquire) {
+                            return;
+                        }
+                        while let Some(shard) = queue.pop() {
+                            let claim = claims.fetch_add(1, Ordering::Relaxed);
+                            // Read-ahead for the shard `workers` claims
+                            // ahead of this one: by the time a worker gets
+                            // to it, its page-ins have overlapped with the
+                            // `workers` sweeps in between.
+                            if let Some(&ahead) =
+                                order.lock().unwrap().get(claim + workers)
+                            {
+                                g.prefetch_vertex_range(parts.range(ahead as usize));
+                            }
+                            let shard = shard as usize;
+                            kernel.gather(&WorkerCtx { tid: shard, metrics });
+                            metrics.bump_iteration(shard);
+                        }
+                        if waiter.wait().is_aborted() {
+                            return;
+                        }
+                    }
+                });
+            }
+            let mut waiter = barrier.waiter();
+            for _rotation in 0..cfg.max_iterations {
+                {
+                    // Workers are parked at the rotation barrier here: the
+                    // probe pass sees a quiescent bitmap and the ring/order
+                    // refill cannot race a pop.
+                    let mut order = order.lock().unwrap();
+                    order.clear();
+                    for shard in 0..shards {
+                        if dirty.any_in_range(parts.range(shard)) {
+                            order.push(shard as u32);
+                        } else {
+                            skipped_shards += 1;
+                        }
+                    }
+                    claims.store(0, Ordering::Relaxed);
+                    for &shard in order.iter() {
+                        let pushed = queue.push(shard);
+                        debug_assert!(pushed, "claim ring sized to hold every shard");
+                    }
+                    // Warm the first claim window before the rotation
+                    // starts; workers keep the window K ahead from here.
+                    for &shard in order.iter().take(workers) {
+                        g.prefetch_vertex_range(parts.range(shard as usize));
+                    }
+                    if order.is_empty() {
+                        converged = true;
+                    }
+                }
+                if converged {
+                    break;
+                }
+                if waiter.wait().is_aborted() {
+                    break; // a worker panicked; the scope will re-raise
+                }
+                if waiter.wait().is_aborted() {
+                    break;
+                }
+                // Rotation closed: no sweep in flight, so an empty bitmap
+                // is definitive — one calm observation suffices (the
+                // barrier plays the role of the non-blocking driver's
+                // confirmation sweeps).
+                if dirty.count_set() == 0 {
+                    converged = true;
+                    break;
+                }
+            }
+            done.store(true, Ordering::Release);
+            // Release the workers parked at the rotation barrier so they
+            // observe `done` and exit; under abort this is a no-op wait.
+            waiter.wait();
+        });
     }
     metrics.add_skipped(0, skipped_shards);
     let (frontier_switches, worklist_peak) = kernel.frontier_stats();
@@ -136,6 +337,20 @@ pub fn run_sharded(g: &Csr, cfg: &PrConfig, shards: usize) -> Result<PrResult> {
     })
 }
 
+/// Aborts the rotation barrier when the holding thread unwinds, so a
+/// panicking worker cannot strand its peers (they all observe
+/// `BarrierWait::Aborted` and return, letting the scope propagate the
+/// original panic).
+struct AbortOnPanic<'b>(&'b SenseBarrier);
+
+impl Drop for AbortOnPanic<'_> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.abort();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -144,6 +359,37 @@ mod tests {
 
     fn cfg() -> PrConfig {
         PrConfig { threshold: 1e-12, ..PrConfig::default() }
+    }
+
+    /// The pre-parallel sequential schedule, spelled out by hand: lazy
+    /// per-shard probe, next-dirty prefetch, empty-bitmap convergence
+    /// check after each full rotation. [`run_sharded`] (and
+    /// [`run_sharded_workers`] at K=1) must reproduce it bit for bit —
+    /// this is the reference the determinism property test compares
+    /// against, independent of the claim-ring machinery.
+    fn reference_sequential_ranks(g: &Csr, cfg: &PrConfig, shards: usize) -> (Vec<f64>, bool) {
+        let n = g.num_vertices();
+        let shards = shards.min(n).max(1);
+        let parts = Partitions::new(g, shards, cfg.partition);
+        let dirty = Arc::new(DirtyFlags::new_set(n));
+        let warm = vec![1.0 / n as f64; n];
+        let kernel =
+            warm_pcpm_kernel_shared(g, cfg, &parts, &warm, Arc::clone(&dirty)).unwrap();
+        let metrics = RunMetrics::new(shards);
+        let mut converged = false;
+        for _ in 0..cfg.max_iterations {
+            for shard in 0..shards {
+                if !dirty.any_in_range(parts.range(shard)) {
+                    continue;
+                }
+                kernel.gather(&WorkerCtx { tid: shard, metrics: &metrics });
+            }
+            if dirty.count_set() == 0 {
+                converged = true;
+                break;
+            }
+        }
+        (kernel.ranks(), converged)
     }
 
     #[test]
@@ -163,6 +409,75 @@ mod tests {
                 assert!(l1 < 1e-7, "{} shards={shards}: l1 {l1}", g.name);
             }
         }
+    }
+
+    #[test]
+    fn parallel_workers_match_sequential_across_worker_counts() {
+        let c = cfg();
+        for g in [
+            synthetic::cycle(60),
+            synthetic::chain(120),
+            synthetic::web_replica(800, 6, 11),
+        ] {
+            let (sr, _, _) = seq::solve(&g, &c);
+            for (shards, workers) in [(4usize, 2usize), (8, 4), (8, 3)] {
+                let r = run_sharded_workers(&g, &c, shards, workers).unwrap();
+                assert!(r.converged, "{} s={shards} k={workers}", g.name);
+                let l1 = r.l1_norm(&sr);
+                assert!(l1 < 1e-7, "{} s={shards} k={workers}: l1 {l1}", g.name);
+                assert!(r.vertex_updates > 0, "{} parallel path uninstrumented", g.name);
+            }
+        }
+    }
+
+    #[test]
+    fn one_worker_is_bitwise_identical_to_the_sequential_schedule() {
+        // The determinism pin, on owned AND mapped storage: K=1 through the
+        // public entry points must equal the hand-rolled pre-parallel
+        // rotation bit for bit, across shard counts and graph shapes.
+        let dir = std::env::temp_dir().join("pagerank_nb_ooc_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let c = cfg();
+        for (i, g) in [
+            synthetic::web_replica(700, 5, 23),
+            synthetic::chain(200),
+            synthetic::star(90),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let p = dir.join(format!("seq-ref-{}-{i}.bin", std::process::id()));
+            io::save_binary(g, &p).unwrap();
+            let mapped = io::map_binary(&p).unwrap();
+            assert!(mapped.is_mapped());
+            for shards in [1usize, 3, 5] {
+                let (reference, ref_conv) = reference_sequential_ranks(g, &c, shards);
+                for storage in [g, &mapped] {
+                    let a = run_sharded(storage, &c, shards).unwrap();
+                    let b = run_sharded_workers(storage, &c, shards, 1).unwrap();
+                    assert_eq!(a.ranks, reference, "{} shards={shards}", g.name);
+                    assert_eq!(b.ranks, reference, "{} shards={shards} (K=1)", g.name);
+                    assert_eq!(a.converged, ref_conv);
+                    assert_eq!(b.converged, ref_conv);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_clamps_to_shard_count() {
+        // More workers than shards: clamped (surplus workers could never
+        // claim anything), still converges to the right fixed point.
+        let g = synthetic::web_replica(500, 5, 7);
+        let c = cfg();
+        let (sr, _, _) = seq::solve(&g, &c);
+        let r = run_sharded_workers(&g, &c, 3, 64).unwrap();
+        assert!(r.converged);
+        assert!(r.l1_norm(&sr) < 1e-7);
+        // and a clamp all the way to one worker is the sequential schedule
+        let clamped = run_sharded_workers(&g, &c, 1, 8).unwrap();
+        let seq_run = run_sharded(&g, &c, 1).unwrap();
+        assert_eq!(clamped.ranks, seq_run.ranks, "K clamped to 1 shard must be sequential");
     }
 
     #[test]
@@ -190,6 +505,12 @@ mod tests {
         assert!(r.converged);
         assert!(r.ranks.is_empty());
         assert!(run_sharded(&g, &cfg(), 0).is_err(), "zero shards rejected");
+        assert!(
+            run_sharded_workers(&g, &cfg(), 4, 0).is_err(),
+            "zero workers rejected"
+        );
+        let empty_par = run_sharded_workers(&g, &cfg(), 4, 4).unwrap();
+        assert!(empty_par.converged && empty_par.ranks.is_empty());
         // more shards than vertices: clamped, still correct
         let g = synthetic::cycle(3);
         let r = run_sharded(&g, &cfg(), 64).unwrap();
@@ -208,34 +529,72 @@ mod tests {
         let edges: Vec<(u32, u32)> = (0..30u32).map(|i| (i + 1, i)).collect();
         let g = GraphBuilder::new(400).edges(&edges).build("rev-chain");
         let c = cfg();
-        let r = run_sharded(&g, &c, 8).unwrap();
-        assert!(r.converged);
-        let rotations = r.iterations;
-        assert!(rotations > 3, "fixture must need several rotations, got {rotations}");
-        for (shard, &sweeps) in r.per_thread_iterations.iter().enumerate().skip(1) {
-            assert!(
-                sweeps <= 1,
-                "shard {shard} swept {sweeps} times — clean shards must be skipped"
-            );
+        for r in [
+            run_sharded(&g, &c, 8).unwrap(),
+            run_sharded_workers(&g, &c, 8, 4).unwrap(),
+        ] {
+            assert!(r.converged);
+            let rotations = r.iterations;
+            assert!(rotations > 3, "fixture must need several rotations, got {rotations}");
+            for (shard, &sweeps) in r.per_thread_iterations.iter().enumerate().skip(1) {
+                assert!(
+                    sweeps <= 1,
+                    "shard {shard} swept {sweeps} times — clean shards must be skipped"
+                );
+            }
+            let (sr, _, _) = seq::solve(&g, &c);
+            assert!(r.l1_norm(&sr) < 1e-7);
         }
-        let (sr, _, _) = seq::solve(&g, &c);
-        assert!(r.l1_norm(&sr) < 1e-7);
     }
 
     #[test]
     fn budget_derivation_is_monotone_and_clamped() {
         let g = synthetic::web_replica(2000, 6, 17);
         let bytes = g.memory_bytes();
-        assert_eq!(shards_for_budget(&g, bytes), 1, "whole graph fits");
-        assert_eq!(shards_for_budget(&g, bytes * 2), 1);
-        let half = shards_for_budget(&g, bytes / 2);
-        let quarter = shards_for_budget(&g, bytes / 4);
+        assert_eq!(shards_for_budget(&g, bytes, 1).unwrap(), 1, "whole graph fits");
+        assert_eq!(shards_for_budget(&g, bytes * 2, 1).unwrap(), 1);
+        let half = shards_for_budget(&g, bytes / 2, 1).unwrap();
+        let quarter = shards_for_budget(&g, bytes / 4, 1).unwrap();
         assert!(half >= 2, "half budget must shard: {half}");
         assert!(quarter >= half, "smaller budget, more shards");
-        assert_eq!(shards_for_budget(&g, 0), 1, "zero budget is clamped");
-        assert!(shards_for_budget(&g, 1) <= g.num_vertices(), "clamped to n");
+        assert_eq!(shards_for_budget(&g, 0, 1).unwrap(), 1, "zero budget means no budget");
         let empty = GraphBuilder::new(0).build("nil");
-        assert_eq!(shards_for_budget(&empty, 1024), 1);
+        assert_eq!(shards_for_budget(&empty, 1024, 4).unwrap(), 1);
+    }
+
+    #[test]
+    fn budget_is_divided_across_resident_workers() {
+        // K resident shards must fit the same budget together, so the
+        // derived shard count scales with K: twice the workers, (at least)
+        // twice the shards for a budget the whole graph fits in once.
+        let g = synthetic::web_replica(2000, 6, 17);
+        let bytes = g.memory_bytes();
+        let k1 = shards_for_budget(&g, bytes, 1).unwrap();
+        let k2 = shards_for_budget(&g, bytes, 2).unwrap();
+        let k4 = shards_for_budget(&g, bytes, 4).unwrap();
+        assert_eq!(k1, 1);
+        assert!(k2 >= 2, "two resident shards must halve the shard size: {k2}");
+        assert!(k4 >= k2, "more workers, finer shards: {k4} vs {k2}");
+        // worker count never changes the "no budget" escape hatch
+        assert_eq!(shards_for_budget(&g, 0, 4).unwrap(), 1);
+    }
+
+    #[test]
+    fn budget_below_one_shard_errors_with_a_hint() {
+        let g = synthetic::web_replica(2000, 6, 17);
+        // One byte per resident shard cannot hold even single-vertex shards.
+        let err = shards_for_budget(&g, 1, 1).unwrap_err().to_string();
+        assert!(err.contains("--mem-budget"), "hint names the budget flag: {err}");
+        assert!(err.contains("--ooc-workers"), "hint names the worker flag: {err}");
+        // A budget that fits sequentially can stop fitting once it is split
+        // across workers — the error must surface rather than clamp.
+        let per_vertex = g.memory_bytes().div_ceil(g.num_vertices() as u64);
+        assert!(shards_for_budget(&g, per_vertex * 2, 1).is_ok());
+        let split = shards_for_budget(&g, per_vertex * 2, 64);
+        assert!(split.is_err(), "64-way split of a 2-vertex budget must error");
+        // workers so large the integer division zeroes the per-shard budget
+        let zeroed = shards_for_budget(&g, 3, 8).unwrap_err().to_string();
+        assert!(zeroed.contains("no room"), "{zeroed}");
     }
 
     #[test]
@@ -245,5 +604,8 @@ mod tests {
         let r = run_sharded(&g, &c, 4).unwrap();
         assert!(!r.converged);
         assert!(r.iterations <= 2);
+        let rp = run_sharded_workers(&g, &c, 4, 2).unwrap();
+        assert!(!rp.converged, "parallel rotation cap must also report unconverged");
+        assert!(rp.iterations <= 2);
     }
 }

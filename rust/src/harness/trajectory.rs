@@ -10,8 +10,9 @@
 //! batch, see [`crate::engine::incremental`]), and the out-of-core rows
 //! (`OOC-mem-s4`, `OOC-mmap-s1`, `OOC-mmap-s4`: the shard coordinator of
 //! [`crate::engine::ooc`] over in-memory vs mmap-backed storage, isolating
-//! rotation overhead from storage cost) — on the scaled-down CI
-//! datasets, writes a
+//! rotation overhead from storage cost; `OOC-par-k2`, `OOC-par-k4`: the
+//! same mmap 4-shard schedule swept by 2/4 parallel claim-ring workers) —
+//! on the scaled-down CI datasets, writes a
 //! `BENCH_ci.json` report (per-variant wall time, normalized time,
 //! iteration count, vertex updates), and —
 //! given a committed baseline — fails when a variant regresses beyond the
@@ -340,10 +341,13 @@ pub fn run_ci_bench(
         // Out-of-core ablation rows: the same graph swept through the
         // shard coordinator. `OOC-mem-s4` isolates the rotation overhead
         // (owned storage, 4 shards); `OOC-mmap-s1` isolates the mmap
-        // storage cost (no sharding); `OOC-mmap-s4` is the full
-        // out-of-core path. The v2 cache is written and mapped once
-        // outside the timed closure — materializing it is a gen-step
-        // cost, not a per-run one.
+        // storage cost (no sharding); `OOC-mmap-s4` is the full sequential
+        // out-of-core path; `OOC-par-k2`/`OOC-par-k4` sweep the same
+        // 4-shard mmap schedule with 2 and 4 claim-ring workers — the rows
+        // that show parallel shard sweeps beating the sequential rotation
+        // wall-clock. The v2 cache is written and mapped once outside the
+        // timed closure — materializing it is a gen-step cost, not a
+        // per-run one.
         {
             let dir = std::env::temp_dir().join("pagerank_nb_bench_ci");
             std::fs::create_dir_all(&dir)
@@ -351,16 +355,20 @@ pub fn run_ci_bench(
             let spill = dir.join(format!("{name}-{}.bin", std::process::id()));
             crate::graph::io::save_binary(&g, &spill)?;
             let mapped = crate::graph::io::map_binary(&spill)?;
-            let ooc_rows: [(&str, &Csr, usize); 3] = [
-                ("OOC-mem-s4", &g, 4),
-                ("OOC-mmap-s1", &mapped, 1),
-                ("OOC-mmap-s4", &mapped, 4),
+            let ooc_rows: [(&str, &Csr, usize, usize); 5] = [
+                ("OOC-mem-s4", &g, 4, 1),
+                ("OOC-mmap-s1", &mapped, 1, 1),
+                ("OOC-mmap-s4", &mapped, 4, 1),
+                ("OOC-par-k2", &mapped, 4, 2),
+                ("OOC-par-k4", &mapped, 4, 4),
             ];
-            for (label, graph, shards) in ooc_rows {
+            for (label, graph, shards, workers) in ooc_rows {
                 let mut any_dnf = false;
                 let (m, probe) = runner.measure_with(label, || {
-                    let r = crate::engine::ooc::run_sharded(graph, &cfg, shards)
-                        .expect("out-of-core run");
+                    let r = crate::engine::ooc::run_sharded_workers(
+                        graph, &cfg, shards, workers,
+                    )
+                    .expect("out-of-core run");
                     any_dnf |= r.dnf;
                     (r.elapsed.as_secs_f64(), r)
                 });
@@ -717,8 +725,9 @@ mod tests {
         let r = tiny_report();
         // every engine mode plus the three layout/batching ablation rows,
         // the two frontier-scheduling rows, the two
-        // incremental-reconvergence rows, and the three out-of-core rows
-        assert_eq!(r.rows.len(), 2 * (Variant::ALL_MODES.len() + 10));
+        // incremental-reconvergence rows, and the five out-of-core rows
+        // (three sequential, two parallel-worker)
+        assert_eq!(r.rows.len(), 2 * (Variant::ALL_MODES.len() + 12));
         for v in Variant::ALL_MODES {
             for ds in ["webStanford", "roaditalyosm"] {
                 let row = r.find(ds, v.name()).unwrap_or_else(|| panic!("{ds}/{v}"));
@@ -736,6 +745,8 @@ mod tests {
             "OOC-mem-s4",
             "OOC-mmap-s1",
             "OOC-mmap-s4",
+            "OOC-par-k2",
+            "OOC-par-k4",
         ] {
             for ds in ["webStanford", "roaditalyosm"] {
                 let row = r.find(ds, label).unwrap_or_else(|| panic!("{ds}/{label}"));
@@ -771,10 +782,19 @@ mod tests {
                 assert!(row.vertex_updates > 0, "{ds}/{label}");
             }
         }
-        // out-of-core rows: deterministic coordinator, so the mmap and
-        // in-memory runs at the same shard count do identical work
+        // out-of-core rows: the sequential (K=1) coordinator is
+        // deterministic, so the mmap and in-memory runs at the same shard
+        // count do identical work; the parallel rows interleave shard
+        // sweeps nondeterministically, so they are only held to settling
+        // with real instrumented work
         for ds in ["webStanford", "roaditalyosm"] {
-            for label in ["OOC-mem-s4", "OOC-mmap-s1", "OOC-mmap-s4"] {
+            for label in [
+                "OOC-mem-s4",
+                "OOC-mmap-s1",
+                "OOC-mmap-s4",
+                "OOC-par-k2",
+                "OOC-par-k4",
+            ] {
                 let row = r.find(ds, label).unwrap();
                 assert!(row.converged, "{ds}/{label}");
                 assert!(row.vertex_updates > 0, "{ds}/{label}");

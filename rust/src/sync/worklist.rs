@@ -284,4 +284,67 @@ mod tests {
         assert_eq!(gathered, n);
         assert_eq!(dirty.count_set(), 0);
     }
+
+    /// The out-of-core claim protocol under stress: per rotation a
+    /// coordinator probes shard ranges with the non-destructive
+    /// `any_in_range`, enqueues the dirty shard ids, and K racing workers
+    /// claim them off the ring and drain their ranges. Every dirty shard
+    /// must be claimed by exactly one worker per rotation and every set bit
+    /// drained exactly once — the exclusivity the parallel shard
+    /// coordinator's correctness rests on (and the race TSan watches for).
+    #[test]
+    fn concurrent_shard_claims_are_exclusive_and_complete() {
+        const SHARDS: usize = 16;
+        const SHARD_LEN: usize = 64;
+        const WORKERS: usize = 4;
+        const ROTATIONS: usize = 50;
+        let n = SHARDS * SHARD_LEN;
+        let range = |s: usize| (s * SHARD_LEN) as VertexId..((s + 1) * SHARD_LEN) as VertexId;
+        let q = WorkList::with_capacity(SHARDS);
+        let dirty = DirtyFlags::new_clear(n);
+        let claims: Vec<AtomicU64> = (0..SHARDS).map(|_| AtomicU64::new(0)).collect();
+        let drained = AtomicUsize::new(0);
+        for _rotation in 0..ROTATIONS {
+            dirty.set_range(0..n as VertexId);
+            drained.store(0, Ordering::Relaxed);
+            let mut queued = 0usize;
+            for s in 0..SHARDS {
+                if dirty.any_in_range(range(s)) {
+                    assert!(q.push(s as VertexId), "ring sized to hold every shard");
+                    queued += 1;
+                }
+            }
+            assert_eq!(queued, SHARDS, "a fully-set bitmap queues every shard");
+            std::thread::scope(|scope| {
+                for _ in 0..WORKERS {
+                    let q = &q;
+                    let dirty = &dirty;
+                    let claims = &claims;
+                    let drained = &drained;
+                    scope.spawn(move || {
+                        while let Some(shard) = q.pop() {
+                            claims[shard as usize].fetch_add(1, Ordering::Relaxed);
+                            let mut bits = 0usize;
+                            dirty.drain_range(range(shard as usize), |_| bits += 1);
+                            drained.fetch_add(bits, Ordering::Relaxed);
+                        }
+                    });
+                }
+            });
+            assert_eq!(
+                drained.load(Ordering::Relaxed),
+                n,
+                "every set bit drained exactly once per rotation"
+            );
+            assert_eq!(dirty.count_set(), 0, "rotation must leave the bitmap empty");
+            assert_eq!(q.pop(), None, "rotation must leave the ring empty");
+        }
+        for (s, c) in claims.iter().enumerate() {
+            assert_eq!(
+                c.load(Ordering::Relaxed),
+                ROTATIONS as u64,
+                "shard {s} must be claimed exactly once per rotation"
+            );
+        }
+    }
 }

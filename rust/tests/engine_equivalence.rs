@@ -236,7 +236,7 @@ fn out_of_core_mmap_sharded_matches_in_memory_barrier() {
 
     // a budget of a quarter of the graph forces a multi-shard schedule
     let budget = g.memory_bytes() / 4;
-    let derived = ooc::shards_for_budget(&mapped, budget);
+    let derived = ooc::shards_for_budget(&mapped, budget, 1).unwrap();
     assert!(derived >= 4, "quarter budget must derive >= 4 shards, got {derived}");
 
     for shards in [4usize, derived] {
@@ -246,6 +246,55 @@ fn out_of_core_mmap_sharded_matches_in_memory_barrier() {
         assert!(l1 < 1e-6, "shards={shards}: L1 vs barrier {l1}");
         assert!(r.vertex_updates > 0, "shards={shards}: coordinator not instrumented");
     }
+}
+
+/// The parallel out-of-core acceptance criterion: `--ooc-workers 4` over a
+/// 4-shard mmap schedule (K workers claiming dirty shards off the shared
+/// ring, sweeps racing through one shared kernel) must stay within 1e-6 L1
+/// of the in-memory Barrier schedule, and `--ooc-workers 1` must stay
+/// bit-identical to the sequential coordinator — the determinism ladder the
+/// tentpole promises.
+#[test]
+fn out_of_core_parallel_workers_match_barrier_and_k1_is_sequential() {
+    use pagerank_nb::engine::ooc;
+    use pagerank_nb::graph::io;
+
+    let g = synthetic::web_replica(4_000, 6, 42);
+    let cfg = PrConfig { threads: 4, threshold: 1e-10, ..PrConfig::default() };
+    let barrier = pagerank::run(&g, Variant::Barrier, &cfg).unwrap();
+    assert!(barrier.converged);
+
+    let dir = std::env::temp_dir().join("pagerank_nb_equiv_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spill = dir.join(format!("ooc-par-{}.bin", std::process::id()));
+    io::save_binary(&g, &spill).unwrap();
+    let mapped = io::map_binary(&spill).unwrap();
+    assert!(mapped.is_mapped());
+
+    // the budget must now hold K resident shards, so the derived shard
+    // count grows with the worker count
+    let budget = g.memory_bytes() / 2;
+    let s1 = ooc::shards_for_budget(&mapped, budget, 1).unwrap();
+    let s4 = ooc::shards_for_budget(&mapped, budget, 4).unwrap();
+    // a half-graph budget is ~2 shards sequentially and ~8 once four must
+    // be resident together (integer division keeps exact 4x off by one)
+    assert!(s4 >= 8 && s4 >= s1 * 2, "4 resident shards must divide the budget: {s1} -> {s4}");
+
+    for workers in [2usize, 4] {
+        let r = ooc::run_sharded_workers(&mapped, &cfg, 4, workers).unwrap();
+        assert!(r.converged, "workers={workers} did not converge");
+        let l1 = r.l1_norm(&barrier.ranks);
+        assert!(l1 < 1e-6, "workers={workers}: L1 vs barrier {l1}");
+        assert!(r.vertex_updates > 0, "workers={workers}: not instrumented");
+    }
+
+    // K=1 through the worker entry point is the sequential schedule, bit
+    // for bit, on mapped storage
+    let seq_run = ooc::run_sharded(&mapped, &cfg, 4).unwrap();
+    let k1 = ooc::run_sharded_workers(&mapped, &cfg, 4, 1).unwrap();
+    assert_eq!(k1.ranks, seq_run.ranks, "K=1 must be bit-identical to sequential");
+    assert_eq!(k1.iterations, seq_run.iterations);
+    assert_eq!(k1.converged, seq_run.converged);
 }
 
 /// The scheduling acceptance criterion: `--frontier-sched worklist|hybrid`

@@ -179,6 +179,13 @@ impl Mmap {
     /// failing syscall is ignored, and heap-backed views (non-unix targets,
     /// zero-length files) are already resident — so this is a no-op
     /// everywhere it cannot help.
+    ///
+    /// Safe to call from any number of threads concurrently (including
+    /// overlapping ranges, and concurrently with reads of the mapped
+    /// bytes): it takes `&self`, touches no mutable state beyond the
+    /// one-time page-size cache, and `madvise(2)` itself only updates
+    /// kernel-side read-ahead bookkeeping — the parallel out-of-core
+    /// coordinator issues these from K workers at once.
     pub fn advise_willneed(&self, offset: usize, len: usize) {
         #[cfg(unix)]
         if let Inner::Mapped { ptr, len: map_len } = self.inner {
@@ -298,6 +305,30 @@ mod tests {
         let p = tmpfile("advise_empty.bin", b"");
         let empty = Mmap::map(&File::open(&p).unwrap()).unwrap();
         empty.advise_willneed(0, 10); // heap-backed fallback: no-op
+    }
+
+    #[test]
+    fn concurrent_advise_from_many_threads_is_safe() {
+        // The parallel out-of-core coordinator has K workers advising
+        // overlapping windows while others read the same pages; the hint
+        // must stay a hint — no crash, no content change, any interleaving.
+        let p = tmpfile("advise_par.bin", &[5u8; 1 << 18]);
+        let m = std::sync::Arc::new(Mmap::map(&File::open(&p).unwrap()).unwrap());
+        std::thread::scope(|s| {
+            for t in 0..8usize {
+                let m = std::sync::Arc::clone(&m);
+                s.spawn(move || {
+                    let chunk = m.len() / 8;
+                    for lap in 0..50 {
+                        // rotate each thread's window so ranges overlap
+                        let start = ((t + lap) % 8) * chunk;
+                        m.advise_willneed(start, chunk * 2);
+                        assert!(m[start..start + chunk].iter().all(|&b| b == 5));
+                    }
+                });
+            }
+        });
+        assert!(m.iter().all(|&b| b == 5), "advice must never disturb contents");
     }
 
     #[test]

@@ -73,6 +73,9 @@ echo "· frontier (NUMA-pinned workers; single-node fallback on laptops/CI)"
 echo "· out-of-core (mmap-backed v2 cache, 4-shard rotation)"
 "$BIN" run --graph "$GRAPH" --storage mmap --shards 4 --top 3
 
+echo "· out-of-core (parallel: 2 claim-ring workers over 4 shards)"
+"$BIN" run --graph "$GRAPH" --storage mmap --shards 4 --ooc-workers 2 --top 3
+
 echo "· out-of-core (shard count derived from a 1 MiB memory budget)"
 "$BIN" run --graph "$GRAPH" --storage mmap --mem-budget 1 --top 3
 
