@@ -459,7 +459,7 @@ pub fn cmd_serve(args: &ArgMap) -> Result<()> {
     use crate::graph::GraphDelta;
     use crate::serving::ServingEngine;
     use crate::util::rng::Xoshiro256pp;
-    use std::sync::atomic::{AtomicBool, Ordering};
+    use crate::sync::shim::atomic::{AtomicBool, Ordering};
 
     let seed = args.get_parsed("seed", 42u64)?;
     let g = load_graph(args.require("graph")?, seed)?;

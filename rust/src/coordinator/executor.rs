@@ -8,7 +8,7 @@
 //! recordable DNF instead of a hung benchmark harness.
 
 use crate::sync::barrier::SenseBarrier;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::shim::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 /// Outcome of a pool run.
@@ -71,7 +71,6 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
 
     #[test]
     fn all_workers_run_with_distinct_ids() {

@@ -5,7 +5,7 @@
 //! module provides the shared counters the workers bump and the harness
 //! reads.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::shim::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 /// One slot per worker thread; counters are relaxed (telemetry only).
@@ -32,12 +32,14 @@ impl RunMetrics {
     /// Count one completed sweep for `thread`.
     #[inline]
     pub fn bump_iteration(&self, thread: usize) {
+        // relaxed: monotonic telemetry counter; readers tolerate staleness
         self.iterations[thread].fetch_add(1, Ordering::Relaxed);
     }
 
     /// Count `count` edges processed by `thread`.
     #[inline]
     pub fn add_edges(&self, thread: usize, count: u64) {
+        // relaxed: monotonic telemetry counter; readers tolerate staleness
         self.edges_processed[thread].fetch_add(count, Ordering::Relaxed);
     }
 
@@ -45,6 +47,7 @@ impl RunMetrics {
     /// convergence savings).
     #[inline]
     pub fn add_skipped(&self, thread: usize, count: u64) {
+        // relaxed: monotonic telemetry counter; readers tolerate staleness
         self.vertices_skipped[thread].fetch_add(count, Ordering::Relaxed);
     }
 
@@ -53,6 +56,7 @@ impl RunMetrics {
     /// [`crate::pagerank::PrResult::vertex_updates`]).
     #[inline]
     pub fn add_gathered(&self, thread: usize, count: u64) {
+        // relaxed: monotonic telemetry counter; readers tolerate staleness
         self.vertices_gathered[thread].fetch_add(count, Ordering::Relaxed);
     }
 
@@ -60,16 +64,19 @@ impl RunMetrics {
     /// uses this to tell an empty frontier sweep from a real one).
     #[inline]
     pub fn gathered_by(&self, thread: usize) -> u64 {
+        // relaxed: monotonic telemetry counter; readers tolerate staleness
         self.vertices_gathered[thread].load(Ordering::Relaxed)
     }
 
     /// Total vertex updates across all threads.
     pub fn total_gathered(&self) -> u64 {
+        // relaxed: monotonic telemetry counter; readers tolerate staleness
         self.vertices_gathered.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
     /// Per-thread sweep counts.
     pub fn iterations_per_thread(&self) -> Vec<u64> {
+        // relaxed: monotonic telemetry counter; readers tolerate staleness
         self.iterations.iter().map(|a| a.load(Ordering::Relaxed)).collect()
     }
 
@@ -80,11 +87,13 @@ impl RunMetrics {
 
     /// Total edges processed across all threads.
     pub fn total_edges(&self) -> u64 {
+        // relaxed: monotonic telemetry counter; readers tolerate staleness
         self.edges_processed.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 
     /// Total perforation-frozen vertices across all threads.
     pub fn total_skipped(&self) -> u64 {
+        // relaxed: monotonic telemetry counter; readers tolerate staleness
         self.vertices_skipped.iter().map(|a| a.load(Ordering::Relaxed)).sum()
     }
 

@@ -35,7 +35,7 @@ use crate::pagerank::{PrConfig, PrResult, Variant};
 use crate::sync::barrier::SenseBarrier;
 use crate::sync::PhaseBarrier;
 use anyhow::{bail, Result};
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::shim::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
 /// Execute a built kernel under its declared [`SyncMode`].

@@ -72,7 +72,7 @@ use crate::sync::atomics::{atomic_vec, atomic_vec_from, snapshot, AtomicF64};
 use crate::sync::dirty::DirtyFlags;
 use crate::sync::WorkList;
 use anyhow::{ensure, Result};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use crate::sync::shim::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// `last_mode` sentinel values for the per-partition switch telemetry.
@@ -164,6 +164,8 @@ impl FrontierScheduler {
         if self.dirty.set(w) && self.sched != FrontierSched::Bitmap {
             let p = self.parts.owner(w);
             if !self.queues[p].push(w) {
+                // relaxed: sticky flag; the AcqRel bitmap set() above is the
+                // publication edge, the flag only biases the next sweep's mode
                 self.overflow[p].store(true, Ordering::Relaxed);
             }
         }
@@ -185,6 +187,8 @@ impl FrontierScheduler {
             // occupancy leaves them untouched.
             let occupancy = q.len();
             let part_len = (range.end - range.start) as usize;
+            // relaxed: mode hint only; a missed flag is recovered by the
+            // empty-batch any_in_range safety net below
             scanned = self.overflow[tid].swap(false, Ordering::Relaxed)
                 || (self.sched == FrontierSched::Hybrid
                     && occupancy * 64 >= part_len.max(1));
@@ -215,6 +219,7 @@ impl FrontierScheduler {
             batch.dedup();
         }
         let mode = if scanned { MODE_SCAN } else { MODE_QUEUE };
+        // relaxed: telemetry only (mode-switch counter)
         if self.last_mode[tid].swap(mode, Ordering::Relaxed) != mode {
             self.switches.fetch_add(1, Ordering::Relaxed);
         }
@@ -228,6 +233,7 @@ impl FrontierScheduler {
     /// includes each partition's initial entry into its first mode.
     fn stats(&self) -> (u64, u64) {
         let peak = self.queues.iter().map(WorkList::peak).max().unwrap_or(0);
+        // relaxed: telemetry only
         (self.switches.load(Ordering::Relaxed), peak)
     }
 }
@@ -307,6 +313,7 @@ impl DeltaTuner {
     }
 
     fn current(&self) -> f64 {
+        // relaxed: any recent cutoff is valid; sweeps read it once
         f64::from_bits(self.delta_bits.load(Ordering::Relaxed))
     }
 
@@ -314,10 +321,13 @@ impl DeltaTuner {
         if !err.is_finite() {
             return;
         }
+        // relaxed: the tuner is a heuristic — a torn-ordering observation at
+        // worst delays one retune step, never affects convergence tests
         let tick = self.calls.fetch_add(1, Ordering::Relaxed);
         if tick % self.period != 0 {
             return;
         }
+        // relaxed: heuristic state only, same contract as `calls` above
         let prev = f64::from_bits(self.prev_err_bits.swap(err.to_bits(), Ordering::Relaxed));
         if !prev.is_finite() || prev <= 0.0 || err <= 0.0 {
             // Zero residuals are confirmation sweeps — nothing to learn.
@@ -329,6 +339,7 @@ impl DeltaTuner {
         } else {
             (cur * 1.25).min(self.hi) // decaying: prune harder
         };
+        // relaxed: see observe() header — heuristic state only
         self.delta_bits.store(next.to_bits(), Ordering::Relaxed);
     }
 }

@@ -38,7 +38,7 @@ use crate::pagerank::{amplify_work, PrConfig};
 use crate::sync::atomics::AtomicF64;
 use crate::sync::cas_cell::{PackedProgress, VersionedCell};
 use crate::sync::snapshot_cells;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::shim::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::{Duration, Instant};
 
 /// Shared state of one wait-free run. Construct with [`HelpingState::new`];

@@ -80,7 +80,7 @@ use crate::sync::barrier::SenseBarrier;
 use crate::sync::dirty::DirtyFlags;
 use crate::sync::worklist::WorkList;
 use anyhow::{bail, ensure, Result};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::shim::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -247,6 +247,8 @@ pub fn run_sharded_workers(
                             return;
                         }
                         while let Some(shard) = queue.pop() {
+                            // relaxed: prefetch-window cursor only; shard
+                            // exclusivity comes from the ring pop itself
                             let claim = claims.fetch_add(1, Ordering::Relaxed);
                             // Read-ahead for the shard `workers` claims
                             // ahead of this one: by the time a worker gets
@@ -282,6 +284,8 @@ pub fn run_sharded_workers(
                             skipped_shards += 1;
                         }
                     }
+                    // relaxed: workers are parked at the barrier (see above),
+                    // so this reset cannot race a fetch_add
                     claims.store(0, Ordering::Relaxed);
                     for &shard in order.iter() {
                         let pushed = queue.push(shard);

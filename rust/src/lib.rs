@@ -40,6 +40,7 @@
 //! frontier/dirty-bitmap data flow, and the incremental/serving layer).
 
 #![warn(missing_docs)]
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod cli;
 pub mod coordinator;

@@ -24,7 +24,7 @@ use crate::pagerank::identical::split_classes;
 use crate::pagerank::{amplify_work, PrConfig};
 use crate::sync::atomics::{atomic_vec, snapshot, AtomicF64};
 use anyhow::Result;
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::sync::shim::atomic::{AtomicBool, Ordering};
 
 /// Vertex-level perforated kernel (Barrier-Opt / No-Sync-Opt).
 pub struct PerforatedKernel<'g> {
@@ -104,6 +104,8 @@ impl Kernel for PerforatedKernel<'_> {
         for u in self.parts.range(ctx.tid) {
             let ui = u as usize;
             // Alg 5 line 6: skip nodes marked converged.
+            // relaxed: freeze flags are monotone hints — a stale read only
+            // delays the skip by one sweep, mirroring the paper's benign races
             if self.frozen[ui].load(Ordering::Relaxed) {
                 skipped += 1;
                 continue;
@@ -120,6 +122,7 @@ impl Kernel for PerforatedKernel<'_> {
             local_err = local_err.max(delta);
             // Alg 5 line 11: freeze nodes with a tiny non-zero delta.
             if delta != 0.0 && delta < self.cutoff {
+                // relaxed: monotone hint, see the load above
                 self.frozen[ui].store(true, Ordering::Relaxed);
             }
         }
@@ -194,6 +197,7 @@ impl Kernel for PerforatedIdenticalKernel<'_> {
         let mut skipped = 0u64;
         let mut gathered = 0u64;
         for c in self.chunks[ctx.tid].clone() {
+            // relaxed: monotone freeze hint (same contract as Alg 5 above)
             if self.frozen[c].load(Ordering::Relaxed) {
                 skipped += self.classes.members[c].len() as u64;
                 continue;
@@ -213,6 +217,7 @@ impl Kernel for PerforatedIdenticalKernel<'_> {
             let delta = (new - previous).abs();
             local_err = local_err.max(delta);
             if delta != 0.0 && delta < self.cutoff {
+                // relaxed: monotone hint, see the load above
                 self.frozen[c].store(true, Ordering::Relaxed);
             }
         }

@@ -23,7 +23,7 @@
 use crate::graph::{Csr, GraphDelta, VertexId};
 use crate::pagerank::{self, PrConfig, PrResult, Variant};
 use anyhow::{bail, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::shim::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
 /// Vertex ids ordered by descending rank. NaN scores (possible in a
@@ -177,18 +177,21 @@ impl RankServer {
 
     /// Point query against the current snapshot.
     pub fn rank(&self, v: VertexId) -> Option<f64> {
+        // relaxed: telemetry counter only
         self.queries.fetch_add(1, Ordering::Relaxed);
         self.snapshot().rank(v)
     }
 
     /// Top-k query against the current snapshot.
     pub fn top_k(&self, k: usize) -> Vec<(VertexId, f64)> {
+        // relaxed: telemetry counter only
         self.queries.fetch_add(1, Ordering::Relaxed);
         self.snapshot().top_k(k)
     }
 
     /// Total `rank`/`top_k` queries answered since construction.
     pub fn queries_served(&self) -> u64 {
+        // relaxed: telemetry counter only
         self.queries.load(Ordering::Relaxed)
     }
 }
@@ -388,7 +391,7 @@ mod tests {
         let g = synthetic::web_replica(250, 5, 13);
         let mut engine = ServingEngine::bootstrap(g, Variant::Frontier, cfg()).unwrap();
         let server = engine.server();
-        let done = std::sync::atomic::AtomicBool::new(false);
+        let done = crate::sync::shim::atomic::AtomicBool::new(false);
         std::thread::scope(|s| {
             for _ in 0..3 {
                 let server = Arc::clone(&server);

@@ -8,7 +8,7 @@
 //! compiled code on x86-64 is the identical `mov`, but the semantics are
 //! defined on every platform.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::shim::atomic::{AtomicU64, Ordering};
 
 /// An `f64` stored as its bit pattern in an `AtomicU64`.
 #[repr(transparent)]
@@ -138,38 +138,42 @@ mod tests {
 
     #[test]
     fn fetch_max_concurrent_takes_global_max() {
+        // Miri explores this with full state tracking; keep its workload
+        // small enough to finish while still crossing threads.
+        let per: usize = if cfg!(miri) { 50 } else { 1000 };
         let a = Arc::new(AtomicF64::new(f64::NEG_INFINITY));
         std::thread::scope(|s| {
-            for t in 0..8 {
+            for t in 0..8usize {
                 let a = Arc::clone(&a);
                 s.spawn(move || {
-                    for i in 0..1000 {
-                        a.fetch_max((t * 1000 + i) as f64);
+                    for i in 0..per {
+                        a.fetch_max((t * per + i) as f64);
                     }
                 });
             }
         });
-        assert_eq!(a.load(), 7999.0);
+        assert_eq!(a.load(), (8 * per - 1) as f64);
     }
 
     #[test]
     fn concurrent_store_load_no_tearing() {
         // Writers alternate between two bit patterns whose halves differ;
         // readers must only ever observe one of the two.
+        let iters: usize = if cfg!(miri) { 200 } else { 20_000 };
         let a = Arc::new(AtomicF64::new(f64::from_bits(0xAAAA_AAAA_AAAA_AAAA)));
         let p1 = f64::from_bits(0xAAAA_AAAA_AAAA_AAAA);
         let p2 = f64::from_bits(0x5555_5555_5555_5555);
         std::thread::scope(|s| {
             let w = Arc::clone(&a);
             s.spawn(move || {
-                for i in 0..20_000 {
+                for i in 0..iters {
                     w.store(if i % 2 == 0 { p1 } else { p2 });
                 }
             });
             for _ in 0..2 {
                 let r = Arc::clone(&a);
                 s.spawn(move || {
-                    for _ in 0..20_000 {
+                    for _ in 0..iters {
                         let bits = r.load().to_bits();
                         assert!(
                             bits == p1.to_bits() || bits == p2.to_bits(),

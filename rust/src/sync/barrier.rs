@@ -10,7 +10,7 @@
 //! can measure time-at-barrier (the quantity the paper's speedup argument is
 //! about).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::sync::shim::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 /// Outcome of a [`SenseBarrier::wait`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -129,9 +129,9 @@ impl Waiter<'_> {
             }
             spins += 1;
             if spins < 64 {
-                std::hint::spin_loop();
+                crate::sync::shim::hint::spin_loop();
             } else {
-                std::thread::yield_now();
+                crate::sync::shim::thread::yield_now();
             }
         }
         b.wait_nanos
@@ -143,7 +143,6 @@ impl Waiter<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
     use std::sync::Arc;
 
     #[test]

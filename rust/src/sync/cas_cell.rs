@@ -25,7 +25,7 @@
 //! boundaries, outside the window; on hardware with `cmpxchg16b` the window
 //! closes entirely. DESIGN.md §Hardware-Adaptation records this substitution.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::shim::atomic::{AtomicU64, Ordering};
 
 /// A versioned `f64` cell: `(iteration, value)` with single-winner commits.
 ///
@@ -61,9 +61,9 @@ impl VersionedCell {
             }
             spins += 1;
             if spins < 32 {
-                std::hint::spin_loop();
+                crate::sync::shim::hint::spin_loop();
             } else {
-                std::thread::yield_now();
+                crate::sync::shim::thread::yield_now();
             }
         }
     }
@@ -167,7 +167,7 @@ impl PackedProgress {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::atomic::AtomicUsize;
+    use crate::sync::shim::atomic::AtomicUsize;
     use std::sync::Arc;
 
     #[test]
@@ -186,7 +186,8 @@ mod tests {
     #[test]
     fn versioned_cell_exactly_one_winner() {
         const T: usize = 8;
-        for round in 0..50u64 {
+        const ROUNDS: u64 = if cfg!(miri) { 6 } else { 50 };
+        for round in 0..ROUNDS {
             let c = Arc::new(VersionedCell::new(0.0));
             // bring cell to iteration `round`
             for i in 0..round {
@@ -213,18 +214,19 @@ mod tests {
     fn versioned_cell_readers_see_consistent_pairs() {
         // Writers advance with value == iteration; readers must never see a
         // mismatched (iter, value) pair.
+        let iters: u64 = if cfg!(miri) { 200 } else { 10_000 };
         let c = Arc::new(VersionedCell::new(0.0));
         std::thread::scope(|s| {
             let w = Arc::clone(&c);
             s.spawn(move || {
-                for i in 0..10_000u64 {
+                for i in 0..iters {
                     assert!(w.try_advance(i, (i + 1) as f64));
                 }
             });
             for _ in 0..2 {
                 let r = Arc::clone(&c);
                 s.spawn(move || {
-                    for _ in 0..10_000 {
+                    for _ in 0..iters {
                         let (iter, val) = r.read();
                         assert_eq!(val, iter as f64, "inconsistent cell read");
                     }
@@ -254,7 +256,7 @@ mod tests {
     fn packed_progress_concurrent_claims_are_unique() {
         // T threads race to claim nodes 0..N in order; each node must be
         // claimed exactly once.
-        const N: u32 = 2000;
+        const N: u32 = if cfg!(miri) { 100 } else { 2000 };
         const T: usize = 4;
         let p = Arc::new(PackedProgress::new(0, 0));
         let claims: Arc<Vec<AtomicUsize>> =

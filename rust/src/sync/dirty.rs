@@ -16,8 +16,8 @@
 //! corrupts, convergence (Lemma 1 of the source paper).
 
 use crate::graph::VertexId;
+use crate::sync::shim::atomic::{AtomicU64, Ordering};
 use std::ops::Range;
-use std::sync::atomic::{AtomicU64, Ordering};
 
 /// A fixed-capacity atomic bitmap over vertex ids `0..len`.
 pub struct DirtyFlags {
@@ -298,11 +298,10 @@ mod tests {
     fn concurrent_sets_are_never_lost() {
         // Setters mark every vertex once; a draining owner sweeps its range
         // until quiet. Every marked vertex must be drained exactly once.
-        let n = 4096usize;
+        let n = if cfg!(miri) { 512usize } else { 4096 };
         let d = Arc::new(DirtyFlags::new_clear(n));
-        let drained = Arc::new(
-            (0..n).map(|_| std::sync::atomic::AtomicU64::new(0)).collect::<Vec<_>>(),
-        );
+        let drained =
+            Arc::new((0..n).map(|_| AtomicU64::new(0)).collect::<Vec<_>>());
         std::thread::scope(|s| {
             for t in 0..4 {
                 let d = Arc::clone(&d);
@@ -322,8 +321,7 @@ mod tests {
                     let mut total = 0u64;
                     while total < (n / 2) as u64 {
                         total += d.drain_range(range.clone(), |v| {
-                            drained[v as usize]
-                                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            drained[v as usize].fetch_add(1, Ordering::Relaxed);
                         });
                         std::thread::yield_now();
                     }
@@ -332,7 +330,7 @@ mod tests {
         });
         for (v, c) in drained.iter().enumerate() {
             assert_eq!(
-                c.load(std::sync::atomic::Ordering::Relaxed),
+                c.load(Ordering::Relaxed),
                 1,
                 "vertex {v} drained wrong number of times"
             );
@@ -350,8 +348,7 @@ mod tests {
     /// always observed.
     #[test]
     fn final_mark_survives_concurrent_drains() {
-        use std::sync::atomic::{AtomicU64, Ordering};
-        const ROUNDS: u64 = 20_000;
+        const ROUNDS: u64 = if cfg!(miri) { 300 } else { 20_000 };
         let d = Arc::new(DirtyFlags::new_clear(64));
         let published = Arc::new(AtomicU64::new(0));
         let observed = Arc::new(AtomicU64::new(0));

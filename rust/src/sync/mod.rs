@@ -28,6 +28,7 @@ pub mod atomics;
 pub mod barrier;
 pub mod cas_cell;
 pub mod dirty;
+pub mod shim;
 pub mod worklist;
 
 pub use dirty::DirtyFlags;

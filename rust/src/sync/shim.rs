@@ -1,0 +1,54 @@
+//! The one place this crate touches `std::sync::atomic`.
+//!
+//! Every module imports its atomics, spin hints, and (in tests) spawned
+//! threads from here instead of `std`. In a normal build the re-exports
+//! below compile away to the `std` items — zero cost, identical codegen.
+//! With `--features pallas-model` they route to the vendored
+//! [`model_lite`] checker instead: the same types become schedule points
+//! with bounded-staleness relaxed-memory semantics inside a
+//! `model_lite::check` execution (and transparent `std` fallbacks
+//! outside one), which is what lets `rust/tests/model/` exhaustively
+//! model-check the `sync/` protocols without forking their source.
+//!
+//! `scripts/audit-unsafe.sh` enforces the funnel: any `std::sync::atomic`
+//! import outside this file fails CI.
+
+#[cfg(not(feature = "pallas-model"))]
+pub mod atomic {
+    //! Re-export of `std::sync::atomic` (normal builds).
+    pub use std::sync::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+    };
+}
+
+#[cfg(feature = "pallas-model")]
+pub mod atomic {
+    //! Model-checked atomics (`--features pallas-model` builds).
+    pub use model_lite::atomic::{
+        AtomicBool, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+    };
+}
+
+#[cfg(not(feature = "pallas-model"))]
+pub mod hint {
+    //! Re-export of `std::hint::spin_loop` (normal builds).
+    pub use std::hint::spin_loop;
+}
+
+#[cfg(feature = "pallas-model")]
+pub mod hint {
+    //! Spin hint as a yielding schedule point (model builds).
+    pub use model_lite::hint::spin_loop;
+}
+
+#[cfg(not(feature = "pallas-model"))]
+pub mod thread {
+    //! Re-export of the `std::thread` subset the sync layer uses.
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+}
+
+#[cfg(feature = "pallas-model")]
+pub mod thread {
+    //! Model-scheduled threads (model builds).
+    pub use model_lite::thread::{spawn, yield_now, JoinHandle};
+}

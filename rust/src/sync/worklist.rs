@@ -27,7 +27,7 @@
 //! overflow scan) is skipped, never double-gathered.
 
 use crate::graph::VertexId;
-use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use crate::sync::shim::atomic::{AtomicU32, AtomicUsize, Ordering};
 
 /// One ring slot: the Vyukov sequence word plus the payload.
 struct Slot {
@@ -153,8 +153,8 @@ impl WorkList {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sync::shim::atomic::AtomicU64;
     use crate::sync::DirtyFlags;
-    use std::sync::atomic::AtomicU64;
     use std::sync::Arc;
 
     #[test]
@@ -209,7 +209,7 @@ mod tests {
     #[test]
     fn concurrent_claim_enqueue_loses_and_duplicates_nothing() {
         const PRODUCERS: usize = 4;
-        const PER_PRODUCER: usize = 8_192;
+        const PER_PRODUCER: usize = if cfg!(miri) { 256 } else { 8_192 };
         let n = PRODUCERS * PER_PRODUCER;
         let q = Arc::new(WorkList::with_capacity(1024));
         let seen: Arc<Vec<AtomicU64>> = Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
@@ -297,7 +297,7 @@ mod tests {
         const SHARDS: usize = 16;
         const SHARD_LEN: usize = 64;
         const WORKERS: usize = 4;
-        const ROTATIONS: usize = 50;
+        const ROTATIONS: usize = if cfg!(miri) { 3 } else { 50 };
         let n = SHARDS * SHARD_LEN;
         let range = |s: usize| (s * SHARD_LEN) as VertexId..((s + 1) * SHARD_LEN) as VertexId;
         let q = WorkList::with_capacity(SHARDS);

@@ -1,0 +1,14 @@
+//! Deterministic model-checking suite for the non-blocking sync layer.
+//!
+//! Built (and meaningful) only with `--features pallas-model`, which routes
+//! `sync/shim.rs` to the vendored `model-lite` checker; without the feature
+//! this target compiles to nothing. The directory layout nests a `model`
+//! module so every test name carries the `model::` prefix CI filters on:
+//!
+//! ```text
+//! cargo test -p pagerank_nb --features pallas-model model::
+//! ```
+
+#![cfg(feature = "pallas-model")]
+
+mod model;

@@ -1,0 +1,78 @@
+//! Model checks for [`SenseBarrier`] — phase rotation and the abort
+//! protocol the fault-injection harness depends on
+//! (docs/concurrency.md §SenseBarrier).
+
+use model_lite::thread;
+use pagerank_nb::sync::barrier::{BarrierWait, SenseBarrier};
+use std::sync::Arc;
+
+/// Two parties, two phases: every phase completes (the model's deadlock
+/// detection fails any interleaving where both spin forever), exactly one
+/// party is the leader per phase, and the sense flip rotates correctly into
+/// the second phase.
+#[test]
+fn rotation_has_exactly_one_leader_per_phase() {
+    model_lite::check(|| {
+        let b = Arc::new(SenseBarrier::new(2));
+        let b2 = Arc::clone(&b);
+        let child = thread::spawn(move || {
+            let mut w = b2.waiter();
+            [w.wait(), w.wait()]
+        });
+        let mut w = b.waiter();
+        let mine = [w.wait(), w.wait()];
+        let theirs = child.join().unwrap();
+        for p in 0..2 {
+            let outcomes = [mine[p], theirs[p]];
+            assert!(outcomes.iter().all(|r| !r.is_aborted()), "phase {p} aborted");
+            let leaders = outcomes.iter().filter(|r| **r == BarrierWait::Leader).count();
+            assert_eq!(leaders, 1, "phase {p}: exactly one leader, got {leaders}");
+        }
+    });
+}
+
+/// A party dies before arriving. The executor's panic guard turns a worker
+/// panic into `abort()` before unwinding (a raw panic inside `check` would
+/// itself be reported as a counterexample, so the fault is modeled by its
+/// observable effect); the surviving waiter must unblock with `Aborted` in
+/// every interleaving — this is the "sleeping/failed thread" experiment of
+/// the paper's Figs 8–9, minus the wall-clock stall.
+#[test]
+fn abort_unblocks_the_survivor_in_every_interleaving() {
+    model_lite::check(|| {
+        let b = Arc::new(SenseBarrier::new(2));
+        let b2 = Arc::clone(&b);
+        let faulty = thread::spawn(move || b2.abort());
+        let mut w = b.waiter();
+        assert_eq!(w.wait(), BarrierWait::Aborted, "survivor must not wedge");
+        faulty.join().unwrap();
+        assert_eq!(w.wait(), BarrierWait::Aborted, "aborts are forever");
+    });
+}
+
+/// Abort racing a phase that is completing anyway: outcomes may mix, but
+/// never incoherently — at most one leader, and a `Member` implies some
+/// leader flipped the sense. Implicitly also a liveness check: no
+/// interleaving may leave a waiter spinning (the checker bounds stale
+/// reads, so an unbounded spin fails the execution).
+#[test]
+fn abort_racing_a_completing_phase_stays_coherent() {
+    model_lite::check(|| {
+        let b = Arc::new(SenseBarrier::new(2));
+        let (b2, b3) = (Arc::clone(&b), Arc::clone(&b));
+        let w1 = thread::spawn(move || {
+            let mut w = b2.waiter();
+            w.wait()
+        });
+        let w2 = thread::spawn(move || {
+            let mut w = b3.waiter();
+            w.wait()
+        });
+        b.abort();
+        let outcomes = [w1.join().unwrap(), w2.join().unwrap()];
+        let leaders = outcomes.iter().filter(|r| **r == BarrierWait::Leader).count();
+        let members = outcomes.iter().filter(|r| **r == BarrierWait::Member).count();
+        assert!(leaders <= 1, "two leaders in one phase: {outcomes:?}");
+        assert!(members == 0 || leaders == 1, "member without a leader: {outcomes:?}");
+    });
+}

@@ -1,0 +1,61 @@
+//! Model checks for the Algorithm 6 CAS-object cells
+//! ([`VersionedCell`], [`PackedProgress`]) — single-winner commits and the
+//! seqlock read protocol (docs/concurrency.md §cas_cell).
+
+use model_lite::thread;
+use pagerank_nb::sync::cas_cell::{PackedProgress, VersionedCell};
+use std::sync::Arc;
+
+/// Two helpers race to commit iteration 1 while a reader runs concurrently:
+/// the version CAS admits exactly one winner, and the reader never observes
+/// a torn `(iteration, value)` pair — including in interleavings where the
+/// read lands inside the two-store commit window (the seqlock must spin
+/// there, and the model proves the spin terminates).
+#[test]
+fn versioned_cell_has_one_winner_and_no_torn_reads() {
+    model_lite::check(|| {
+        let c = Arc::new(VersionedCell::new(0.0));
+        let (c1, c2) = (Arc::clone(&c), Arc::clone(&c));
+        let a = thread::spawn(move || c1.try_advance(0, 42.0));
+        let b = thread::spawn(move || c2.try_advance(0, 42.0));
+        let (it, val) = c.read();
+        assert!(
+            (it == 0 && val == 0.0) || (it == 1 && val == 42.0),
+            "torn read: ({it}, {val})"
+        );
+        let (wa, wb) = (a.join().unwrap(), b.join().unwrap());
+        assert!(wa ^ wb, "exactly one commit winner, got a={wa} b={wb}");
+        assert_eq!(c.read(), (1, 42.0));
+    });
+}
+
+/// Helpers racing a stalled thread's progress word: each node is claimed by
+/// exactly one CAS winner, and the word never goes backwards — the
+/// exclusivity the Barrier-Helper work-stealing protocol rests on.
+#[test]
+fn packed_progress_claims_each_node_exactly_once() {
+    model_lite::check(|| {
+        let p = Arc::new(PackedProgress::new(0, 0));
+        let claim_all = |p: Arc<PackedProgress>| {
+            let mut mine = Vec::new();
+            loop {
+                let (iter, node) = p.load();
+                assert_eq!(iter, 0, "iteration must not move");
+                if node >= 2 {
+                    break;
+                }
+                if p.try_advance((iter, node), (iter, node + 1)) {
+                    mine.push(node);
+                }
+            }
+            mine
+        };
+        let p2 = Arc::clone(&p);
+        let helper = thread::spawn(move || claim_all(p2));
+        let mut all = claim_all(Arc::clone(&p));
+        all.extend(helper.join().unwrap());
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1], "each node claimed exactly once");
+        assert_eq!(p.load(), (0, 2));
+    });
+}

@@ -1,0 +1,82 @@
+//! Model checks for [`DirtyFlags`] — the bitmap frontier's mark/claim/drain
+//! protocol (docs/concurrency.md §DirtyFlags).
+
+use model_lite::atomic::{AtomicU64, Ordering};
+use model_lite::{hb, thread};
+use pagerank_nb::sync::DirtyFlags;
+use std::sync::Arc;
+
+/// Two drainers over one word: the `fetch_and` claim hands every set bit to
+/// exactly one of them, in every interleaving. This is the exclusivity the
+/// sharded sweep owners rely on when ranges share a word boundary.
+#[test]
+fn concurrent_drains_claim_each_bit_exactly_once() {
+    model_lite::check(|| {
+        let d = Arc::new(DirtyFlags::new_set(8));
+        let d2 = Arc::clone(&d);
+        let other = thread::spawn(move || {
+            let mut mine = Vec::new();
+            d2.drain_range(0..8, |v| mine.push(v));
+            mine
+        });
+        let mut mine = Vec::new();
+        d.drain_range(0..8, |v| mine.push(v));
+        let theirs = other.join().unwrap();
+        let mut all: Vec<u32> = mine.iter().chain(theirs.iter()).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0u32..8).collect::<Vec<_>>(), "lost or double-claimed bit");
+        assert_eq!(d.count_set(), 0);
+    });
+}
+
+/// The publication contract from the module docs: rank stores issued before
+/// a `set` are visible to whoever `claim`s the bit, because both ends are
+/// `AcqRel` RMWs. The payload read below is deliberately `Relaxed` — under
+/// the model checker a relaxed load may return *any* store not yet ordered
+/// before the reader, so the assertion only survives if the mark/claim pair
+/// really is a release/acquire edge. The vector-clock check then pins the
+/// same fact in happens-before terms.
+#[test]
+fn set_claim_is_a_release_acquire_publication_edge() {
+    model_lite::check(|| {
+        let d = Arc::new(DirtyFlags::new_clear(64));
+        let payload = Arc::new(AtomicU64::new(0));
+        let (d2, p2) = (Arc::clone(&d), Arc::clone(&payload));
+        let publisher = thread::spawn(move || {
+            p2.store(42, Ordering::Relaxed);
+            let before_set = hb::now();
+            d2.set(7);
+            before_set
+        });
+        while !d.claim(7) {
+            thread::yield_now();
+        }
+        let after_claim = hb::now();
+        assert_eq!(payload.load(Ordering::Relaxed), 42, "claim must acquire the mark");
+        let before_set = publisher.join().unwrap();
+        assert!(
+            before_set.happens_before(&after_claim),
+            "pre-mark writes must happen-before the successful claim"
+        );
+    });
+}
+
+/// A mark racing a drain of the same word is never lost: either the drain
+/// claims it (and gathers the vertex this sweep) or the bit survives into
+/// the next sweep — `set`'s unconditional `fetch_or` operates on the latest
+/// word value, so there is no window where the mark lands on a stale view.
+#[test]
+fn mark_racing_a_drain_survives_or_is_gathered() {
+    model_lite::check(|| {
+        let d = Arc::new(DirtyFlags::new_clear(64));
+        let d2 = Arc::clone(&d);
+        let marker = thread::spawn(move || {
+            d2.set(5);
+        });
+        let mut gathered = d.drain_range(0..64, |v| assert_eq!(v, 5));
+        marker.join().unwrap();
+        gathered += d.drain_range(0..64, |v| assert_eq!(v, 5));
+        assert_eq!(gathered, 1, "the mark must be gathered exactly once");
+        assert_eq!(d.count_set(), 0);
+    });
+}

@@ -1,0 +1,93 @@
+//! Model-checked regression tests for the two interleaving bugs this repo
+//! has actually shipped and fixed. Each test drives the *real* primitive
+//! through the schedule (and stale-read) neighborhood of the historical
+//! bug, so reverting either fix fails this suite deterministically —
+//! instead of intermittently, which is how both bugs originally survived
+//! the stress tests.
+
+use model_lite::atomic::{AtomicU64, Ordering};
+use model_lite::thread;
+use pagerank_nb::sync::{DirtyFlags, WorkList};
+use std::sync::Arc;
+
+/// PR 5 regression — the `DirtyFlags::set` TTAS lost update.
+///
+/// The buggy version prefixed the `fetch_or` with a relaxed load and
+/// early-returned when the bit already read as set. Under a concurrent
+/// `drain_range` that load can observe a *stale* "set" word from before the
+/// drain claimed it, skipping a mark whose bit is actually clear — and if
+/// the drain gathered the vertex before the publisher stored its rank, the
+/// final update is never propagated.
+///
+/// The scenario: a stale mark is already pending, the publisher stores a
+/// new rank and marks again, a drainer races the whole thing. In every
+/// interleaving, *some* drain must observe the final published value.
+/// With the unconditional `fetch_or` this holds; with the TTAS fast path
+/// the checker finds the lost-update schedule and this test fails.
+#[test]
+fn pr5_final_mark_is_never_lost_to_a_stale_ttas_read() {
+    model_lite::check(|| {
+        let d = Arc::new(DirtyFlags::new_clear(64));
+        let published = Arc::new(AtomicU64::new(0));
+        d.set(7); // stale mark pending from the previous round
+        let (d2, p2) = (Arc::clone(&d), Arc::clone(&published));
+        let drainer = thread::spawn(move || {
+            let mut got = 0;
+            d2.drain_range(0..64, |v| {
+                assert_eq!(v, 7);
+                got = p2.load(Ordering::Acquire);
+            });
+            got
+        });
+        published.store(42, Ordering::Release);
+        d.set(7); // the final mark — must never be skipped
+        let early = drainer.join().unwrap();
+        let mut late = 0;
+        d.drain_range(0..64, |v| {
+            assert_eq!(v, 7);
+            late = published.load(Ordering::Acquire);
+        });
+        assert!(
+            early == 42 || late == 42,
+            "final mark lost (early={early}, late={late}): rank update unpropagated"
+        );
+    });
+}
+
+/// PR 8 regression — the frontier double-gather.
+///
+/// A vertex sits both in the ring (enqueued on its mark transition) and in
+/// the bitmap. An overflow-degraded sweep scans the bitmap directly while
+/// the ring consumer pops the same id; before the fix the consumer gathered
+/// every pop unconditionally, so the vertex was processed twice in one
+/// sweep (double-counting its contribution). The fix re-validates each pop
+/// with `DirtyFlags::claim`. In every interleaving the claim/drain
+/// `fetch_and` pair admits exactly one gatherer; drop the `claim` guard and
+/// the checker immediately finds a two-gather schedule.
+#[test]
+fn pr8_popped_entry_racing_an_overflow_scan_gathers_once() {
+    model_lite::check(|| {
+        let d = Arc::new(DirtyFlags::new_clear(64));
+        let q = Arc::new(WorkList::with_capacity(4));
+        d.set(5);
+        assert!(q.push(5)); // marked and enqueued, as the frontier does
+        let d2 = Arc::clone(&d);
+        let scanner = thread::spawn(move || {
+            // overflow-degraded sweep: claims straight off the bitmap
+            d2.drain_range(0..64, |v| assert_eq!(v, 5))
+        });
+        let mut gathered = 0u64;
+        while let Some(v) = q.pop() {
+            if d.claim(v) {
+                gathered += 1; // the PR 8 fix: pop-side re-validation
+            }
+        }
+        let scanned = scanner.join().unwrap();
+        assert_eq!(
+            scanned + gathered,
+            1,
+            "vertex 5 gathered {} times in one sweep",
+            scanned + gathered
+        );
+    });
+}

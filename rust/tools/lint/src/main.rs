@@ -1,0 +1,220 @@
+//! Concurrency-hygiene audit for the `pagerank_nb` tree — the Rust
+//! implementation of the rules `scripts/audit-unsafe.sh` enforces (the
+//! script falls back to an awk implementation of the same rules on hosts
+//! without a toolchain; keep the two in sync, they are line-for-line the
+//! same checks).
+//!
+//! Rules (documented in docs/concurrency.md §Static audit):
+//!
+//! 1. **`unsafe` without `// SAFETY:`** — every line of code containing the
+//!    `unsafe` keyword (in `rust/src` and `rust/vendor/*/src`) must have a
+//!    `// SAFETY:` comment on the same line or within the 8 lines above it.
+//! 2. **Unjustified `Ordering::Relaxed`** — outside `rust/src/sync/` (where
+//!    the primitives' module docs carry the ordering contracts), every
+//!    `Ordering::Relaxed` needs a `// relaxed: <why>` comment on the same
+//!    line or within the 3 lines above it.
+//! 3. **Atomic-import funnel** — no file in `rust/src` other than
+//!    `sync/shim.rs` may name `std::sync::atomic`: all atomics flow through
+//!    the shim so the `pallas-model` feature can interpose the model
+//!    checker on the whole crate at once.
+//!
+//! Exit status: 0 when clean, 1 with one diagnostic per offending line on
+//! stderr otherwise. Line-based heuristics, deliberately: the goal is a
+//! zero-dependency gate that fails loudly and is trivial to appease, not a
+//! parser. Usage: `pagerank-lint [repo-root]` (default: cwd).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Recursively collect `.rs` files under `dir`, sorted for stable output.
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    let mut entries: Vec<_> = entries.flatten().map(|e| e.path()).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+/// Is this a whole-line comment (`//`, `///`, `//!`)?
+fn is_comment_line(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+/// The line with any trailing `//` comment stripped.
+fn code_part(line: &str) -> &str {
+    match line.find("//") {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+/// Does `hay` contain `needle` as a whole word (no `[A-Za-z0-9_]` on
+/// either side)?
+fn has_word(hay: &str, needle: &str) -> bool {
+    let isw = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let bytes = hay.as_bytes();
+    let mut from = 0;
+    while let Some(i) = hay[from..].find(needle).map(|i| i + from) {
+        let before_ok = i == 0 || !isw(bytes[i - 1]);
+        let end = i + needle.len();
+        let after_ok = end == bytes.len() || !isw(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = i + 1;
+    }
+    false
+}
+
+/// Any line in `lines[lo..=hi]` (saturating at 0) matching `pred`?
+fn lookback(lines: &[&str], hi: usize, window: usize, pred: impl Fn(&str) -> bool) -> bool {
+    let lo = hi.saturating_sub(window);
+    lines[lo..=hi].iter().any(|l| pred(l))
+}
+
+struct Audit {
+    root: PathBuf,
+    violations: usize,
+}
+
+impl Audit {
+    fn flag(&mut self, path: &Path, line_no: usize, msg: &str) {
+        let rel = path.strip_prefix(&self.root).unwrap_or(path);
+        eprintln!("{}:{}: {msg}", rel.display(), line_no);
+        self.violations += 1;
+    }
+
+    /// Rule 1 over one file.
+    fn check_unsafe(&mut self, path: &Path, lines: &[&str]) {
+        for (i, line) in lines.iter().enumerate() {
+            if is_comment_line(line) || !has_word(code_part(line), "unsafe") {
+                continue;
+            }
+            // Lint-control attributes talk *about* unsafe, they are not it.
+            if line.contains("unsafe_op_in_unsafe_fn")
+                || line.contains("unsafe_code")
+                || line.contains("forbid(unsafe")
+            {
+                continue;
+            }
+            if !lookback(lines, i, 8, |l| l.contains("SAFETY:")) {
+                self.flag(path, i + 1, "`unsafe` without a `// SAFETY:` comment within 8 lines");
+            }
+        }
+    }
+
+    /// Rule 2 over one file.
+    fn check_relaxed(&mut self, path: &Path, lines: &[&str]) {
+        for (i, line) in lines.iter().enumerate() {
+            if is_comment_line(line) || !code_part(line).contains("Ordering::Relaxed") {
+                continue;
+            }
+            if !lookback(lines, i, 3, |l| l.contains("// relaxed:")) {
+                self.flag(
+                    path,
+                    i + 1,
+                    "`Ordering::Relaxed` outside sync/ without a `// relaxed: <why>` comment \
+                     within 3 lines",
+                );
+            }
+        }
+    }
+
+    /// Rule 3 over one file.
+    fn check_atomic_funnel(&mut self, path: &Path, lines: &[&str]) {
+        for (i, line) in lines.iter().enumerate() {
+            if is_comment_line(line) || !code_part(line).contains("std::sync::atomic") {
+                continue;
+            }
+            self.flag(
+                path,
+                i + 1,
+                "direct `std::sync::atomic` use — route atomics through `crate::sync::shim` \
+                 so the model checker can interpose them",
+            );
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("."));
+    let src = root.join("rust/src");
+    let vendor = root.join("rust/vendor");
+    if !src.is_dir() {
+        eprintln!("pagerank-lint: {} is not a repo root (no rust/src)", root.display());
+        return ExitCode::FAILURE;
+    }
+
+    let mut audit = Audit { root: root.clone(), violations: 0 };
+    let mut files = Vec::new();
+    rs_files(&src, &mut files);
+    let first_vendor = files.len();
+    rs_files(&vendor, &mut files);
+
+    for (idx, path) in files.iter().enumerate() {
+        let Ok(text) = fs::read_to_string(path) else {
+            eprintln!("pagerank-lint: unreadable file {}", path.display());
+            audit.violations += 1;
+            continue;
+        };
+        let lines: Vec<&str> = text.lines().collect();
+        let in_vendor = idx >= first_vendor;
+        audit.check_unsafe(path, &lines);
+        if in_vendor {
+            continue; // vendor crates: SAFETY hygiene only
+        }
+        let rel = path.strip_prefix(&src).unwrap_or(path);
+        if !rel.starts_with("sync") {
+            audit.check_relaxed(path, &lines);
+        }
+        if rel != Path::new("sync/shim.rs") {
+            audit.check_atomic_funnel(path, &lines);
+        }
+    }
+
+    if audit.violations == 0 {
+        println!("pagerank-lint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("pagerank-lint: {} violation(s)", audit.violations);
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_matching_respects_boundaries() {
+        assert!(has_word("let x = unsafe { y };", "unsafe"));
+        assert!(has_word("unsafe impl Send for T {}", "unsafe"));
+        assert!(!has_word("make_unsafe_name()", "unsafe"));
+        assert!(!has_word("unsafely()", "unsafe"));
+    }
+
+    #[test]
+    fn comment_stripping() {
+        assert_eq!(code_part("x(); // unsafe in prose"), "x(); ");
+        assert!(!has_word(code_part("// just talking about unsafe"), "unsafe"));
+        assert!(is_comment_line("   /// docs mention unsafe"));
+        assert!(!is_comment_line("let a = 1; // trailing"));
+    }
+
+    #[test]
+    fn lookback_window_is_inclusive_and_saturating() {
+        let lines = ["// SAFETY: fine", "a", "b", "unsafe {"];
+        assert!(lookback(&lines, 3, 8, |l| l.contains("SAFETY:")));
+        assert!(!lookback(&lines, 3, 2, |l| l.contains("SAFETY:")));
+        assert!(lookback(&lines, 0, 8, |l| l.contains("SAFETY:")));
+    }
+}

@@ -9,6 +9,7 @@
 //! callers never need a `cfg` of their own.
 
 #![warn(missing_docs)]
+#![deny(unsafe_op_in_unsafe_fn)]
 
 /// Pin the calling thread to the given CPU ids.
 ///
@@ -37,7 +38,11 @@ mod imp {
         for &c in cpus {
             mask[c / 64] |= 1u64 << (c % 64);
         }
-        // pid 0 addresses the calling thread (sched_setaffinity(2)).
+        // SAFETY: `mask` outlives the call and `cpusetsize` is exactly the
+        // buffer's byte length, so the kernel reads only initialized memory;
+        // pid 0 addresses the calling thread (sched_setaffinity(2)), which
+        // cannot invalidate any Rust-side state. The symbol is provided by
+        // the C library every Linux process links.
         let rc = unsafe { sched_setaffinity(0, mask.len() * 8, mask.as_ptr()) };
         if rc == 0 {
             Ok(())

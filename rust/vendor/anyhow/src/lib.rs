@@ -17,6 +17,8 @@
 //! `std::error::Error`, which is what makes the blanket `From` conversion
 //! coherent.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::fmt;
 
 /// An error with a chain of context messages (outermost first).

@@ -2,6 +2,8 @@
 //! all this project uses. Vendored because the build image has no crates.io
 //! registry access.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::ops::{Deref, DerefMut};
 
 /// Pads and aligns a value to 128 bytes so adjacent values never share a

@@ -20,6 +20,8 @@
 //! always at least 4 KiB-aligned — callers may rely on that when
 //! reinterpreting section bytes at 64-byte-aligned offsets.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::fs::File;
 use std::io;
 use std::ops::Deref;

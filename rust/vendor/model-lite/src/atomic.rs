@@ -1,0 +1,446 @@
+//! Model-checked drop-ins for `std::sync::atomic`.
+//!
+//! Inside a [`crate::check`] execution every operation is a schedule point,
+//! and the memory semantics are a bounded approximation of the C11 model:
+//!
+//! * Each atomic keeps its whole-execution **modification order** (the list
+//!   of stores), each store stamped with the writer's vector clock and the
+//!   **release-sequence sync clock** (the clock an acquire load joining the
+//!   sequence must inherit; RMWs extend the sequence, plain stores restart
+//!   it).
+//! * A **`Relaxed`/`Acquire` load** may observe any store that is not
+//!   happens-before-overwritten for the loading thread — so `Relaxed`
+//!   readers see genuinely stale values, which is how demoting an
+//!   `Acquire`/`Release` pair to `Relaxed` becomes a *reachable* bug
+//!   instead of an x86 accident. Acquire loads additionally join the
+//!   observed store's sync clock (synchronizes-with); relaxed loads do not.
+//! * **RMWs** (`fetch_*`, `swap`, `compare_exchange*`) always operate on
+//!   the newest store — atomicity — which is exactly why `fetch_or` fixes
+//!   a test-and-test-and-set race that a relaxed pre-load reintroduces.
+//!
+//! Bounds that keep the DFS tree finite (documented approximations):
+//! each thread may observe a given stale store **once** (its next load of
+//! that variable is forced at least one store newer, so spin loops always
+//! progress); the staleness window is the last [`MAX_HIST`] stores;
+//! `compare_exchange_weak` never fails spuriously; `SeqCst` is modeled as
+//! `AcqRel` (no single total order beyond per-variable modification
+//! order).
+//!
+//! Outside a `check` execution every type falls back to the real
+//! `std::sync::atomic` operation with the caller's ordering, so a build
+//! with the model feature enabled still runs ordinary code correctly.
+
+use crate::clock::VClock;
+use crate::exec;
+use std::sync::atomic::AtomicU64 as StdAtomicU64;
+use std::sync::Mutex;
+
+pub use std::sync::atomic::Ordering;
+
+/// Staleness window: loads may reach back at most this many stores.
+const MAX_HIST: usize = 6;
+
+/// One store in a variable's modification order.
+struct StoreEv {
+    val: u64,
+    /// The writer's full happens-before clock at the store — bounds which
+    /// loads may still legally observe *earlier* stores.
+    clock: VClock,
+    /// Clock joined into acquire loads that observe this store (empty for
+    /// a relaxed plain store: nothing synchronizes).
+    sync: VClock,
+}
+
+/// Per-execution model state of one atomic, rebuilt lazily whenever the
+/// owning execution changes (atomics may outlive or predate an execution).
+struct VarState {
+    exec_id: u64,
+    stores: Vec<StoreEv>,
+    /// Per-thread floor into `stores`: the oldest index that thread may
+    /// still observe (coherence + the observe-a-stale-store-once bound).
+    seen: Vec<usize>,
+}
+
+impl VarState {
+    fn fresh(exec_id: u64, val: u64) -> Self {
+        // The initial value carries the zero clock: visible to everyone,
+        // staler than every in-execution store.
+        Self {
+            exec_id,
+            stores: vec![StoreEv { val, clock: VClock::new(), sync: VClock::new() }],
+            seen: Vec::new(),
+        }
+    }
+
+    fn floor_of(&self, tid: usize) -> usize {
+        self.seen.get(tid).copied().unwrap_or(0)
+    }
+
+    fn note_seen(&mut self, tid: usize, idx: usize) {
+        if self.seen.len() <= tid {
+            self.seen.resize(tid + 1, 0);
+        }
+        if idx > self.seen[tid] {
+            self.seen[tid] = idx;
+        }
+    }
+}
+
+fn acquires(o: Ordering) -> bool {
+    matches!(o, Ordering::Acquire | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+fn releases(o: Ordering) -> bool {
+    matches!(o, Ordering::Release | Ordering::AcqRel | Ordering::SeqCst)
+}
+
+/// Shared machinery behind every typed wrapper: a real `AtomicU64` (the
+/// fallback path and the mirror of the newest modeled value) plus the lazy
+/// per-execution model state.
+pub(crate) struct Core {
+    real: StdAtomicU64,
+    model: Mutex<Option<VarState>>,
+}
+
+impl Core {
+    pub(crate) const fn new(v: u64) -> Self {
+        Self { real: StdAtomicU64::new(v), model: Mutex::new(None) }
+    }
+
+    /// Newest value without scheduling (Debug formatting).
+    pub(crate) fn peek(&self) -> u64 {
+        self.real.load(Ordering::SeqCst)
+    }
+
+    fn var<'a>(slot: &'a mut Option<VarState>, exec_id: u64, cur: u64) -> &'a mut VarState {
+        let stale = slot.as_ref().map(|s| s.exec_id) != Some(exec_id);
+        if stale {
+            *slot = Some(VarState::fresh(exec_id, cur));
+        }
+        slot.as_mut().expect("var state just ensured")
+    }
+
+    pub(crate) fn load(&self, order: Ordering) -> u64 {
+        let Some((ex, tid)) = exec::current() else {
+            return self.real.load(order);
+        };
+        if std::thread::panicking() {
+            return self.real.load(Ordering::SeqCst);
+        }
+        exec::reschedule(&ex, tid, false);
+        let mut g = ex.lock();
+        let mut vg = self.model.lock().unwrap_or_else(|e| e.into_inner());
+        let st = Self::var(&mut vg, g.id, self.real.load(Ordering::SeqCst));
+        let n = st.stores.len();
+        let hb_floor = {
+            let my = g.clock_of(tid);
+            (0..n).rev().find(|&i| st.stores[i].clock.le(my)).unwrap_or(0)
+        };
+        let lo = hb_floor.max(st.floor_of(tid)).max(n.saturating_sub(MAX_HIST));
+        let choice = g.choose(n - lo); // choice 0 = the newest store
+        let idx = n - 1 - choice;
+        // Bounded staleness: each stale store is observable once per
+        // thread, so spinning readers always progress toward the newest
+        // value and the decision tree stays finite.
+        st.note_seen(tid, if idx + 1 < n { idx + 1 } else { idx });
+        if acquires(order) {
+            let sync = st.stores[idx].sync.clone();
+            g.clock_of_mut(tid).join(&sync);
+        }
+        st.stores[idx].val
+    }
+
+    pub(crate) fn store(&self, val: u64, order: Ordering) {
+        let Some((ex, tid)) = exec::current() else {
+            self.real.store(val, order);
+            return;
+        };
+        if std::thread::panicking() {
+            self.real.store(val, Ordering::SeqCst);
+            return;
+        }
+        exec::reschedule(&ex, tid, false);
+        let mut g = ex.lock();
+        let mut vg = self.model.lock().unwrap_or_else(|e| e.into_inner());
+        let st = Self::var(&mut vg, g.id, self.real.load(Ordering::SeqCst));
+        let clock = g.clock_of(tid).clone();
+        // A plain store starts a fresh release sequence (or none at all).
+        let sync = if releases(order) { clock.clone() } else { VClock::new() };
+        st.stores.push(StoreEv { val, clock, sync });
+        let newest = st.stores.len() - 1;
+        st.note_seen(tid, newest);
+        self.real.store(val, Ordering::SeqCst);
+    }
+
+    pub(crate) fn rmw(&self, order: Ordering, f: impl Fn(u64) -> u64) -> u64 {
+        let Some((ex, tid)) = exec::current() else {
+            // Fallback: a CAS loop is observationally identical to the
+            // native read-modify-write for these pure operator closures.
+            let mut cur = self.real.load(Ordering::Relaxed);
+            loop {
+                match self.real.compare_exchange_weak(cur, f(cur), order, Ordering::Relaxed) {
+                    Ok(prev) => return prev,
+                    Err(actual) => cur = actual,
+                }
+            }
+        };
+        if std::thread::panicking() {
+            let mut cur = self.real.load(Ordering::SeqCst);
+            loop {
+                match self.real.compare_exchange_weak(
+                    cur,
+                    f(cur),
+                    Ordering::SeqCst,
+                    Ordering::SeqCst,
+                ) {
+                    Ok(prev) => return prev,
+                    Err(actual) => cur = actual,
+                }
+            }
+        }
+        exec::reschedule(&ex, tid, false);
+        let mut g = ex.lock();
+        let mut vg = self.model.lock().unwrap_or_else(|e| e.into_inner());
+        let st = Self::var(&mut vg, g.id, self.real.load(Ordering::SeqCst));
+        let n = st.stores.len();
+        let old = st.stores[n - 1].val; // RMWs are atomic: newest, always
+        let prev_sync = st.stores[n - 1].sync.clone();
+        if acquires(order) {
+            g.clock_of_mut(tid).join(&prev_sync);
+        }
+        let newv = f(old);
+        let clock = g.clock_of(tid).clone();
+        // An RMW extends the release sequence it read from.
+        let mut sync = prev_sync;
+        if releases(order) {
+            sync.join(&clock);
+        }
+        st.stores.push(StoreEv { val: newv, clock, sync });
+        st.note_seen(tid, n);
+        self.real.store(newv, Ordering::SeqCst);
+        old
+    }
+
+    pub(crate) fn cas(
+        &self,
+        current: u64,
+        new: u64,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<u64, u64> {
+        let Some((ex, tid)) = exec::current() else {
+            return self.real.compare_exchange(current, new, success, failure);
+        };
+        if std::thread::panicking() {
+            return self.real.compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst);
+        }
+        exec::reschedule(&ex, tid, false);
+        let mut g = ex.lock();
+        let mut vg = self.model.lock().unwrap_or_else(|e| e.into_inner());
+        let st = Self::var(&mut vg, g.id, self.real.load(Ordering::SeqCst));
+        let n = st.stores.len();
+        let old = st.stores[n - 1].val;
+        if old == current {
+            let prev_sync = st.stores[n - 1].sync.clone();
+            if acquires(success) {
+                g.clock_of_mut(tid).join(&prev_sync);
+            }
+            let clock = g.clock_of(tid).clone();
+            let mut sync = prev_sync;
+            if releases(success) {
+                sync.join(&clock);
+            }
+            st.stores.push(StoreEv { val: new, clock, sync });
+            st.note_seen(tid, n);
+            self.real.store(new, Ordering::SeqCst);
+            Ok(old)
+        } else {
+            // A failed CAS is a load of the newest value.
+            if acquires(failure) {
+                let sync = st.stores[n - 1].sync.clone();
+                g.clock_of_mut(tid).join(&sync);
+            }
+            st.note_seen(tid, n - 1);
+            Err(old)
+        }
+    }
+}
+
+macro_rules! int_atomic {
+    ($name:ident, $ty:ty) => {
+        #[doc = concat!(
+            "Model-checked drop-in for `std::sync::atomic::",
+            stringify!($name),
+            "`: schedule point + modification-order semantics inside \
+             [`crate::check`], the real atomic outside."
+        )]
+        pub struct $name(Core);
+
+        impl $name {
+            /// A new atomic holding `v`.
+            pub const fn new(v: $ty) -> Self {
+                Self(Core::new(v as u64))
+            }
+
+            /// Atomic load with `order` (stale observations possible for
+            /// non-acquire loads inside the model).
+            pub fn load(&self, order: Ordering) -> $ty {
+                self.0.load(order) as $ty
+            }
+
+            /// Atomic store with `order`.
+            pub fn store(&self, val: $ty, order: Ordering) {
+                self.0.store(val as u64, order)
+            }
+
+            /// Atomic exchange; returns the previous value.
+            pub fn swap(&self, val: $ty, order: Ordering) -> $ty {
+                self.0.rmw(order, |_| val as u64) as $ty
+            }
+
+            /// Strong compare-and-swap; `Ok`/`Err` carry the previous value.
+            pub fn compare_exchange(
+                &self,
+                current: $ty,
+                new: $ty,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                self.0
+                    .cas(current as u64, new as u64, success, failure)
+                    .map(|v| v as $ty)
+                    .map_err(|v| v as $ty)
+            }
+
+            /// Weak compare-and-swap (modeled without spurious failure).
+            pub fn compare_exchange_weak(
+                &self,
+                current: $ty,
+                new: $ty,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                self.compare_exchange(current, new, success, failure)
+            }
+
+            /// Atomic wrapping add; returns the previous value.
+            pub fn fetch_add(&self, val: $ty, order: Ordering) -> $ty {
+                self.0.rmw(order, |o| (o as $ty).wrapping_add(val) as u64) as $ty
+            }
+
+            /// Atomic wrapping subtract; returns the previous value.
+            pub fn fetch_sub(&self, val: $ty, order: Ordering) -> $ty {
+                self.0.rmw(order, |o| (o as $ty).wrapping_sub(val) as u64) as $ty
+            }
+
+            /// Atomic bitwise OR; returns the previous value.
+            pub fn fetch_or(&self, val: $ty, order: Ordering) -> $ty {
+                self.0.rmw(order, |o| ((o as $ty) | val) as u64) as $ty
+            }
+
+            /// Atomic bitwise AND; returns the previous value.
+            pub fn fetch_and(&self, val: $ty, order: Ordering) -> $ty {
+                self.0.rmw(order, |o| ((o as $ty) & val) as u64) as $ty
+            }
+
+            /// Atomic maximum; returns the previous value.
+            pub fn fetch_max(&self, val: $ty, order: Ordering) -> $ty {
+                self.0.rmw(order, |o| (o as $ty).max(val) as u64) as $ty
+            }
+
+            /// Atomic minimum; returns the previous value.
+            pub fn fetch_min(&self, val: $ty, order: Ordering) -> $ty {
+                self.0.rmw(order, |o| (o as $ty).min(val) as u64) as $ty
+            }
+        }
+
+        impl Default for $name {
+            fn default() -> Self {
+                Self::new(0)
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                write!(f, concat!(stringify!($name), "({})"), self.0.peek() as $ty)
+            }
+        }
+    };
+}
+
+int_atomic!(AtomicU8, u8);
+int_atomic!(AtomicU32, u32);
+int_atomic!(AtomicU64, u64);
+int_atomic!(AtomicUsize, usize);
+
+/// Model-checked drop-in for `std::sync::atomic::AtomicBool`.
+pub struct AtomicBool(Core);
+
+impl AtomicBool {
+    /// A new atomic holding `v`.
+    pub const fn new(v: bool) -> Self {
+        Self(Core::new(v as u64))
+    }
+
+    /// Atomic load with `order`.
+    pub fn load(&self, order: Ordering) -> bool {
+        self.0.load(order) != 0
+    }
+
+    /// Atomic store with `order`.
+    pub fn store(&self, val: bool, order: Ordering) {
+        self.0.store(val as u64, order)
+    }
+
+    /// Atomic exchange; returns the previous value.
+    pub fn swap(&self, val: bool, order: Ordering) -> bool {
+        self.0.rmw(order, |_| val as u64) != 0
+    }
+
+    /// Strong compare-and-swap; `Ok`/`Err` carry the previous value.
+    pub fn compare_exchange(
+        &self,
+        current: bool,
+        new: bool,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<bool, bool> {
+        self.0
+            .cas(current as u64, new as u64, success, failure)
+            .map(|v| v != 0)
+            .map_err(|v| v != 0)
+    }
+
+    /// Weak compare-and-swap (modeled without spurious failure).
+    pub fn compare_exchange_weak(
+        &self,
+        current: bool,
+        new: bool,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<bool, bool> {
+        self.compare_exchange(current, new, success, failure)
+    }
+
+    /// Atomic logical OR; returns the previous value.
+    pub fn fetch_or(&self, val: bool, order: Ordering) -> bool {
+        self.0.rmw(order, |o| o | (val as u64)) != 0
+    }
+
+    /// Atomic logical AND; returns the previous value.
+    pub fn fetch_and(&self, val: bool, order: Ordering) -> bool {
+        self.0.rmw(order, |o| if val { o } else { 0 }) != 0
+    }
+}
+
+impl Default for AtomicBool {
+    fn default() -> Self {
+        Self::new(false)
+    }
+}
+
+impl std::fmt::Debug for AtomicBool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AtomicBool({})", self.0.peek() != 0)
+    }
+}

@@ -1,0 +1,88 @@
+//! Vector clocks — the happens-before substrate of the checker.
+//!
+//! Every model thread carries a [`VClock`]; every schedule point bumps the
+//! thread's own component. Synchronizing operations (release stores read by
+//! acquire loads, spawn, join) join clocks, so `a.le(&b)` is exactly
+//! "everything thread A had done at snapshot `a` is visible at snapshot
+//! `b`" — the happens-before partial order of the execution.
+
+/// A vector clock over model-thread ids. Missing components read as zero,
+/// so clocks of different lengths compare correctly.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub(crate) struct VClock(Vec<u64>);
+
+impl VClock {
+    /// The zero clock (happens-before everything).
+    pub(crate) fn new() -> Self {
+        Self(Vec::new())
+    }
+
+    /// Advance this thread's own component by one event.
+    pub(crate) fn bump(&mut self, tid: usize) {
+        if self.0.len() <= tid {
+            self.0.resize(tid + 1, 0);
+        }
+        self.0[tid] += 1;
+    }
+
+    /// Pointwise maximum: after `self.join(o)`, everything ordered before
+    /// either input is ordered before `self`.
+    pub(crate) fn join(&mut self, o: &VClock) {
+        if self.0.len() < o.0.len() {
+            self.0.resize(o.0.len(), 0);
+        }
+        for (a, b) in self.0.iter_mut().zip(o.0.iter()) {
+            if *b > *a {
+                *a = *b;
+            }
+        }
+    }
+
+    /// Pointwise `<=`: does everything up to `self` happen before `o`?
+    pub(crate) fn le(&self, o: &VClock) -> bool {
+        self.0
+            .iter()
+            .enumerate()
+            .all(|(i, &v)| v == 0 || o.0.get(i).copied().unwrap_or(0) >= v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_clock_precedes_everything() {
+        let z = VClock::new();
+        let mut c = VClock::new();
+        c.bump(3);
+        assert!(z.le(&c));
+        assert!(z.le(&z));
+        assert!(!c.le(&z));
+    }
+
+    #[test]
+    fn join_is_pointwise_max() {
+        let mut a = VClock::new();
+        a.bump(0);
+        a.bump(0);
+        let mut b = VClock::new();
+        b.bump(1);
+        let mut j = a.clone();
+        j.join(&b);
+        assert!(a.le(&j));
+        assert!(b.le(&j));
+        assert!(!j.le(&a));
+        assert!(!j.le(&b));
+    }
+
+    #[test]
+    fn concurrent_clocks_are_unordered() {
+        let mut a = VClock::new();
+        a.bump(0);
+        let mut b = VClock::new();
+        b.bump(1);
+        assert!(!a.le(&b));
+        assert!(!b.le(&a));
+    }
+}

@@ -1,0 +1,557 @@
+//! The deterministic executor: serialized threads, a replayable decision
+//! log, and DFS exploration with bounded preemptions.
+//!
+//! Exactly one model thread runs at a time; every visible operation (atomic
+//! access, yield, spawn, join) is a *schedule point* where the executor may
+//! hand the single execution token to another thread. Which thread (and,
+//! for relaxed loads, which store a load observes) is a *decision*: the
+//! first execution takes the default at every decision (run-on without
+//! preempting, read the newest store), the decision log is recorded, and
+//! the driver then backtracks depth-first — re-running the closure with the
+//! longest prefix of decisions replayed and the last branchable decision
+//! advanced — until the tree is exhausted or a panic surfaces. Replays are
+//! exact because user closures are deterministic given the decisions, so
+//! two `check` calls over the same closure explore identical schedule
+//! counts.
+//!
+//! Preemption bounding: switching away from a thread that could have kept
+//! running costs one unit of the [`Options::preemption_bound`] budget;
+//! switches forced by a yield, a block, or an exit are free. Bounded search
+//! is the standard Musuvathi–Qadeer result: almost all real concurrency
+//! bugs manifest within two preemptions, while the full tree is
+//! astronomically larger.
+
+use crate::clock::VClock;
+use std::any::Any;
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Panic payload used to unwind model threads out of an aborted execution;
+/// swallowed at each model thread's root, never reported as a failure.
+pub(crate) struct Abort;
+
+/// Tuning knobs for [`check_with`](crate::check_with).
+#[derive(Clone, Copy, Debug)]
+pub struct Options {
+    /// How many times the scheduler may switch away from a runnable thread
+    /// per execution. Two preemptions reach the overwhelming majority of
+    /// real interleaving bugs at a tiny fraction of the full tree.
+    pub preemption_bound: usize,
+    /// Schedule points allowed in one execution before the run is declared
+    /// a livelock and failed.
+    pub max_steps: usize,
+    /// Executions allowed before the exploration is declared too large and
+    /// failed (a guard against unbounded trees, not a sampling knob —
+    /// hitting it means the test must shrink, because coverage below the
+    /// bound is not exhaustive).
+    pub max_executions: usize,
+    /// Maximum live model threads per execution.
+    pub max_threads: usize,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Self { preemption_bound: 2, max_steps: 10_000, max_executions: 200_000, max_threads: 8 }
+    }
+}
+
+/// What an exhausted exploration did, returned by [`check`](crate::check).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Report {
+    /// Number of distinct interleavings executed to completion.
+    pub executions: usize,
+    /// Total decisions taken across all executions (tree size telemetry).
+    pub decisions: usize,
+}
+
+/// One recorded choice: which of `options` branches this execution took.
+#[derive(Clone, Copy, Debug)]
+struct Decision {
+    chosen: u32,
+    options: u32,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+enum Status {
+    Runnable,
+    /// Deprioritized until no other thread can run (spin-loop fairness).
+    Yielded,
+    /// Waiting for the thread with this id to finish.
+    Blocked(usize),
+    Finished,
+}
+
+struct ThreadState {
+    status: Status,
+    clock: VClock,
+    /// Clock at exit, joined into whoever joins this thread.
+    final_clock: Option<VClock>,
+}
+
+pub(crate) struct Inner {
+    /// Distinguishes executions so per-atomic model state from a previous
+    /// run is discarded lazily.
+    pub(crate) id: u64,
+    threads: Vec<ThreadState>,
+    /// The thread currently holding the execution token.
+    cur: usize,
+    /// Decisions replayed from the previous execution's advanced prefix.
+    replay: Vec<usize>,
+    /// Decisions taken so far in this execution (replayed ones included).
+    log: Vec<Decision>,
+    preemptions: usize,
+    steps: usize,
+    live: usize,
+    aborted: bool,
+    failure: Option<Box<dyn Any + Send>>,
+    opts: Options,
+}
+
+pub(crate) struct Execution {
+    mx: Mutex<Inner>,
+    cv: Condvar,
+}
+
+static EXEC_ID: AtomicU64 = AtomicU64::new(1);
+
+impl Execution {
+    fn new(opts: Options, replay: Vec<usize>) -> Self {
+        let mut clock = VClock::new();
+        clock.bump(0);
+        Self {
+            mx: Mutex::new(Inner {
+                id: EXEC_ID.fetch_add(1, Ordering::Relaxed),
+                threads: vec![ThreadState { status: Status::Runnable, clock, final_clock: None }],
+                cur: 0,
+                replay,
+                log: Vec::new(),
+                preemptions: 0,
+                steps: 0,
+                live: 1,
+                aborted: false,
+                failure: None,
+                opts,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn lock(&self) -> MutexGuard<'_, Inner> {
+        // A model thread that panicked (legitimately: that is how the
+        // checker reports counterexamples) poisons this mutex; the state is
+        // still consistent because every mutation completes under the lock.
+        self.mx.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+impl Inner {
+    /// Take the next decision: replayed if still on the recorded prefix,
+    /// default (0) otherwise. Single-option points are not decisions.
+    fn decide(&mut self, options: usize) -> usize {
+        if options <= 1 {
+            return 0;
+        }
+        let idx = self.log.len();
+        let chosen = if idx < self.replay.len() { self.replay[idx] } else { 0 };
+        if chosen >= options {
+            self.fail(format!(
+                "model-lite internal error: nondeterministic replay \
+                 (decision {idx} chose {chosen} of {options} options) — \
+                 the checked closure must be deterministic apart from \
+                 scheduling"
+            ));
+            return 0;
+        }
+        self.log.push(Decision { chosen: chosen as u32, options: options as u32 });
+        chosen
+    }
+
+    /// Record a failure (first one wins) and put the execution into abort
+    /// mode so every thread unwinds at its next schedule point.
+    fn fail(&mut self, msg: String) {
+        if self.failure.is_none() {
+            self.failure = Some(Box::new(msg));
+        }
+        self.aborted = true;
+    }
+
+    /// Runnable threads, current thread first (when eligible) so that
+    /// decision 0 is always "keep running".
+    fn runnable(&self, tid: usize, include_self: bool) -> Vec<usize> {
+        let mut c = Vec::new();
+        if include_self && self.threads[tid].status == Status::Runnable {
+            c.push(tid);
+        }
+        for (i, t) in self.threads.iter().enumerate() {
+            if i != tid && t.status == Status::Runnable {
+                c.push(i);
+            }
+        }
+        c
+    }
+
+    /// Pick the next holder of the execution token. Returns `None` when the
+    /// execution cannot continue (deadlock was recorded as the failure).
+    ///
+    /// `free_switch` means the caller cannot or should not keep the token —
+    /// it yielded, blocked, or finished — so switching costs no preemption
+    /// budget. Otherwise the caller is candidate 0 and switching away from
+    /// it spends one preemption.
+    fn pick_next(&mut self, tid: usize, free_switch: bool) -> Option<usize> {
+        let mut cands = self.runnable(tid, !free_switch);
+        if cands.is_empty() {
+            // Everyone left has yielded: promote the spinners (including a
+            // caller that just yielded — with nobody else to run, it must
+            // continue), else a spin loop would look like deadlock.
+            let mut promoted = false;
+            for t in self.threads.iter_mut() {
+                if t.status == Status::Yielded {
+                    t.status = Status::Runnable;
+                    promoted = true;
+                }
+            }
+            if promoted {
+                cands = self.runnable(tid, true);
+            }
+        }
+        if cands.is_empty() {
+            if self.live > 0 {
+                let blocked: Vec<usize> = self
+                    .threads
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| matches!(t.status, Status::Blocked(_)))
+                    .map(|(i, _)| i)
+                    .collect();
+                self.fail(format!(
+                    "model-lite: deadlock — every live thread is blocked \
+                     (blocked threads: {blocked:?})"
+                ));
+            }
+            return None;
+        }
+        let preemptible = !free_switch && cands[0] == tid && cands.len() > 1;
+        let options = if preemptible && self.preemptions >= self.opts.preemption_bound {
+            1 // budget spent: the current thread is forced to continue
+        } else {
+            cands.len()
+        };
+        let choice = self.decide(options);
+        if preemptible && choice != 0 {
+            self.preemptions += 1;
+        }
+        Some(cands[choice])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local execution context
+// ---------------------------------------------------------------------------
+
+struct Ctx {
+    ex: Arc<Execution>,
+    tid: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = RefCell::new(None);
+}
+
+/// The executing model context of the calling thread, if any. `None` means
+/// the caller runs outside `check` and shim types fall back to real
+/// `std::sync::atomic` behaviour.
+pub(crate) fn current() -> Option<(Arc<Execution>, usize)> {
+    CTX.with(|c| c.borrow().as_ref().map(|x| (Arc::clone(&x.ex), x.tid)))
+}
+
+fn set_ctx(ex: Arc<Execution>, tid: usize) {
+    CTX.with(|c| *c.borrow_mut() = Some(Ctx { ex, tid }));
+}
+
+fn clear_ctx() {
+    CTX.with(|c| *c.borrow_mut() = None);
+}
+
+/// Snapshot of the calling model thread's vector clock (empty outside a
+/// model execution). See [`crate::hb`].
+pub(crate) fn clock_snapshot() -> VClock {
+    match current() {
+        None => VClock::new(),
+        Some((ex, tid)) => {
+            let g = ex.lock();
+            g.threads[tid].clock.clone()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Schedule points
+// ---------------------------------------------------------------------------
+
+/// A schedule point for thread `tid`: possibly hand the token to another
+/// thread, blocking until it comes back. `yielding` deprioritizes the
+/// caller (spin-loop backoff); the switch away is then free of preemption
+/// cost.
+///
+/// Never schedules while the calling thread is unwinding: drop guards that
+/// touch atomics during a panic must run to completion, and a nested panic
+/// would abort the process.
+pub(crate) fn reschedule(ex: &Arc<Execution>, tid: usize, yielding: bool) {
+    if std::thread::panicking() {
+        return;
+    }
+    let mut g = ex.lock();
+    if g.aborted {
+        drop(g);
+        std::panic::panic_any(Abort);
+    }
+    g.steps += 1;
+    if g.steps > g.opts.max_steps {
+        let max = g.opts.max_steps;
+        g.fail(format!(
+            "model-lite: execution exceeded {max} schedule points — \
+             likely a livelock (a spin loop that cannot observe progress), \
+             or raise Options::max_steps"
+        ));
+        ex.cv.notify_all();
+        drop(g);
+        std::panic::panic_any(Abort);
+    }
+    g.threads[tid].clock.bump(tid);
+    if yielding {
+        g.threads[tid].status = Status::Yielded;
+    }
+    let next = match g.pick_next(tid, yielding) {
+        Some(n) => n,
+        None => {
+            // Deadlock was recorded; unwind this thread too.
+            ex.cv.notify_all();
+            drop(g);
+            std::panic::panic_any(Abort);
+        }
+    };
+    g.cur = next;
+    if next != tid {
+        ex.cv.notify_all();
+        while g.cur != tid && !g.aborted {
+            g = ex.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        if g.aborted {
+            drop(g);
+            std::panic::panic_any(Abort);
+        }
+    }
+    g.threads[tid].status = Status::Runnable;
+}
+
+/// Register a freshly spawned model thread; returns its tid. The child's
+/// clock starts at the parent's (the spawn edge of happens-before).
+pub(crate) fn register_thread(ex: &Arc<Execution>, parent: usize) -> usize {
+    let mut g = ex.lock();
+    if g.threads.len() >= g.opts.max_threads {
+        let max = g.opts.max_threads;
+        g.fail(format!("model-lite: more than {max} model threads (Options::max_threads)"));
+        ex.cv.notify_all();
+        drop(g);
+        std::panic::panic_any(Abort);
+    }
+    let child = g.threads.len();
+    let mut clock = g.threads[parent].clock.clone();
+    clock.bump(child);
+    g.threads.push(ThreadState { status: Status::Runnable, clock, final_clock: None });
+    g.live += 1;
+    child
+}
+
+/// Body run by every model thread's real OS thread: wait for the first
+/// turn, run the closure under `catch_unwind`, then retire.
+pub(crate) fn run_thread<T>(
+    ex: Arc<Execution>,
+    tid: usize,
+    f: impl FnOnce() -> T,
+) -> Option<T> {
+    set_ctx(Arc::clone(&ex), tid);
+    {
+        let mut g = ex.lock();
+        while g.cur != tid && !g.aborted {
+            g = ex.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        if g.aborted {
+            drop(g);
+            finish_thread(&ex, tid, None);
+            clear_ctx();
+            return None;
+        }
+    }
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(v) => {
+            finish_thread(&ex, tid, None);
+            clear_ctx();
+            Some(v)
+        }
+        Err(payload) => {
+            let benign = payload.is::<Abort>();
+            finish_thread(&ex, tid, if benign { None } else { Some(payload) });
+            clear_ctx();
+            None
+        }
+    }
+}
+
+/// Retire thread `tid`: record its final clock, wake joiners, report its
+/// panic (if any) as the execution's failure, and pass the token on.
+fn finish_thread(ex: &Arc<Execution>, tid: usize, panic_payload: Option<Box<dyn Any + Send>>) {
+    let mut g = ex.lock();
+    g.threads[tid].status = Status::Finished;
+    let final_clock = g.threads[tid].clock.clone();
+    g.threads[tid].final_clock = Some(final_clock);
+    g.live -= 1;
+    for t in g.threads.iter_mut() {
+        if t.status == Status::Blocked(tid) {
+            t.status = Status::Runnable;
+        }
+    }
+    if let Some(p) = panic_payload {
+        if g.failure.is_none() {
+            g.failure = Some(p);
+        }
+        g.aborted = true;
+    }
+    if g.live > 0 && !g.aborted {
+        if let Some(next) = g.pick_next(tid, true) {
+            g.cur = next;
+        }
+    }
+    ex.cv.notify_all();
+}
+
+/// Block the calling thread until model thread `child` finishes, then join
+/// the child's final clock into the caller (the join edge). Must run on a
+/// model thread.
+pub(crate) fn join_thread(ex: &Arc<Execution>, tid: usize, child: usize) {
+    reschedule(ex, tid, false);
+    let mut g = ex.lock();
+    if g.threads[child].status != Status::Finished {
+        g.threads[tid].status = Status::Blocked(child);
+        let next = match g.pick_next(tid, true) {
+            Some(n) => n,
+            None => {
+                ex.cv.notify_all();
+                drop(g);
+                std::panic::panic_any(Abort);
+            }
+        };
+        g.cur = next;
+        ex.cv.notify_all();
+        while g.cur != tid && !g.aborted {
+            g = ex.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        if g.aborted {
+            drop(g);
+            std::panic::panic_any(Abort);
+        }
+        g.threads[tid].status = Status::Runnable;
+    }
+    let child_clock =
+        g.threads[child].final_clock.clone().expect("finished thread has a final clock");
+    g.threads[tid].clock.join(&child_clock);
+}
+
+// Accessors used by the atomics module (kept here so Inner's fields stay
+// private to the executor).
+impl Inner {
+    pub(crate) fn clock_of(&self, tid: usize) -> &VClock {
+        &self.threads[tid].clock
+    }
+
+    pub(crate) fn clock_of_mut(&mut self, tid: usize) -> &mut VClock {
+        &mut self.threads[tid].clock
+    }
+
+    pub(crate) fn choose(&mut self, options: usize) -> usize {
+        self.decide(options)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The check driver
+// ---------------------------------------------------------------------------
+
+/// Exhaustively explore `f` under every interleaving reachable within the
+/// preemption bound, with default [`Options`]. Panics (forwarding the
+/// original panic) on the first failing execution.
+pub fn check(f: impl Fn() + Send + Sync + 'static) -> Report {
+    check_with(Options::default(), f)
+}
+
+/// [`check`] with explicit [`Options`].
+///
+/// The closure runs once per explored interleaving and must be
+/// deterministic apart from scheduling: no wall-clock branching, no
+/// randomness not derived from the schedule. On a failing interleaving the
+/// original panic is re-raised after an `eprintln` describing how deep the
+/// exploration got.
+pub fn check_with(opts: Options, f: impl Fn() + Send + Sync + 'static) -> Report {
+    let f = Arc::new(f);
+    let mut path: Vec<Decision> = Vec::new();
+    let mut executions = 0usize;
+    let mut decisions = 0usize;
+    loop {
+        executions += 1;
+        if executions > opts.max_executions {
+            panic!(
+                "model-lite: exploration exceeded max_executions={} — the \
+                 interleaving tree is larger than the test budget; shrink \
+                 the closure or raise Options::max_executions",
+                opts.max_executions
+            );
+        }
+        let replay: Vec<usize> = path.iter().map(|d| d.chosen as usize).collect();
+        let ex = Arc::new(Execution::new(opts, replay));
+        let root = {
+            let (fx, ex2) = (Arc::clone(&f), Arc::clone(&ex));
+            std::thread::Builder::new()
+                .name("model-0".into())
+                .spawn(move || {
+                    run_thread(ex2, 0, move || fx());
+                })
+                .expect("spawn model root thread")
+        };
+        {
+            let mut g = ex.lock();
+            while g.live > 0 {
+                g = ex.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        let _ = root.join();
+        let mut g = ex.lock();
+        if let Some(p) = g.failure.take() {
+            eprintln!(
+                "model-lite: counterexample on execution {executions} \
+                 ({} decisions deep); replay is deterministic",
+                g.log.len()
+            );
+            drop(g);
+            std::panic::resume_unwind(p);
+        }
+        decisions += g.log.len();
+        path = std::mem::take(&mut g.log);
+        drop(g);
+        // Depth-first advance: bump the deepest decision with an untaken
+        // branch, drop everything below it.
+        let mut advanced = false;
+        while let Some(d) = path.last_mut() {
+            if d.chosen + 1 < d.options {
+                d.chosen += 1;
+                advanced = true;
+                break;
+            }
+            path.pop();
+        }
+        if !advanced {
+            return Report { executions, decisions };
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Model-checked drop-in for `std::hint::spin_loop`.
+
+/// Spin-loop hint. Inside a [`crate::check`] execution this is identical to
+/// [`crate::thread::yield_now`]: a busy-wait iteration must be a yielding
+/// schedule point, or the deterministic scheduler would re-run the spinner
+/// forever instead of letting the writer it is waiting on make progress.
+pub fn spin_loop() {
+    match crate::exec::current() {
+        None => std::hint::spin_loop(),
+        Some((ex, tid)) => crate::exec::reschedule(&ex, tid, true),
+    }
+}

@@ -1,0 +1,262 @@
+//! # model-lite — vendored deterministic concurrency model checker
+//!
+//! A loom-style checker, small enough to vendor (no dependencies, offline
+//! build image), for the non-blocking synchronization layer in
+//! `rust/src/sync/`. [`check`] runs a closure under **exhaustive DFS over
+//! thread interleavings with bounded preemptions**; the closure uses the
+//! shim types in [`atomic`], [`thread`], and [`hint`] instead of their
+//! `std` counterparts (normal builds get `std` back through the
+//! `sync::shim` facade in the main crate, so production code is
+//! unchanged).
+//!
+//! What makes this stronger than a stress test:
+//!
+//! * **Determinism.** Every scheduling (and stale-read) choice is a logged
+//!   decision; the DFS replays prefixes exactly, so two [`check`] calls
+//!   over the same closure explore the same tree and report the same
+//!   [`Report`]. A failure prints a counterexample depth and re-raises the
+//!   original panic.
+//! * **Relaxed-memory modeling.** `Relaxed` loads may observe stale stores
+//!   (bounded-staleness approximation of the C11 model, see [`atomic`]),
+//!   so ordering bugs that only manifest on weak hardware — or only under
+//!   compiler reordering — become reachable interleavings on any host.
+//! * **Happens-before tracking.** Threads carry vector clocks joined by
+//!   release/acquire pairs, spawn, and join; [`hb`] exposes snapshots so
+//!   tests can assert that a publication protocol actually orders what it
+//!   claims to order, not merely that the observed values were right.
+//!
+//! Scope bounds (deliberate, documented in [`atomic`] and [`exec`]): at
+//! most [`Options::preemption_bound`] preemptive switches per execution
+//! (Musuvathi–Qadeer), a bounded stale-store window, `SeqCst` modeled as
+//! `AcqRel`, and no spurious `compare_exchange_weak` failure. Within those
+//! bounds the exploration is exhaustive — "no counterexample" means *no
+//! reachable interleaving violates the invariant*, not "we didn't happen
+//! to see one".
+
+#![deny(unsafe_code)]
+#![deny(unsafe_op_in_unsafe_fn)]
+#![warn(missing_docs)]
+
+pub mod atomic;
+mod clock;
+mod exec;
+pub mod hint;
+pub mod thread;
+
+pub use exec::{check, check_with, Options, Report};
+
+pub mod hb {
+    //! Happens-before snapshots for model tests.
+    //!
+    //! Capture [`now`] at the point that *should* be ordered (e.g. right
+    //! after writing payload data), carry the snapshot through the join,
+    //! and assert [`Clock::happens_before`] a snapshot taken where the
+    //! ordering is relied upon. If a `Release`/`Acquire` pair is demoted
+    //! to `Relaxed`, the sync clock stops flowing and the assertion fails
+    //! in every interleaving — even ones where the observed *values*
+    //! happened to look right.
+
+    /// An opaque snapshot of the calling model thread's vector clock
+    /// (empty outside a [`crate::check`] execution).
+    #[derive(Clone, Debug)]
+    pub struct Clock(pub(crate) crate::clock::VClock);
+
+    /// Snapshot the calling thread's current clock.
+    pub fn now() -> Clock {
+        Clock(crate::exec::clock_snapshot())
+    }
+
+    impl Clock {
+        /// Is everything up to `self` ordered before `other`?
+        pub fn happens_before(&self, other: &Clock) -> bool {
+            self.0.le(&other.0)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn single_thread_runs_once() {
+        let r = crate::check(|| {
+            let a = AtomicU64::new(1);
+            a.store(2, Ordering::Relaxed);
+            assert_eq!(a.load(Ordering::Relaxed), 2);
+        });
+        assert_eq!(r.executions, 1, "no concurrency, no branching");
+    }
+
+    #[test]
+    fn spawn_join_passes_values_and_clocks() {
+        crate::check(|| {
+            let a = Arc::new(AtomicU64::new(0));
+            let a2 = Arc::clone(&a);
+            let h = crate::thread::spawn(move || {
+                a2.store(7, Ordering::Relaxed);
+                crate::hb::now()
+            });
+            let child_clock = h.join().unwrap();
+            // Join edge: the child's writes happen-before us, so even a
+            // Relaxed load must observe them.
+            assert!(child_clock.happens_before(&crate::hb::now()));
+            assert_eq!(a.load(Ordering::Relaxed), 7);
+        });
+    }
+
+    #[test]
+    fn release_acquire_message_passing_holds() {
+        crate::check(|| {
+            let data = Arc::new(AtomicU64::new(0));
+            let ready = Arc::new(AtomicU64::new(0));
+            let (d, r) = (Arc::clone(&data), Arc::clone(&ready));
+            let h = crate::thread::spawn(move || {
+                d.store(42, Ordering::Relaxed);
+                r.store(1, Ordering::Release);
+            });
+            if ready.load(Ordering::Acquire) == 1 {
+                assert_eq!(data.load(Ordering::Relaxed), 42, "acquire must order the payload");
+            }
+            h.join().unwrap();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "payload")]
+    fn relaxed_message_passing_is_caught() {
+        crate::check(|| {
+            let data = Arc::new(AtomicU64::new(0));
+            let ready = Arc::new(AtomicU64::new(0));
+            let (d, r) = (Arc::clone(&data), Arc::clone(&ready));
+            let h = crate::thread::spawn(move || {
+                d.store(42, Ordering::Relaxed);
+                r.store(1, Ordering::Relaxed); // bug: demoted Release
+            });
+            if ready.load(Ordering::Relaxed) == 1 {
+                // Some interleaving observes the flag but a stale payload.
+                assert_eq!(data.load(Ordering::Relaxed), 42, "payload");
+            }
+            h.join().unwrap();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "mark lost")]
+    fn ttas_lost_update_is_caught() {
+        // The PR 5 `DirtyFlags::set` bug in miniature: a relaxed
+        // test-and-test-and-set pre-load can observe a *stale* set bit
+        // from before a concurrent drain's claim, skip the fetch_or, and
+        // lose the mark. The unconditional fetch_or fix passes this
+        // closure; the TTAS version must not.
+        crate::check(|| {
+            let data = Arc::new(AtomicU64::new(0));
+            let flag = Arc::new(AtomicU64::new(1)); // stale mark, prior round
+            let (d, f) = (Arc::clone(&data), Arc::clone(&flag));
+            let drainer = crate::thread::spawn(move || {
+                if f.fetch_and(0, Ordering::AcqRel) & 1 != 0 {
+                    d.load(Ordering::Acquire)
+                } else {
+                    0
+                }
+            });
+            data.store(42, Ordering::Release);
+            if flag.load(Ordering::Relaxed) & 1 == 0 {
+                flag.fetch_or(1, Ordering::AcqRel);
+            }
+            let seen_early = drainer.join().unwrap();
+            let seen_late = if flag.load(Ordering::Acquire) & 1 != 0 {
+                data.load(Ordering::Acquire)
+            } else {
+                0
+            };
+            assert!(seen_early == 42 || seen_late == 42, "mark lost");
+        });
+    }
+
+    #[test]
+    fn unconditional_fetch_or_mark_never_lost() {
+        // Same protocol with the fix: fetch_or unconditionally.
+        crate::check(|| {
+            let data = Arc::new(AtomicU64::new(0));
+            let flag = Arc::new(AtomicU64::new(1));
+            let (d, f) = (Arc::clone(&data), Arc::clone(&flag));
+            let drainer = crate::thread::spawn(move || {
+                if f.fetch_and(0, Ordering::AcqRel) & 1 != 0 {
+                    d.load(Ordering::Acquire)
+                } else {
+                    0
+                }
+            });
+            data.store(42, Ordering::Release);
+            flag.fetch_or(1, Ordering::AcqRel);
+            let seen_early = drainer.join().unwrap();
+            let seen_late = if flag.load(Ordering::Acquire) & 1 != 0 {
+                data.load(Ordering::Acquire)
+            } else {
+                0
+            };
+            assert!(seen_early == 42 || seen_late == 42);
+        });
+    }
+
+    #[test]
+    fn spin_wait_terminates() {
+        // consume-staleness + yield promotion: a spinner must observe the
+        // writer's store in finitely many schedule points.
+        crate::check(|| {
+            let ready = Arc::new(AtomicU64::new(0));
+            let r = Arc::clone(&ready);
+            let h = crate::thread::spawn(move || r.store(1, Ordering::Release));
+            while ready.load(Ordering::Acquire) == 0 {
+                crate::hint::spin_loop();
+            }
+            h.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn exploration_is_deterministic() {
+        fn body() {
+            let a = Arc::new(AtomicU64::new(0));
+            let (a1, a2) = (Arc::clone(&a), Arc::clone(&a));
+            let h1 = crate::thread::spawn(move || a1.fetch_add(1, Ordering::AcqRel));
+            let h2 = crate::thread::spawn(move || a2.fetch_add(1, Ordering::AcqRel));
+            h1.join().unwrap();
+            h2.join().unwrap();
+            assert_eq!(a.load(Ordering::Acquire), 2);
+        }
+        let r1 = crate::check(body);
+        let r2 = crate::check(body);
+        assert_eq!(r1, r2, "same closure, same tree");
+        assert!(r1.executions > 1, "two racing increments must branch");
+    }
+
+    #[test]
+    fn cas_contention_is_exclusive() {
+        crate::check(|| {
+            let a = Arc::new(AtomicU64::new(0));
+            let (a1, a2) = (Arc::clone(&a), Arc::clone(&a));
+            let h1 = crate::thread::spawn(move || {
+                a1.compare_exchange(0, 1, Ordering::AcqRel, Ordering::Acquire).is_ok()
+            });
+            let h2 = crate::thread::spawn(move || {
+                a2.compare_exchange(0, 2, Ordering::AcqRel, Ordering::Acquire).is_ok()
+            });
+            let (w1, w2) = (h1.join().unwrap(), h2.join().unwrap());
+            assert!(w1 ^ w2, "exactly one CAS wins");
+        });
+    }
+
+    #[test]
+    fn fallback_outside_check_uses_real_atomics() {
+        let a = AtomicU64::new(5);
+        assert_eq!(a.fetch_add(3, Ordering::SeqCst), 5);
+        assert_eq!(a.load(Ordering::SeqCst), 8);
+        assert_eq!(a.compare_exchange(8, 9, Ordering::SeqCst, Ordering::SeqCst), Ok(8));
+        let h = crate::thread::spawn(|| 11u32);
+        assert_eq!(h.join().unwrap(), 11);
+        crate::hint::spin_loop();
+    }
+}

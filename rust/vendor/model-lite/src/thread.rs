@@ -1,0 +1,79 @@
+//! Model-checked drop-ins for `std::thread::spawn` / `yield_now` /
+//! `JoinHandle`.
+//!
+//! Inside a [`crate::check`] execution, `spawn` registers a model thread
+//! (its clock seeded from the parent: the spawn happens-before edge) backed
+//! by a real OS thread that only ever runs while holding the execution
+//! token, and `join` blocks the caller in the model scheduler and joins the
+//! child's final clock (the join edge). Outside an execution both are thin
+//! wrappers over `std::thread`.
+
+use crate::exec;
+use std::sync::Arc;
+
+/// Handle returned by [`spawn`]; join semantics match `std::thread`.
+pub struct JoinHandle<T>(Repr<T>);
+
+enum Repr<T> {
+    Std(std::thread::JoinHandle<T>),
+    Model { real: std::thread::JoinHandle<Option<T>>, child: usize, ex: Arc<exec::Execution> },
+}
+
+impl<T> JoinHandle<T> {
+    /// Wait for the thread to finish and return its result, panicking if
+    /// the thread panicked (mirroring the common `handle.join().unwrap()`
+    /// test idiom; the model checker has already recorded the real payload
+    /// as the execution's failure).
+    pub fn join(self) -> std::thread::Result<T> {
+        match self.0 {
+            Repr::Std(h) => h.join(),
+            Repr::Model { real, child, ex } => {
+                let (_, tid) = exec::current().expect(
+                    "model-lite: JoinHandle::join called outside the model \
+                     execution that spawned the thread",
+                );
+                exec::join_thread(&ex, tid, child);
+                match real.join() {
+                    Ok(Some(v)) => Ok(v),
+                    // The child panicked (or unwound out of an aborted
+                    // execution); surface it as a join error exactly like a
+                    // real panicked thread.
+                    Ok(None) => Err(Box::new(
+                        "model thread panicked; see the recorded counterexample".to_string(),
+                    )),
+                    Err(p) => Err(p),
+                }
+            }
+        }
+    }
+}
+
+/// Spawn a thread. Model-scheduled inside [`crate::check`], a real
+/// `std::thread::spawn` outside.
+pub fn spawn<T: Send + 'static>(f: impl FnOnce() -> T + Send + 'static) -> JoinHandle<T> {
+    match exec::current() {
+        None => JoinHandle(Repr::Std(std::thread::spawn(f))),
+        Some((ex, tid)) => {
+            // The spawn itself is a visible event: give the scheduler a
+            // chance to interleave before the child exists.
+            exec::reschedule(&ex, tid, false);
+            let child = exec::register_thread(&ex, tid);
+            let ex2 = Arc::clone(&ex);
+            let real = std::thread::Builder::new()
+                .name(format!("model-{child}"))
+                .spawn(move || exec::run_thread(ex2, child, f))
+                .expect("spawn model thread");
+            JoinHandle(Repr::Model { real, child, ex })
+        }
+    }
+}
+
+/// Cooperatively yield. In the model this deprioritizes the caller until no
+/// other thread can run — the deterministic analogue of spin-loop backoff —
+/// and the forced switch costs no preemption budget.
+pub fn yield_now() {
+    match exec::current() {
+        None => std::thread::yield_now(),
+        Some((ex, tid)) => exec::reschedule(&ex, tid, true),
+    }
+}

@@ -12,6 +12,8 @@
 //!   host should report. With the genuine crate substituted in, nothing in
 //!   the callers changes.
 
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::fmt;
 use std::path::Path;
 

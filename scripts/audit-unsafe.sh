@@ -1,0 +1,93 @@
+#!/usr/bin/env bash
+# Concurrency-hygiene audit — the static half of the model-checking PR
+# (docs/concurrency.md §Static audit). Three rules:
+#
+#   1. `unsafe` without `// SAFETY:` within 8 lines   (rust/src + rust/vendor)
+#   2. `Ordering::Relaxed` outside rust/src/sync/ without a `// relaxed:`
+#      justification within 3 lines                   (rust/src)
+#   3. `std::sync::atomic` named anywhere but sync/shim.rs — atomics must
+#      flow through the shim so `--features pallas-model` can interpose
+#      the model checker                              (rust/src)
+#
+# When a cargo toolchain is present the audit runs `pagerank-lint`
+# (rust/tools/lint), the canonical implementation with unit tests; without
+# one it falls back to the awk implementation below — same rules, so the
+# gate also works on toolchain-less hosts. AUDIT_NO_CARGO=1 forces the
+# fallback (used to test the awk path on CI).
+#
+# Exit: 0 clean, 1 with file:line diagnostics on stderr otherwise.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if command -v cargo >/dev/null 2>&1 && [ "${AUDIT_NO_CARGO:-0}" != "1" ]; then
+    exec cargo run -q -p pagerank-lint -- .
+fi
+
+status=0
+
+# Rule 1: every unsafe needs a SAFETY comment nearby.
+# shellcheck disable=SC2044  # tree has no exotic filenames
+for f in $(find rust/src rust/vendor -name '*.rs' -path '*src*' | sort); do
+    awk -v file="$f" '
+        { lines[FNR] = $0 }
+        {
+            t = $0; sub(/^[ \t]+/, "", t)
+            if (t ~ /^\/\//) next                      # whole-line comment
+            code = $0; sub(/\/\/.*$/, "", code)        # strip trailing comment
+            if (code !~ /(^|[^A-Za-z0-9_])unsafe([^A-Za-z0-9_]|$)/) next
+            if ($0 ~ /unsafe_op_in_unsafe_fn|unsafe_code|forbid\(unsafe/) next
+            ok = 0
+            for (i = FNR - 8; i <= FNR; i++)
+                if (i >= 1 && lines[i] ~ /SAFETY:/) ok = 1
+            if (!ok) {
+                printf "%s:%d: `unsafe` without a `// SAFETY:` comment within 8 lines\n", file, FNR > "/dev/stderr"
+                bad = 1
+            }
+        }
+        END { exit bad }
+    ' "$f" || status=1
+done
+
+# Rule 2: Relaxed outside the sync/ substrate needs a written excuse.
+for f in $(find rust/src -name '*.rs' -not -path 'rust/src/sync/*' | sort); do
+    awk -v file="$f" '
+        { lines[FNR] = $0 }
+        {
+            t = $0; sub(/^[ \t]+/, "", t)
+            if (t ~ /^\/\//) next
+            code = $0; sub(/\/\/.*$/, "", code)
+            if (code !~ /Ordering::Relaxed/) next
+            ok = 0
+            for (i = FNR - 3; i <= FNR; i++)
+                if (i >= 1 && lines[i] ~ /\/\/ relaxed:/) ok = 1
+            if (!ok) {
+                printf "%s:%d: Ordering::Relaxed outside sync/ without a `// relaxed: <why>` comment within 3 lines\n", file, FNR > "/dev/stderr"
+                bad = 1
+            }
+        }
+        END { exit bad }
+    ' "$f" || status=1
+done
+
+# Rule 3: the atomic-import funnel.
+for f in $(find rust/src -name '*.rs' ! -path 'rust/src/sync/shim.rs' | sort); do
+    awk -v file="$f" '
+        {
+            t = $0; sub(/^[ \t]+/, "", t)
+            if (t ~ /^\/\//) next
+            code = $0; sub(/\/\/.*$/, "", code)
+            if (code !~ /std::sync::atomic/) next
+            printf "%s:%d: direct `std::sync::atomic` use — route atomics through `crate::sync::shim`\n", file, FNR > "/dev/stderr"
+            bad = 1
+        }
+        END { exit bad }
+    ' "$f" || status=1
+done
+
+if [ "$status" -eq 0 ]; then
+    echo "audit-unsafe: clean"
+else
+    echo "audit-unsafe: violations found (rules in docs/concurrency.md)" >&2
+fi
+exit "$status"
